@@ -1,0 +1,27 @@
+"""Shared benchmark plumbing: CSV rows in the harness format
+``name,us_per_call,derived``."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(name: str, fn: Callable[[], str], repeats: int = 1) -> None:
+    t0 = time.perf_counter()
+    derived = ""
+    for _ in range(repeats):
+        derived = fn()
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    emit(name, us, derived)
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

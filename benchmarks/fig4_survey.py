@@ -1,0 +1,33 @@
+"""Fig. 4 — AIMC/DIMC survey scatter: peak TOP/s/W vs TOP/s/mm^2 as
+reported by the publications (the paper plots reported values; the
+model validation against them is Fig. 5 / fig5_validation.py)."""
+
+from __future__ import annotations
+
+from repro.core import designs
+
+from .common import timed
+
+
+def run() -> None:
+    def table() -> str:
+        print(f"# {'design':26s} {'type':5s} {'node':>5s} {'bits':>6s} "
+              f"{'TOPS/W':>8s} {'TOPS/mm2':>9s}  flags")
+        best = {"aimc": None, "dimc": None}
+        for d in designs.ALL_DESIGNS:
+            m = d.macro
+            flags = ("in-text" if d.in_text else
+                     ("approx" if d.approx else ""))
+            print(f"# {d.name:26s} {m.imc_type.value:5s} {m.tech_nm:4.0f}n "
+                  f"{m.bi}b/{m.bw}b "
+                  f"{d.reported_tops_w:8.1f} "
+                  f"{d.reported_tops_mm2 if d.reported_tops_mm2 else 0:9.2f}"
+                  f"  {flags}")
+            key = m.imc_type.value
+            if best[key] is None or d.reported_tops_w > best[key][1]:
+                best[key] = (d.name, d.reported_tops_w)
+        return (f"best_aimc={best['aimc'][0]}@{best['aimc'][1]:.0f} "
+                f"best_dimc={best['dimc'][0]}@{best['dimc'][1]:.0f} "
+                f"n={len(designs.ALL_DESIGNS)}")
+
+    timed("fig4_survey", table)

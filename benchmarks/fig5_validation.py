@@ -1,0 +1,26 @@
+"""Fig. 5 — unified-model validation against silicon-reported peak
+efficiencies; strict set = numbers printed in the paper text."""
+
+from __future__ import annotations
+
+from repro.core import validate
+
+from .common import timed
+
+
+def run() -> None:
+    def table() -> str:
+        rows = validate.validate()
+        print(f"# {'design':26s} {'model':>9s} {'reported':>9s} "
+              f"{'mismatch':>9s}  set")
+        for r in rows:
+            tag = "strict" if r.in_text else "landscape"
+            print(f"# {r.name:26s} {r.model_tops_w:9.1f} "
+                  f"{r.reported_tops_w:9.1f} {r.mismatch_pct:+8.1f}%  {tag}")
+        s = validate.summarize([r for r in rows if r.in_text])
+        a = validate.summarize(rows)
+        return (f"strict_median={s['median_abs_mismatch_pct']:.1f}% "
+                f"strict_max={s['max_abs_mismatch_pct']:.1f}% "
+                f"all_median={a['median_abs_mismatch_pct']:.1f}% n={len(rows)}")
+
+    timed("fig5_validation", table)

@@ -1,0 +1,26 @@
+"""Fig. 6 — technology-dependent parameter extraction: the C_inv(node)
+regression and the fitted converter constants k1/k2/k3."""
+
+from __future__ import annotations
+
+from repro.core import tech
+
+from .common import timed
+
+
+def run() -> None:
+    def table() -> str:
+        print("# C_inv regression (DIMC-anchored, paper Sec. IV-E):")
+        for node in (5, 7, 16, 22, 28, 55, 65):
+            print(f"#   {node:3d} nm -> C_inv {tech.c_inv_ff(node):6.3f} fF, "
+                  f"C_gate {tech.c_gate_ff(node):6.3f} fF")
+        print(f"# ADC (Murmann, Eq. 8): k1={tech.K1_ADC_FJ:.0f} fJ, "
+              f"k2={tech.K2_ADC_FJ*1e3:.1f} aJ; "
+              f"e.g. 5b@0.8V = {tech.adc_energy_fj(5, 0.8):.0f} fJ/conv")
+        print(f"# DAC (Eq. 11): k3={tech.K3_DAC_FJ:.0f} fJ/bit; "
+              f"4b@0.8V = {tech.dac_energy_fj(4, 0.8):.0f} fJ/conv")
+        return (f"slope={tech.CINV_SLOPE_FF_PER_NM:.5f}fF/nm "
+                f"offset={tech.CINV_OFFSET_FF:.5f}fF "
+                f"k1={tech.K1_ADC_FJ:.0f} k3={tech.K3_DAC_FJ:.0f}")
+
+    timed("fig6_tech_fit", table)

@@ -1,0 +1,51 @@
+"""Table II + Fig. 7 — tinyMLPerf workloads mapped onto the four
+selected IMC designs via the ZigZag-lite DSE: per-network energy
+breakdown at macro level and data traffic towards outer memory."""
+
+from __future__ import annotations
+
+from repro.core import designs, dse, workloads
+
+from .common import timed
+
+
+def run() -> None:
+    results = {}
+
+    def study() -> str:
+        macros = designs.table2_designs()
+        print(f"# {'network':18s} {'design':24s} {'fJ/MAC':>8s} "
+              f"{'E[uJ]':>8s} {'util':>5s} {'traffic[KB]':>11s} "
+              f" dominant-component")
+        for net_name, fn in workloads.TINYML_NETWORKS.items():
+            layers = fn()
+            best = None
+            for macro in macros:
+                r = dse.map_network(net_name, layers, macro)
+                bd = r.breakdown_fj()
+                dom = max(bd, key=bd.get)
+                traffic_kb = sum(r.traffic_bits().values()) / 8e3
+                print(f"# {net_name:18s} {macro.name:24s} "
+                      f"{r.fj_per_mac:8.1f} {r.total_energy_fj/1e9:8.3f} "
+                      f"{r.mean_utilization:5.2f} {traffic_kb:11.1f}  {dom}")
+                results[(net_name, macro.name)] = r
+                if best is None or r.fj_per_mac < best[1]:
+                    best = (macro.name, r.fj_per_mac)
+            print(f"#   -> best for {net_name}: {best[0]} "
+                  f"({best[1]:.1f} fJ/MAC)")
+        # paper Sec. VI headline claims, checked quantitatively:
+        rn8 = {m.name: results[("resnet8", m.name)] for m in macros}
+        dsc = {m.name: results[("ds_cnn", m.name)] for m in macros}
+        big_aimc = "T2-A-aimc-1152x256"
+        small_many = "T2-D-dimc-48x4x192"
+        claim1 = rn8[big_aimc].fj_per_mac < rn8[small_many].fj_per_mac
+        claim2 = dsc[small_many].fj_per_mac < dsc[big_aimc].fj_per_mac
+        ae = results[("deep_autoencoder", big_aimc)]
+        wr_share = (ae.breakdown_fj()["weight write"]
+                    + ae.breakdown_fj()["mem: weights"]) \
+            / ae.total_energy_fj
+        return (f"large_aimc_wins_resnet8={claim1} "
+                f"small_macros_win_dscnn={claim2} "
+                f"dae_weight_share={wr_share:.2f}")
+
+    timed("fig7_tinyml_casestudy", study)

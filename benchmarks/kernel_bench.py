@@ -1,0 +1,59 @@
+"""Kernel benchmark: Pallas IMC kernels vs pure-jnp oracles.
+
+On this CPU container the kernels run through the Pallas interpreter,
+so wall times measure the *reference semantics*, not TPU performance;
+the derived column reports the structural quantities that matter on
+TPU: MXU passes per output tile and VMEM working set per BlockSpec."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import timed
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    m, k, n = 128, 1024, 128
+    x8 = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int32)
+    w8 = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int32)
+    xu = jnp.asarray(rng.integers(0, 16, (m, k)), jnp.int32)
+    w4 = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int32)
+
+    def dimc() -> str:
+        y = ops.dimc_matmul(x8, w8, bi=8, bw=8, bm=128, bn=128, bk=512)
+        exact = bool((np.asarray(y) ==
+                      np.asarray(ref.matmul_int_ref(x8, w8))).all())
+        vmem_kb = (128 * 512 + 512 * 128 + 128 * 128) * 4 / 1024
+        return (f"exact={exact} mxu_passes_per_tile=8 "
+                f"vmem_per_tile={vmem_kb:.0f}KB")
+
+    def aimc() -> str:
+        y = ops.aimc_matmul(xu, w4, bi=4, bw=4, adc_res=6, rows=256)
+        yr = ref.aimc_mvm_ref(xu, w4, 4, 4, 6, 256)
+        match = bool(np.allclose(np.asarray(y), np.asarray(yr), atol=1e-2))
+        err = float(jnp.abs(
+            y - (xu.astype(jnp.float32) @ w4.astype(jnp.float32))).mean())
+        vmem_kb = (128 * 256 + 256 * 128 + 128 * 128) * 4 / 1024
+        return (f"oracle_match={match} adc_noise_mean={err:.1f} "
+                f"mxu_passes_per_tile=4 vmem_per_tile={vmem_kb:.0f}KB")
+
+    # compile once, then time steady-state
+    dimc()
+    aimc()
+    timed("kernel_dimc_mvm_128x1024x128", dimc, repeats=3)
+    timed("kernel_aimc_mvm_128x1024x128", aimc, repeats=3)
+
+    def qat_step() -> str:
+        xf = jnp.asarray(rng.normal(size=(32, 256)), jnp.float32)
+        wf = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+        g = jax.grad(lambda w: ops.imc_linear_sim(
+            xf, w, "aimc", 8, 8, 6).sum())(wf)
+        return f"ste_grad_norm={float(jnp.linalg.norm(g)):.1f}"
+
+    qat_step()
+    timed("kernel_imc_qat_step", qat_step, repeats=3)

@@ -1,0 +1,46 @@
+"""Beyond-paper extension (DESIGN.md §2): map the assigned LM
+architectures' MVM workloads onto IMC designs with the same DSE —
+energy/token at the macro level + IMC coverage (fraction of MACs that
+are MVMs at all)."""
+
+from __future__ import annotations
+
+from repro import configs
+from repro.core import designs, dse
+from repro.core.lm_bridge import lm_block_spec, lm_imc_workloads
+from repro.core.workloads import imc_coverage
+
+from .common import timed
+
+# tokens processed per DSE evaluation (one superblock; energy/token is
+# normalized afterwards)
+TOKENS = 64
+
+
+def run() -> None:
+    def study() -> str:
+        macro = designs.by_name("chih21-4b4b").macro           # DIMC anchor
+        macro_a = designs.by_name("papistas21-4b4b").macro     # AIMC anchor
+        print(f"# {'arch':24s} {'cover':>6s} {'uJ/token DIMC':>14s} "
+              f"{'uJ/token AIMC':>14s} {'util D':>7s} {'util A':>7s}")
+        rows = []
+        for arch in configs.ARCH_IDS:
+            cfg = configs.get(arch)
+            spec = lm_block_spec(cfg)
+            cover = imc_coverage(spec)
+            layers = lm_imc_workloads(cfg, TOKENS)
+            scale = cfg.n_super / TOKENS / 1e9      # fJ -> uJ/token
+            rd = dse.map_network(arch, layers, macro)
+            ra = dse.map_network(arch, layers, macro_a)
+            print(f"# {arch:24s} {cover:6.2f} "
+                  f"{rd.total_energy_fj*scale:14.2f} "
+                  f"{ra.total_energy_fj*scale:14.2f} "
+                  f"{rd.mean_utilization:7.2f} {ra.mean_utilization:7.2f}")
+            rows.append((arch, cover, rd.total_energy_fj * scale,
+                         ra.total_energy_fj * scale))
+        best = min(rows, key=lambda r: r[2])
+        worst = max(rows, key=lambda r: r[2])
+        return (f"archs={len(rows)} best={best[0]}@{best[2]:.1f}uJ/tok "
+                f"worst={worst[0]}@{worst[2]:.0f}uJ/tok")
+
+    timed("lm_imc_casestudy", study)

@@ -1,0 +1,62 @@
+"""Roofline table from the dry-run artifacts (brief §Roofline): three
+terms per (arch x shape) on the single-pod mesh, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS ratio."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro import configs
+
+from .common import timed
+
+ART_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for arch in configs.ARCH_IDS:
+        for shape in configs.SHAPES:
+            p = ART_DIR / f"{arch}__{shape}__{mesh}.json"
+            if p.exists():
+                cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def run() -> None:
+    def table() -> str:
+        cells = load_cells("single")
+        ok = [c for c in cells if c.get("status") == "ok"]
+        skipped = [c for c in cells if c.get("status") == "skipped"]
+        failed = [c for c in cells if c.get("status") == "failed"]
+        print(f"# {'arch':24s} {'shape':12s} {'compute':>9s} "
+              f"{'mem(lo..hi)':>16s} {'coll':>9s} {'bottleneck':>10s} "
+              f"{'useful':>6s} {'MFU':>5s}")
+        for c in ok:
+            r = c["roofline"]
+            mlo = r.get("memory_s_lower", 0.0)
+            print(f"# {c['arch']:24s} {c['shape']:12s} "
+                  f"{r['compute_s']*1e3:8.1f}m "
+                  f"{mlo*1e3:6.1f}..{r['memory_s']*1e3:7.1f}m "
+                  f"{r['collective_s']*1e3:8.1f}m {r['bottleneck']:>10s} "
+                  f"{r['useful_flops_ratio']:6.2f} {r['mfu']:5.2f}")
+        for c in skipped:
+            print(f"# {c['arch']:24s} {c['shape']:12s} SKIPPED "
+                  f"({c['reason'][:60]})")
+        # optimized-plan cells (EXPERIMENTS.md §Perf)
+        n_opt = 0
+        for p in sorted(ART_DIR.glob("*__single__*.json")):
+            c = json.loads(p.read_text())
+            if c.get("status") != "ok":
+                continue
+            r = c["roofline"]
+            tag = p.stem.split("__single__")[1]
+            print(f"# OPT {c['arch']:20s} {c['shape']:10s} [{tag}] "
+                  f"mfu={r['mfu']:.3f} c={r['compute_s']:.2f}s "
+                  f"coll={r['collective_s']:.2f}s")
+            n_opt += 1
+        return (f"ok={len(ok)} skipped={len(skipped)} "
+                f"failed={len(failed)} optimized={n_opt}")
+
+    timed("roofline_table", table)

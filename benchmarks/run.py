@@ -1,0 +1,26 @@
+"""Benchmark harness: one entry per paper table/figure (+ the
+beyond-paper LM case study, the roofline table from dry-run artifacts,
+and the Pallas kernel checks).  Prints ``name,us_per_call,derived``
+CSV rows; `#`-prefixed lines are human-readable detail."""
+
+from __future__ import annotations
+
+from . import (common, fig4_survey, fig5_validation, fig6_tech,
+               fig7_casestudy, kernel_bench, lm_imc_casestudy,
+               roofline_table)
+
+
+def main() -> None:
+    common.header()
+    fig4_survey.run()
+    fig5_validation.run()
+    fig6_tech.run()
+    fig7_casestudy.run()
+    lm_imc_casestudy.run()
+    roofline_table.run()
+    kernel_bench.run()
+    print(f"# total benchmarks: {len(common.ROWS)}")
+
+
+if __name__ == "__main__":
+    main()

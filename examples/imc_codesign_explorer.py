@@ -1,0 +1,39 @@
+"""Workload-hardware co-design: sweep ADC resolution and array size and
+report BOTH sides of the AIMC trade-off the paper centers on —
+energy/MAC (analytical model, Eq. 8) vs numerical fidelity (functional
+Pallas kernel with real ADC clipping/quantization).
+
+Run:  PYTHONPATH=src python examples/imc_codesign_explorer.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.energy import peak_energy
+from repro.core.hardware import IMCMacro, IMCType
+from repro.kernels import ops
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.integers(0, 16, (64, 1024)), jnp.int32)
+w = jnp.asarray(rng.integers(-8, 8, (1024, 64)), jnp.int32)
+exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+
+print(f"{'rows':>5s} {'ADC':>4s} {'fJ/MAC':>8s} {'TOPS/W':>8s} "
+      f"{'rel.err':>8s}   <- energy/accuracy frontier")
+for rows in (128, 256, 512, 1024):
+    for adc in (4, 5, 6, 7, 8):
+        macro = IMCMacro(name=f"r{rows}a{adc}", imc_type=IMCType.AIMC,
+                         rows=rows, cols=256, tech_nm=22, vdd=0.8,
+                         bw=4, bi=4, adc_res=adc, dac_res=4)
+        bd = peak_energy(macro)
+        y = np.asarray(ops.aimc_matmul(x, w, bi=4, bw=4, adc_res=adc,
+                                       rows=rows))
+        rel = np.abs(y - exact).mean() / np.abs(exact).mean()
+        print(f"{rows:5d} {adc:4d} {bd.fj_per_mac:8.2f} "
+              f"{bd.tops_per_watt:8.1f} {rel:8.4f}")
+
+print("\nReading: bigger arrays amortize the converters (fJ/MAC down)"
+      "\nbut widen the bitline range each ADC code must cover (rel.err"
+      "\nup) — recover it with +1b ADC and pay 2-4x conversion energy"
+      "\n(Eq. 8's 4^res term).  This is the paper's central trade-off,"
+      "\nreproduced end to end: analytical cost + functional kernels.")

@@ -1,0 +1,36 @@
+"""Quickstart: the paper's cost model in ~40 lines.
+
+1. describe an IMC macro (AIMC and DIMC variants),
+2. get peak energy efficiency + the full Eq. 1-11 breakdown,
+3. map a real workload (ResNet8 conv layer) with the ZigZag-lite DSE.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import dse, workloads
+from repro.core.energy import peak_energy, peak_tops_per_watt
+from repro.core.hardware import IMCMacro, IMCType
+
+# --- 1. two design points, same array budget ------------------------------
+aimc = IMCMacro(name="my-aimc", imc_type=IMCType.AIMC, rows=1152, cols=256,
+                tech_nm=22, vdd=0.8, bw=4, bi=4, adc_res=5, dac_res=4)
+dimc = IMCMacro(name="my-dimc", imc_type=IMCType.DIMC, rows=256, cols=256,
+                tech_nm=22, vdd=0.8, bw=4, bi=4, m_mux=16, n_macros=5)
+
+# --- 2. peak metrics + component breakdown (paper Eq. 1-11) ----------------
+for m in (aimc, dimc):
+    bd = peak_energy(m)
+    print(f"{m.name}: {peak_tops_per_watt(m):7.1f} TOP/s/W peak   "
+          f"(cell {bd.e_cell/bd.macs:.2f}  logic {bd.e_logic/bd.macs:.2f}  "
+          f"ADC {bd.e_adc/bd.macs:.2f}  tree {bd.e_adder_tree/bd.macs:.2f}  "
+          f"DAC {bd.e_dac/bd.macs:.2f} fJ/MAC)")
+
+# --- 3. map a workload: what peak numbers hide (paper Sec. VI) -------------
+layer = workloads.conv2d("resnet8.b2.conv1", b=1, c_in=32, k_out=64,
+                         ox=8, oy=8, fx=3, fy=3)
+for m in (aimc, dimc):
+    r = dse.best_mapping(layer, m, dse.MemoryModel(m.tech_nm, m.vdd))
+    print(f"{m.name}: best mapping {r.cost.mapping.describe()}  "
+          f"-> {r.total_energy_fj/layer.macs:.1f} fJ/MAC at "
+          f"util {r.cost.spatial_utilization:.2f} "
+          f"(vs {2e3/peak_tops_per_watt(m):.1f} fJ/MAC peak)")

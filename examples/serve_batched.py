@@ -1,0 +1,35 @@
+"""End-to-end serving driver (assignment deliverable b): a small LM
+serving a batch of requests — prefill once, stream decode steps, report
+tokens/s — the same ``ServeLoop`` the production ``launch/serve.py``
+CLI uses on a pod.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.launch.serve import ServeLoop
+from repro.models.lm import LM
+
+BATCH, PROMPT, GEN = 4, 12, 16
+
+cfg = configs.get_smoke("qwen1.5-0.5b")
+lm = LM(cfg)
+params = lm.init(jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(7)
+prompts = rng.integers(0, cfg.vocab_size, (BATCH, PROMPT)).astype(np.int32)
+
+loop = ServeLoop(lm, BATCH, PROMPT + GEN)
+tokens, stats = loop.generate(params, prompts, GEN,
+                              key=jax.random.PRNGKey(1))
+
+print(f"served {BATCH} requests x {GEN} tokens")
+print(f"prefill: {stats['prefill_s']:.2f}s   "
+      f"decode: {stats['decode_tok_per_s']:.1f} tok/s (CPU interpreter)")
+for i, row in enumerate(tokens):
+    print(f"  request {i}: {row[:10].tolist()} ...")
+assert tokens.shape == (BATCH, GEN)
+assert (tokens < cfg.vocab_size).all()

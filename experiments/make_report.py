@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the artifacts.
+
+Usage: PYTHONPATH=src python experiments/make_report.py > /tmp/tables.md
+"""
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "dryrun"
+ARCHS = ["qwen1.5-0.5b", "glm4-9b", "gemma3-1b", "minicpm3-4b",
+         "jamba-1.5-large-398b", "olmoe-1b-7b", "arctic-480b",
+         "paligemma-3b", "musicgen-large", "rwkv6-7b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    return f"{x/2**30:.2f}"
+
+
+def cell(arch, shape, mesh):
+    p = ART / f"{arch}__{shape}__{mesh}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | chips | compile s | resident GiB/dev "
+          "| collectives (top kinds) |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            for m in ("single", "multi"):
+                c = cell(a, s, m)
+                if c is None:
+                    continue
+                if c["status"] == "skipped":
+                    if m == "single":
+                        print(f"| {a} | {s} | both | - | - | - | "
+                              f"SKIPPED: sub-quadratic rule |")
+                    continue
+                r = c["roofline"]
+                colls = sorted(r["collectives"].items(),
+                               key=lambda kv: -kv[1]["bytes"])[:2]
+                ctxt = ", ".join(
+                    f"{k} {v['bytes']/2**30:.1f}GiB/{int(v['count'])}x"
+                    for k, v in colls) or "none"
+                res = c["memory_analysis"].get("resident_bytes_per_device")
+                print(f"| {a} | {s} | {m} | {c['chips']} "
+                      f"| {c['compile_s']:.0f} | {fmt_b(res)} | {ctxt} |")
+
+
+def roofline_table():
+    print("| arch | shape | compute s | memory s (lo..hi) | collective s "
+          "| bottleneck | useful | MFU lower-bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            c = cell(a, s, "single")
+            if c is None or c["status"] != "ok":
+                if c and c["status"] == "skipped":
+                    print(f"| {a} | {s} | - | - | - | skipped "
+                          f"(full attention) | - | - |")
+                continue
+            r = c["roofline"]
+            print(f"| {a} | {s} | {r['compute_s']:.3f} "
+                  f"| {r['memory_s_lower']:.3f}..{r['memory_s']:.1f} "
+                  f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+                  f"| {r['useful_flops_ratio']:.2f} | {r['mfu']:.3f} |")
+
+
+if __name__ == "__main__":
+    print("## Dry-run table\n")
+    dryrun_table()
+    print("\n## Roofline table (single-pod)\n")
+    roofline_table()

@@ -1,0 +1,66 @@
+"""Assigned-architecture registry: ``get(arch_id)`` -> full ModelConfig,
+``get_smoke(arch_id)`` -> reduced same-family config for CPU tests.
+
+Arch ids match the assignment brief; module names replace [.-] with _.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = (
+    "qwen1.5-0.5b",
+    "glm4-9b",
+    "gemma3-1b",
+    "minicpm3-4b",
+    "jamba-1.5-large-398b",
+    "olmoe-1b-7b",
+    "arctic-480b",
+    "paligemma-3b",
+    "musicgen-large",
+    "rwkv6-7b",
+)
+
+_MODULES = {a: "repro.configs." + a.replace(".", "_").replace("-", "_")
+            for a in ARCH_IDS}
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get(arch_id: str):
+    return _mod(arch_id).config()
+
+
+def get_smoke(arch_id: str):
+    return _mod(arch_id).smoke_config()
+
+
+# ----------------------------------------------------------------------- #
+# assigned input shapes (LM transformer family, brief)                     #
+# ----------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg, shape: ShapeSpec) -> bool:
+    """long_500k only for sub-quadratic archs (brief / DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True

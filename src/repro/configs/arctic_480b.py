@@ -1,0 +1,40 @@
+"""arctic-480b [moe] — 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128 experts top-2 + dense residual path on every
+layer.  [hf:Snowflake/snowflake-arctic-base]
+
+56 heads are not divisible by the 16-way TP axis: the sharding resolver
+replicates the head dim and shards the contraction dims instead
+(DESIGN.md §4).  Params/optimizer bf16 + FSDP over pod to fit HBM."""
+
+import jax.numpy as jnp
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import ModelConfig
+from repro.models.moe import MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        d_model=7168, n_layers=35, vocab_size=32000, d_ff=4864,
+        ffn_act="swiglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=56, n_kv_heads=8, head_dim=128,
+                        rope_theta=1e4),
+        moe=MoEConfig(n_experts=128, top_k=2, d_ff_expert=4864, every=1,
+                      dense_residual=True),
+        param_dtype=jnp.bfloat16, moment_dtype="int8",
+        fsdp_over_pod=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-smoke",
+        d_model=64, n_layers=2, vocab_size=512, d_ff=96,
+        ffn_act="swiglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=7, n_kv_heads=1, head_dim=8,
+                        rope_theta=1e4),
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=96, every=1,
+                      dense_residual=True),
+        vocab_pad_multiple=16,
+    )

@@ -1,0 +1,34 @@
+"""gemma3-1b [dense] — 26L d_model=1152 4H (GQA kv=1, head_dim 256)
+d_ff=6912 vocab=262144; 5:1 local:global sliding-window pattern
+(window 512, dual RoPE theta), QK-norm, sandwich norms, 128k context.
+[hf:google/gemma-3-1b-pt]
+
+The 5:1 pattern is data-driven (``is_global`` scanned flag) so all 26
+layers share one scanned HLO body — see DESIGN.md §4."""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b",
+        d_model=1152, n_layers=26, vocab_size=262144, d_ff=6912,
+        ffn_act="geglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=4, n_kv_heads=1, head_dim=256,
+                        rope_theta=1e6, rope_local_theta=1e4,
+                        sliding_window=512, global_every=6, qk_norm=True),
+        post_norm=True, tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b-smoke",
+        d_model=48, n_layers=6, vocab_size=512, d_ff=144,
+        ffn_act="geglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=4, n_kv_heads=1, head_dim=16,
+                        rope_theta=1e6, rope_local_theta=1e4,
+                        sliding_window=8, global_every=6, qk_norm=True),
+        post_norm=True, tie_embeddings=True, vocab_pad_multiple=16,
+    )

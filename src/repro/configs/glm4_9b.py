@@ -1,0 +1,26 @@
+"""glm4-9b [dense] — 40L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=151552, RoPE, GQA.  [hf:THUDM/glm-4-9b]"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="glm4-9b",
+        d_model=4096, n_layers=40, vocab_size=151552, d_ff=13696,
+        ffn_act="swiglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=32, n_kv_heads=2, head_dim=128,
+                        qkv_bias=True, rope_theta=1e4),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="glm4-9b-smoke",
+        d_model=64, n_layers=2, vocab_size=512, d_ff=192,
+        ffn_act="swiglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=8, n_kv_heads=2, head_dim=8,
+                        qkv_bias=True, rope_theta=1e4),
+        vocab_pad_multiple=16,
+    )

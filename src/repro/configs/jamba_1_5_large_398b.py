@@ -1,0 +1,45 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2; Mamba:attention 7:1 interleave,
+MoE every other layer.  [arXiv:2403.19887]
+
+Superblock = 8 layers (attention at position 4, Mamba elsewhere; MoE at
+odd positions) scanned 9 times.  Params/optimizer in bf16 and FSDP over
+the pod axis — required to fit 398B params + Adam state in 16 GB/chip
+(DESIGN.md §4)."""
+
+import jax.numpy as jnp
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import ModelConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import MambaConfig
+
+_PATTERN = ("mamba", "mamba", "mamba", "mamba",
+            "attn", "mamba", "mamba", "mamba")
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        d_model=8192, n_layers=72, vocab_size=65536, d_ff=24576,
+        ffn_act="swiglu", pattern=_PATTERN,
+        attn=AttnConfig(n_heads=64, n_kv_heads=8, head_dim=128,
+                        rope_theta=1e4),
+        mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+        moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=24576, every=2),
+        param_dtype=jnp.bfloat16, moment_dtype="int8",
+        fsdp_over_pod=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-smoke",
+        d_model=64, n_layers=8, vocab_size=512, d_ff=128,
+        ffn_act="swiglu", pattern=_PATTERN,
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16,
+                        rope_theta=1e4),
+        mamba=MambaConfig(d_state=4, d_conv=4, expand=2),
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128, every=2),
+        vocab_pad_multiple=16,
+    )

@@ -1,0 +1,33 @@
+"""minicpm3-4b [dense] — 62L d_model=2560 40H d_ff=6400 vocab=73448,
+MLA (multi-head latent attention).  [hf:openbmb/MiniCPM3-4B]
+
+vocab 73448 is not divisible by the 16-way TP axis; the embedding table
+is padded to 73472 rows (vocab_pad_multiple=128) and padded logits are
+masked — the published vocabulary is unchanged (DESIGN.md §4)."""
+
+from repro.models.attention import MLAConfig
+from repro.models.lm import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-4b",
+        d_model=2560, n_layers=62, vocab_size=73448, d_ff=6400,
+        ffn_act="swiglu", pattern=("mla",),
+        mla=MLAConfig(n_heads=40, q_lora_rank=768, kv_lora_rank=256,
+                      qk_nope_dim=64, qk_rope_dim=32, v_dim=64,
+                      rope_theta=1e4),
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-4b-smoke",
+        d_model=64, n_layers=2, vocab_size=500, d_ff=160,
+        ffn_act="swiglu", pattern=("mla",),
+        mla=MLAConfig(n_heads=4, q_lora_rank=24, kv_lora_rank=16,
+                      qk_nope_dim=8, qk_rope_dim=4, v_dim=8,
+                      rope_theta=1e4),
+        tie_embeddings=True, vocab_pad_multiple=16,
+    )

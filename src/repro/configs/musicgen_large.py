@@ -1,0 +1,34 @@
+"""musicgen-large [audio] — 48L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=2048; decoder-only over EnCodec tokens.  [arXiv:2306.05284]
+
+Per the brief the EnCodec frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (128-d EnCodec latents) and the
+model owns the frame projection.  Text conditioning/cross-attention is
+out of scope (DESIGN.md §7); plain GELU FFN per the published decoder."""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import ModelConfig
+
+FRAME_DIM = 128
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large",
+        d_model=2048, n_layers=48, vocab_size=2048, d_ff=8192,
+        ffn_act="gelu", pattern=("attn",),
+        attn=AttnConfig(n_heads=32, n_kv_heads=32, head_dim=64,
+                        rope_theta=1e4),
+        frontend="frames", frame_dim=FRAME_DIM,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-smoke",
+        d_model=64, n_layers=2, vocab_size=256, d_ff=128,
+        ffn_act="gelu", pattern=("attn",),
+        attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16,
+                        rope_theta=1e4),
+        frontend="frames", frame_dim=16, vocab_pad_multiple=16,
+    )

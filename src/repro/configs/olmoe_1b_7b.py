@@ -1,0 +1,29 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (GQA kv=16) d_ff=1024
+vocab=50304, MoE 64 experts top-8 on every layer.  [arXiv:2409.02060]"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import ModelConfig
+from repro.models.moe import MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b",
+        d_model=2048, n_layers=16, vocab_size=50304, d_ff=1024,
+        ffn_act="swiglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=16, n_kv_heads=16, head_dim=128,
+                        rope_theta=1e4, qk_norm=True),
+        moe=MoEConfig(n_experts=64, top_k=8, d_ff_expert=1024, every=1),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-smoke",
+        d_model=64, n_layers=2, vocab_size=512, d_ff=64,
+        ffn_act="swiglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16,
+                        rope_theta=1e4, qk_norm=True),
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=64, every=1),
+        vocab_pad_multiple=16,
+    )

@@ -1,0 +1,38 @@
+"""paligemma-3b [vlm] — 18L d_model=2048 8H (GQA kv=1, head_dim 256)
+d_ff=16384 vocab=257216; SigLIP frontend + Gemma backbone.
+[arXiv:2407.07726]
+
+Per the brief, the modality frontend is a STUB: ``input_specs()``
+provides precomputed SigLIP patch embeddings (256 tokens x 1152); the
+model owns only the learned connector projection.  The image prefix is
+attended bidirectionally (prefix-LM mask), text is causal."""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import ModelConfig
+
+IMG_TOKENS = 256
+IMG_DIM = 1152
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b",
+        d_model=2048, n_layers=18, vocab_size=257216, d_ff=16384,
+        ffn_act="geglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=8, n_kv_heads=1, head_dim=256,
+                        rope_theta=1e4),
+        frontend="image_text", img_tokens=IMG_TOKENS, img_dim=IMG_DIM,
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-smoke",
+        d_model=64, n_layers=2, vocab_size=512, d_ff=192,
+        ffn_act="geglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=4, n_kv_heads=1, head_dim=16,
+                        rope_theta=1e4),
+        frontend="image_text", img_tokens=8, img_dim=24,
+        tie_embeddings=True, vocab_pad_multiple=16,
+    )

@@ -1,0 +1,27 @@
+"""qwen1.5-0.5b [dense] — 24L d_model=1024 16H (GQA kv=16) d_ff=2816
+vocab=151936, QKV bias.  [hf:Qwen/Qwen1.5-0.5B]"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-0.5b",
+        d_model=1024, n_layers=24, vocab_size=151936, d_ff=2816,
+        ffn_act="swiglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=16, n_kv_heads=16, head_dim=64,
+                        qkv_bias=True, rope_theta=1e6),
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-0.5b-smoke",
+        d_model=64, n_layers=2, vocab_size=512, d_ff=176,
+        ffn_act="swiglu", pattern=("attn",),
+        attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16,
+                        qkv_bias=True, rope_theta=1e6),
+        tie_embeddings=True, vocab_pad_multiple=16,
+    )

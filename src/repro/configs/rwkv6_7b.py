@@ -1,0 +1,29 @@
+"""rwkv6-7b [ssm] — 32L d_model=4096 (attention-free) d_ff=14336
+vocab=65536; RWKV-6 "Finch" with data-dependent decay.
+[arXiv:2404.05892]
+
+Attention-free: O(1) decode state, so long_500k runs (sub-quadratic
+rule, DESIGN.md §5).  The WKV recurrence itself is not an MVM and is
+flagged imc_ineligible for the IMC case study."""
+
+from repro.models.lm import ModelConfig
+from repro.models.ssm import RWKVConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b",
+        d_model=4096, n_layers=32, vocab_size=65536, d_ff=14336,
+        pattern=("rwkv6",),
+        rwkv=RWKVConfig(head_dim=64, mix_lora=32, decay_lora=64),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke",
+        d_model=64, n_layers=2, vocab_size=512, d_ff=224,
+        pattern=("rwkv6",),
+        rwkv=RWKVConfig(head_dim=16, mix_lora=8, decay_lora=16),
+        vocab_pad_multiple=16,
+    )

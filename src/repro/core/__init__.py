@@ -1,0 +1,26 @@
+"""Core library: the paper's unified AIMC/DIMC cost model + mapping DSE.
+
+Layout:
+    tech.py       technology-dependent fitted parameters (Fig. 6)
+    hardware.py   IMC macro template (Table I / Fig. 3)
+    energy.py     unified energy model (Eq. 1-11) + peak metrics
+    designs.py    published design-point dataset (Fig. 4 survey)
+    validate.py   model-vs-silicon validation (Fig. 5)
+    workloads.py  8-nested-loop DNN layer representation (Fig. 1)
+    mapping.py    spatial/temporal mapping + utilization (Fig. 2)
+    memory.py     outer memory hierarchy traffic/energy
+    dse.py        ZigZag-lite mapping search (Sec. VI)
+    meshdse.py    the same DSE methodology applied to the TPU pod mesh
+"""
+
+from .hardware import IMCMacro, IMCType                              # noqa: F401
+from .energy import (                                                # noqa: F401
+    EnergyBreakdown, MacroTile, peak_energy, peak_tops,
+    peak_tops_per_watt, peak_tops_per_mm2, tile_energy,
+)
+from .designs import (                                               # noqa: F401
+    AIMC_DESIGNS, ALL_DESIGNS, DIMC_DESIGNS, DesignPoint,
+    VALIDATION_SET, by_name, table2_designs,
+)
+from .validate import ValidationRow, strict_rows, summarize  # noqa: F401
+from . import validate as validate  # noqa: F401  (module, not the function)

@@ -1,0 +1,141 @@
+"""ZigZag-lite design-space exploration (paper Sec. VI).
+
+For each layer of a workload, enumerate legal spatial mappings
+(``mapping.enumerate_mappings``), price each with the unified energy
+model + the outer-memory traffic model, and keep the best under the
+chosen objective (energy, latency, or EDP).  This reproduces the role
+ZigZag plays in the paper: "find the optimal spatial and temporal
+mapping for each architecture and each network layer".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+from .energy import EnergyBreakdown
+from .hardware import IMCMacro
+from .mapping import MappingCost, enumerate_mappings, evaluate
+from .memory import MemoryModel
+from .workloads import Layer
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerResult:
+    layer: Layer
+    cost: MappingCost
+    memory_energy_fj: dict[str, float]
+
+    @property
+    def macro_energy_fj(self) -> float:
+        return self.cost.macro_energy.total_fj
+
+    @property
+    def total_energy_fj(self) -> float:
+        return self.macro_energy_fj + sum(self.memory_energy_fj.values())
+
+    @property
+    def edp(self) -> float:
+        return self.total_energy_fj * self.cost.cycles
+
+    def breakdown_fj(self) -> dict[str, float]:
+        e = self.cost.macro_energy
+        return {
+            "cell (WL+BL)": e.e_cell,
+            "mult logic": e.e_logic,
+            "ADC": e.e_adc,
+            "adder tree": e.e_adder_tree,
+            "DAC": e.e_dac,
+            "weight write": e.e_weight_write,
+            "mem: weights": self.memory_energy_fj["weights"],
+            "mem: inputs": self.memory_energy_fj["inputs"],
+            "mem: outputs": self.memory_energy_fj["outputs"],
+            "mem: psums": self.memory_energy_fj["psums"],
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkResult:
+    network: str
+    macro_name: str
+    layers: tuple[LayerResult, ...]
+
+    @property
+    def total_energy_fj(self) -> float:
+        return sum(l.total_energy_fj for l in self.layers)
+
+    @property
+    def total_cycles(self) -> float:
+        return sum(l.cost.cycles for l in self.layers)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.layer.macs for l in self.layers)
+
+    @property
+    def fj_per_mac(self) -> float:
+        return self.total_energy_fj / max(1, self.total_macs)
+
+    @property
+    def effective_tops_w(self) -> float:
+        return 2.0 * 1e3 / self.fj_per_mac
+
+    @property
+    def mean_utilization(self) -> float:
+        w = sum(l.layer.macs for l in self.layers)
+        return sum(l.cost.spatial_utilization * l.layer.macs
+                   for l in self.layers) / max(1, w)
+
+    def traffic_bits(self) -> dict[str, float]:
+        keys = ("weight_bits", "input_bits", "output_bits", "psum_bits")
+        return {k: sum(getattr(l.cost, k) for l in self.layers) for k in keys}
+
+    def breakdown_fj(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for l in self.layers:
+            for k, v in l.breakdown_fj().items():
+                out[k] = out.get(k, 0.0) + v
+        return out
+
+
+Objective = Callable[[LayerResult], float]
+
+OBJECTIVES: dict[str, Objective] = {
+    "energy": lambda r: r.total_energy_fj,
+    "latency": lambda r: r.cost.cycles,
+    "edp": lambda r: r.edp,
+}
+
+
+def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
+                 objective: str = "energy",
+                 alpha: float | None = None) -> LayerResult:
+    """Search the mapping space of one layer; return the argmin."""
+    obj = OBJECTIVES[objective]
+    best: LayerResult | None = None
+    resident = (layer.weight_elems * layer.w_prec
+                + layer.input_elems * layer.i_prec
+                + layer.output_elems * layer.psum_prec) // 8
+    for sm in enumerate_mappings(layer, macro):
+        cost = evaluate(layer, macro, sm, alpha=alpha)
+        res = LayerResult(
+            layer=layer, cost=cost,
+            memory_energy_fj=mem.traffic_energy_fj(cost, resident))
+        if best is None or obj(res) < obj(best):
+            best = res
+    if best is None:
+        raise ValueError(f"no legal mapping for {layer.name} on {macro.name}")
+    return best
+
+
+def map_network(network: str, layers: Sequence[Layer], macro: IMCMacro,
+                objective: str = "energy",
+                mem: MemoryModel | None = None,
+                alpha: float | None = None) -> NetworkResult:
+    mem = mem or MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+    results = tuple(
+        best_mapping(l, macro, mem, objective=objective, alpha=alpha)
+        for l in layers if l.imc_eligible)
+    return NetworkResult(network=network, macro_name=macro.name,
+                         layers=results)

@@ -1,0 +1,238 @@
+"""Unified AIMC/DIMC datapath energy model (paper Sec. IV, Eq. 1-11).
+
+    E_total = E_MUL + E_ACC + E_peripherals                      (Eq. 1)
+    E_MUL   = E_cell + E_logic                                   (Eq. 2)
+    E_cell  = (E_WL + E_BL) * CC_prech                           (Eq. 3)
+    E_WL    = C_WL V^2 B_w D1                                    (Eq. 4)  [per row]
+    E_BL    = C_BL V^2 B_w D2 M                                  (Eq. 5)  [per weight word]
+    E_logic = V^2 C_gate G_MUL * MACs                            (Eq. 6)
+    E_ACC   = E_ADC + E_adder_tree                               (Eq. 7)
+    E_ADC   = (k1 ADC_res + k2 4^ADC_res) V^2 B_w (MACs / D2)    (Eq. 8)
+    E_tree  = C_gate G_FA V^2 D1 F CC_acc                        (Eq. 9)
+    F       = B N + N - B + log2 N - 1                           (Eq. 10)
+    E_DAC   = k3 DAC_res V^2 CC_BS                               (Eq. 11) [per row]
+
+The paper states Eq. 4 per driven wordline and Eq. 5 per weight-word
+column group; this module multiplies them out over the rows/columns a
+mapped tile actually occupies and over the cycles in which lines toggle
+(``CC_prech``), which is where AIMC and DIMC genuinely differ:
+
+* **AIMC** recomputes the analog dot product every cycle, so bitlines
+  toggle on every one of the ``CC_BS`` conversion cycles of every input.
+* **DIMC (BPBS)** keeps weights latched: with ``M = 1`` the read
+  bitlines only toggle when weights are (re)loaded; with ``M``-way
+  muxing the selected row changes ``M`` times per input vector.
+
+A switching-activity factor ``alpha`` models the 50 % operand sparsity
+protocol the paper uses for its comparisons (Sec. III).
+
+All energies are in femtojoules (fJ); see ``tech.py`` for units.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import tech as _tech
+from .hardware import IMCMacro
+
+#: Activity factor at the paper's 50 % operand-sparsity protocol.  Not all
+#: nodes toggle rail-to-rail every cycle; calibrated once against the DIMC
+#: anchor designs (tests/core/test_validation.py) and then frozen.
+DEFAULT_ALPHA = 0.35
+
+#: SRAM write energy per bit, in units of C_inv V^2 (WL + both BLs driven
+#: plus write-driver overhead).  Used for weight (re)loads — the effect the
+#: paper's DeepAutoEncoder case hinges on (Sec. VI).
+WRITE_CINV_FACTOR = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroTile:
+    """One tiled MVM execution resident on a macro.
+
+    The mapper (``mapping.py``) produces these: ``rows_used`` /
+    ``cols_used`` describe the occupied sub-array (utilization), and the
+    temporal loop supplies ``n_inputs`` distinct input vectors that reuse
+    one weight load (``weight_loads`` counts (re)writes of the tile).
+    """
+
+    n_inputs: int          # input vectors streamed through the loaded weights
+    rows_used: int         # accumulation depth occupied (<= R)
+    cols_used: int         # weight words occupied (<= D1)
+    weight_loads: int = 1  # times this tile's weights are written
+
+    def macs(self) -> float:
+        return float(self.n_inputs) * self.rows_used * self.cols_used
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyBreakdown:
+    """Per-component energy [fJ] for a tile execution (paper Fig. 7 bars)."""
+
+    e_wl: float
+    e_bl: float
+    e_logic: float
+    e_adc: float
+    e_adder_tree: float
+    e_dac: float
+    e_weight_write: float
+    macs: float
+
+    @property
+    def e_cell(self) -> float:
+        return self.e_wl + self.e_bl
+
+    @property
+    def e_mul(self) -> float:
+        return self.e_cell + self.e_logic
+
+    @property
+    def e_acc(self) -> float:
+        return self.e_adc + self.e_adder_tree
+
+    @property
+    def e_peripherals(self) -> float:
+        return self.e_dac
+
+    @property
+    def total_fj(self) -> float:
+        """E_total (Eq. 1) + weight-write extension."""
+        return self.e_mul + self.e_acc + self.e_peripherals + self.e_weight_write
+
+    @property
+    def fj_per_mac(self) -> float:
+        return self.total_fj / max(self.macs, 1.0)
+
+    @property
+    def tops_per_watt(self) -> float:
+        """2 ops per MAC; 1 fJ/op == 1000 TOP/s/W."""
+        return 2.0 * 1e3 / max(self.fj_per_mac, 1e-30)
+
+    def scaled(self, k: float) -> "EnergyBreakdown":
+        return EnergyBreakdown(
+            *(getattr(self, f.name) * k for f in dataclasses.fields(self)))
+
+    def __add__(self, other: "EnergyBreakdown") -> "EnergyBreakdown":
+        return EnergyBreakdown(
+            *(getattr(self, f.name) + getattr(other, f.name)
+              for f in dataclasses.fields(self)))
+
+    @staticmethod
+    def zero() -> "EnergyBreakdown":
+        return EnergyBreakdown(0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+
+
+def tile_energy(macro: IMCMacro, tile: MacroTile,
+                alpha: float = DEFAULT_ALPHA) -> EnergyBreakdown:
+    """Evaluate Eq. 1-11 for one weight-resident tile execution."""
+    tp = macro.tech_params()
+    v2 = macro.vdd * macro.vdd
+    c_wl = tp.c_inv_ff           # C_WL ~ C_inv (paper Sec. IV-B1)
+    c_bl = tp.c_inv_ff           # C_BL ~ C_inv
+    c_gate = tp.c_gate_ff        # ~ 2 C_inv (paper Sec. IV-B2)
+    bw, bi = macro.bw, macro.bi
+    d1, d2, m = macro.d1, macro.d2, macro.m_mux
+    macs = tile.macs()
+
+    rows_drv = min(tile.rows_used, macro.rows)           # driven wordlines
+    words = min(tile.cols_used, d1)                      # active weight words
+    mux_rows = math.ceil(rows_drv / m)                   # rows per cycle (DIMC)
+
+    # --- E_cell (Eq. 3-5) ----------------------------------------------------
+    # Eq. 4 per wordline: the physical line spans the full row (Bw * D1 cells).
+    e_wl_line = c_wl * v2 * bw * d1
+    # Eq. 5 per weight word: the (local) bitlines span D2 * M cells.
+    e_bl_word = c_bl * v2 * bw * d2 * m
+
+    if macro.analog:
+        # All rows jointly activated; bitlines re-develop every conversion
+        # cycle: CC_prech = CC_BS per input vector.
+        cc_prech = macro.cc_bs * tile.n_inputs
+        e_wl = e_wl_line * rows_drv * cc_prech * alpha
+        e_bl = e_bl_word * words * cc_prech * alpha
+    else:
+        # Weights stationary (BPBS): wordlines/read-bitlines toggle on row
+        # (re)selection only — M phases per input vector when muxed, else
+        # once per weight load.
+        if m > 1:
+            cc_prech = m * tile.n_inputs
+            e_wl = e_wl_line * mux_rows * cc_prech * alpha
+            e_bl = e_bl_word * words * cc_prech * alpha
+        else:
+            cc_prech = tile.weight_loads
+            e_wl = e_wl_line * rows_drv * cc_prech * alpha
+            e_bl = e_bl_word * words * cc_prech * alpha
+
+    # --- E_logic (Eq. 6), DIMC only -------------------------------------------
+    # G_MUL = Bw 1-b multipliers per MAC; each is exercised on every one of
+    # the Bi bit-serial cycles.
+    if macro.analog:
+        e_logic = 0.0
+    else:
+        # Eq. 6 literal: G_MUL = Bw gates per 1-b-input multiplier, one
+        # toggle-set per (full-precision) MAC — the bit-serial cycling is
+        # folded into "total MACs" by the paper's definition.  Booth
+        # recoding ([42]) halves the partial products actually evaluated.
+        g_mul = float(bw) * macro.cc_bs / bi
+        e_logic = v2 * c_gate * g_mul * macs * alpha
+
+    # --- E_ACC (Eq. 7-10) ------------------------------------------------------
+    if macro.analog:
+        conversions = bw * (macs / max(d2, 1))          # Eq. 8: Bw * MACs / D2
+        e_adc = _tech.adc_energy_fj(macro.adc_res, macro.vdd) * conversions \
+            / macro.cols_per_adc
+        n_tree, b_tree = max(2, bw), macro.adc_res       # recombine weight bits
+        f_tree = _tech.adder_tree_full_adders(n_tree, b_tree)
+        cc_acc = macro.cc_bs * tile.n_inputs
+        e_tree = c_gate * _tech.G_FA * v2 * words * f_tree * cc_acc * alpha
+    else:
+        e_adc = 0.0
+        n_tree, b_tree = d2, bw                          # Eq. 10: N=D2, B=Bw
+        f_tree = _tech.adder_tree_full_adders(n_tree, b_tree)
+        # Tree is exercised every bit-serial cycle of every mux phase, but
+        # only the sub-tree spanning the occupied rows toggles.
+        occupancy = min(1.0, rows_drv / max(d2 * m, 1))
+        cc_acc = macro.cc_bs * m * tile.n_inputs
+        e_tree = (c_gate * _tech.G_FA * v2 * words * f_tree * occupancy
+                  * cc_acc * alpha)
+
+    # --- E_peripherals (Eq. 11), AIMC only --------------------------------------
+    if macro.analog:
+        cc_bs = macro.cc_bs * tile.n_inputs              # conversions per row
+        e_dac = _tech.dac_energy_fj(macro.dac_res, macro.vdd) * rows_drv * cc_bs
+    else:
+        e_dac = 0.0
+
+    # --- weight (re)write extension --------------------------------------------
+    bits_written = tile.weight_loads * rows_drv * words * bw
+    e_write = WRITE_CINV_FACTOR * tp.c_inv_ff * v2 * bits_written
+
+    return EnergyBreakdown(
+        e_wl=e_wl, e_bl=e_bl, e_logic=e_logic, e_adc=e_adc,
+        e_adder_tree=e_tree, e_dac=e_dac, e_weight_write=e_write, macs=macs)
+
+
+def peak_energy(macro: IMCMacro, alpha: float = DEFAULT_ALPHA,
+                n_inputs: int = 4096) -> EnergyBreakdown:
+    """Peak-efficiency protocol: full array, weights loaded once, long
+    input stream (matches how macro papers report TOP/s/W, Sec. III)."""
+    tile = MacroTile(n_inputs=n_inputs, rows_used=macro.rows,
+                     cols_used=macro.d1, weight_loads=1)
+    bd = tile_energy(macro, tile, alpha=alpha)
+    # Peak protocols exclude the one-off weight load.
+    return dataclasses.replace(bd, e_weight_write=0.0)
+
+
+def peak_tops_per_watt(macro: IMCMacro, alpha: float = DEFAULT_ALPHA) -> float:
+    return peak_energy(macro, alpha=alpha).tops_per_watt
+
+
+def peak_tops(macro: IMCMacro) -> float:
+    """Peak throughput [TOP/s] across all macros."""
+    return 2.0 * macro.macs_per_cycle * macro.n_macros * macro.f_clk_ghz * 1e-3
+
+
+def peak_tops_per_mm2(macro: IMCMacro) -> float:
+    return peak_tops(macro) / macro.area_mm2

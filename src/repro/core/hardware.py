@@ -1,0 +1,153 @@
+"""IMC macro hardware template (paper Fig. 3 + Table I).
+
+An :class:`IMCMacro` captures the unified AIMC/DIMC architecture template:
+
+* an ``R x C`` SRAM array (``C`` in *bit* columns),
+* weights stored ``Bw`` bits wide across adjacent columns, so each row
+  holds ``D1 = C // Bw`` weight words — the **activation propagation
+  axis** (one input is broadcast along a wordline across all D1 words),
+* accumulation along the bitlines across rows — with ``M``-way row
+  multiplexing the per-cycle **accumulation axis** is ``D2 = R // M``
+  (AIMC activates all rows at once, M = 1),
+* AIMC peripherals: one DAC per row, ADC conversions per weight-word
+  column group; DIMC peripherals: per-cell multiplier gates + a digital
+  adder tree with ``N = D2`` inputs.
+
+``n_macros`` macros can be ganged on one die; the workload mapper may
+unroll OX/OY/G across macros (paper Sec. II-A), at the price of weight
+duplication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+from . import tech as _tech
+
+
+class IMCType(str, enum.Enum):
+    AIMC = "aimc"
+    DIMC = "dimc"
+
+
+@dataclasses.dataclass(frozen=True)
+class IMCMacro:
+    """One IMC macro design point (paper Table I symbols)."""
+
+    name: str
+    imc_type: IMCType
+    rows: int                 # R
+    cols: int                 # C, in bit columns
+    tech_nm: float
+    vdd: float
+    bw: int = 4               # B_w, weight bits stored in parallel
+    bi: int = 4               # input (activation) precision
+    adc_res: int = 0          # AIMC only
+    dac_res: int = 0          # AIMC only
+    m_mux: int = 1            # M, rows multiplexed per vector MAC (DIMC/NMC)
+    n_macros: int = 1
+    cols_per_adc: int = 1     # [32] uses one flash ADC per 4 bitlines
+    adc_share: int = 8        # column groups time-multiplexed per ADC (AIMC)
+    booth: bool = False       # [42]: bitwise in-memory Booth halves input cycles
+    notes: str = ""
+
+    # ---------------------------------------------------------------- derived
+    def __post_init__(self) -> None:
+        if self.cols % self.bw:
+            raise ValueError(
+                f"{self.name}: cols={self.cols} not a multiple of Bw={self.bw}")
+        if self.rows % self.m_mux:
+            raise ValueError(
+                f"{self.name}: rows={self.rows} not a multiple of M={self.m_mux}")
+        if self.imc_type is IMCType.AIMC:
+            if self.m_mux != 1:
+                raise ValueError(f"{self.name}: AIMC requires M=1 (paper Sec. IV-B1)")
+            if self.adc_res <= 0 or self.dac_res <= 0:
+                raise ValueError(f"{self.name}: AIMC requires ADC/DAC resolutions")
+
+    @property
+    def analog(self) -> bool:
+        return self.imc_type is IMCType.AIMC
+
+    @property
+    def d1(self) -> int:
+        """Activation propagation axis: weight words per row (maps K)."""
+        return self.cols // self.bw
+
+    @property
+    def d2(self) -> int:
+        """Accumulation axis per cycle: rows per mux group (maps C*FX*FY)."""
+        return self.rows // self.m_mux
+
+    @property
+    def cells(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def total_cells(self) -> int:
+        return self.cells * self.n_macros
+
+    @property
+    def weights_capacity(self) -> int:
+        """Weight words resident across all macros."""
+        return self.rows * self.d1 * self.n_macros
+
+    @property
+    def cc_bs(self) -> int:
+        """CC_BS: cycles to stream one input operand (paper Table I).
+
+        AIMC converts ``DAC_res`` input bits per conversion; DIMC is
+        bit-serial at 1 b/cycle (BPBS, paper Sec. IV-B2).
+        """
+        if self.analog:
+            return max(1, math.ceil(self.bi / self.dac_res))
+        if self.booth:
+            return max(1, math.ceil(self.bi / 2))  # radix-4 Booth recoding
+        return self.bi
+
+    @property
+    def macs_per_cycle(self) -> float:
+        """Full-precision MACs completed per cycle at 100 % utilization.
+
+        AIMC: D1*D2 MACs finish every CC_BS conversion rounds, each of
+        which takes ``adc_share`` cycles when columns time-multiplex a
+        shared ADC.  DIMC: the mux walks the M row groups while inputs
+        stream bit-serially, finishing D1*D2*M MACs every (CC_BS * M)
+        cycles (the M cancels).
+        """
+        if self.analog:
+            return self.d1 * self.d2 / (self.cc_bs * self.adc_share)
+        return self.d1 * self.d2 / self.cc_bs
+
+    @property
+    def f_clk_ghz(self) -> float:
+        return _tech.f_clk_ghz(self.tech_nm, self.vdd, self.analog)
+
+    def tech_params(self) -> _tech.TechParams:
+        return _tech.TechParams.at(self.tech_nm, self.vdd)
+
+    # ----------------------------------------------------------------- area
+    @property
+    def area_mm2(self) -> float:
+        """Macro area model [mm^2] (documented extension, DESIGN.md §7)."""
+        cell = _tech.cell_area_um2(self.tech_nm, self.analog) * self.cells
+        if self.analog:
+            n_adc = (self.d1 * self.bw) / (self.cols_per_adc * self.adc_share)
+            periph = n_adc * _tech.adc_area_um2(self.tech_nm, self.adc_res)
+            periph += self.rows * _tech.dac_area_um2(self.tech_nm, self.dac_res)
+            # weight-bit recombination shift-adders
+            f_rec = _tech.adder_tree_full_adders(max(2, self.bw), self.adc_res)
+            periph += self.d1 * f_rec * _tech.G_FA * _tech.gate_area_um2(self.tech_nm)
+        else:
+            g_mul = self.bw * self.d1 * self.d2           # 1-b NAND multipliers
+            f_tree = _tech.adder_tree_full_adders(self.d2, self.bw) * self.d1
+            periph = (g_mul + f_tree * _tech.G_FA) * _tech.gate_area_um2(self.tech_nm)
+        return (cell + periph) * self.n_macros * 1e-6
+
+    def scaled_to_cells(self, target_cells: int) -> "IMCMacro":
+        """Return a copy with n_macros scaled to ~``target_cells`` total
+        (paper Sec. VI: equal total SRAM for the Table II comparison)."""
+        n = max(1, round(target_cells / self.cells))
+        return dataclasses.replace(self, n_macros=n)

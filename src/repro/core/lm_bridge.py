@@ -1,0 +1,109 @@
+"""Lower assigned-LM architectures into IMC MVM workloads (beyond-paper
+extension, DESIGN.md §2): every projection of one superblock becomes a
+Dense workload with B = tokens, plus an accounting of the non-MVM MACs
+(attention score/value products, SSM/WKV recurrences) that are NOT
+IMC-mappable — reported as coverage %.
+"""
+
+from __future__ import annotations
+
+from repro.core.workloads import Layer, LMBlockSpec, dense
+from repro.models.lm import ModelConfig
+
+
+def _superblock_projections(cfg: ModelConfig) -> list[tuple[str, int, int, int]]:
+    """(name, in_features, out_features, calls_per_superblock)."""
+    d = cfg.d_model
+    projs: list[tuple[str, int, int, int]] = []
+    for pos, kind in enumerate(cfg.pattern):
+        tag = f"p{pos}"
+        if kind == "attn":
+            a = cfg.attn
+            projs += [(f"{tag}.wq", d, a.q_dim, 1),
+                      (f"{tag}.wk", d, a.kv_dim, 1),
+                      (f"{tag}.wv", d, a.kv_dim, 1),
+                      (f"{tag}.wo", a.q_dim, d, 1)]
+        elif kind == "mla":
+            m = cfg.mla
+            projs += [(f"{tag}.wq_a", d, m.q_lora_rank, 1),
+                      (f"{tag}.wq_b", m.q_lora_rank,
+                       m.n_heads * m.qk_dim, 1),
+                      (f"{tag}.wkv_a", d, m.kv_lora_rank + m.qk_rope_dim, 1),
+                      (f"{tag}.wk_b", m.kv_lora_rank,
+                       m.n_heads * m.qk_nope_dim, 1),
+                      (f"{tag}.wv_b", m.kv_lora_rank,
+                       m.n_heads * m.v_dim, 1),
+                      (f"{tag}.wo", m.n_heads * m.v_dim, d, 1)]
+        elif kind == "mamba":
+            c = cfg.mamba
+            di, r = c.d_inner(d), c.rank(d)
+            projs += [(f"{tag}.in_proj", d, 2 * di, 1),
+                      (f"{tag}.x_proj", di, r + 2 * c.d_state, 1),
+                      (f"{tag}.dt_proj", r, di, 1),
+                      (f"{tag}.out_proj", di, d, 1)]
+        elif kind == "rwkv6":
+            projs += [(f"{tag}.w{n}", d, d, 1) for n in "rkvg"]
+            projs += [(f"{tag}.wo", d, d, 1),
+                      (f"{tag}.cm_wk", d, cfg.d_ff, 1),
+                      (f"{tag}.cm_wv", cfg.d_ff, d, 1),
+                      (f"{tag}.cm_wr", d, d, 1)]
+        # FFN / MoE (rwkv6 channel-mix already added above)
+        if kind == "rwkv6":
+            continue
+        if cfg.layer_is_moe(pos):
+            m = cfg.moe
+            # top_k experts touched per token
+            projs += [(f"{tag}.moe_gate", d, m.d_ff_expert, m.top_k),
+                      (f"{tag}.moe_up", d, m.d_ff_expert, m.top_k),
+                      (f"{tag}.moe_down", m.d_ff_expert, d, m.top_k)]
+            if m.dense_residual:
+                projs += [(f"{tag}.ffn_gate", d, cfg.d_ff, 1),
+                          (f"{tag}.ffn_up", d, cfg.d_ff, 1),
+                          (f"{tag}.ffn_down", cfg.d_ff, d, 1)]
+        else:
+            n_mats = 3 if cfg.ffn_act in ("swiglu", "geglu") else 2
+            projs += [(f"{tag}.ffn_up", d, cfg.d_ff, 1),
+                      (f"{tag}.ffn_down", cfg.d_ff, d, 1)]
+            if n_mats == 3:
+                projs += [(f"{tag}.ffn_gate", d, cfg.d_ff, 1)]
+    return projs
+
+
+def _non_mvm_macs_per_token(cfg: ModelConfig, ctx_len: int) -> float:
+    """Score/value products and recurrent updates per token, per
+    superblock — compute that cannot sit in an IMC array."""
+    d = cfg.d_model
+    total = 0.0
+    for pos, kind in enumerate(cfg.pattern):
+        if kind == "attn":
+            a = cfg.attn
+            window = a.sliding_window or ctx_len
+            span = ctx_len if cfg.layer_is_global_attn(pos) else \
+                min(window, ctx_len)
+            total += 2.0 * span * a.n_heads * a.head_dim
+        elif kind == "mla":
+            m = cfg.mla
+            total += 2.0 * ctx_len * m.n_heads * (m.qk_dim + m.v_dim) / 2
+        elif kind == "mamba":
+            c = cfg.mamba
+            total += 4.0 * c.d_inner(d) * c.d_state
+        elif kind == "rwkv6":
+            total += 3.0 * d * (cfg.rwkv.head_dim)
+    return total
+
+
+def lm_block_spec(cfg: ModelConfig, ctx_len: int = 4096) -> LMBlockSpec:
+    return LMBlockSpec(
+        name=cfg.name, d_model=cfg.d_model, n_layers=cfg.n_layers,
+        projections=tuple(_superblock_projections(cfg)),
+        non_mvm_macs_per_token=_non_mvm_macs_per_token(cfg, ctx_len))
+
+
+def lm_imc_workloads(cfg: ModelConfig, tokens: int,
+                     w_prec: int = 4, i_prec: int = 4) -> list[Layer]:
+    """Dense workloads for ONE superblock (multiply results by
+    cfg.n_super for whole-model numbers)."""
+    spec = lm_block_spec(cfg)
+    return [dense(name, tokens * calls, fin, fout,
+                  w_prec=w_prec, i_prec=i_prec)
+            for (name, fin, fout, calls) in spec.projections]

@@ -1,0 +1,215 @@
+"""Spatial/temporal mapping of 8-nested-loop layers onto IMC macros
+(paper Sec. II-A, Fig. 2).
+
+Spatial unrolling rules from the paper:
+
+* **columns** (D1, weight words per row): the K loop — irrelevant for
+  inputs, so one input broadcast along a wordline feeds many outputs;
+* **rows** (R, accumulation axis): the C / FX / FY loops — irrelevant
+  for outputs, so products accumulate on the bitline / adder tree;
+* **macros**: OX / OY / G (weight duplication across macros) and K
+  (weight split, no duplication) — paper Sec. II-A & VI.
+
+The temporal schedule is weight-stationary (the IMC-natural choice): a
+weight tile is written once and all B*OX*OY input vectors stream
+through it; partial sums spill to the outer memory when the
+accumulation depth C*FX*FY exceeds the rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Mapping
+
+from .energy import EnergyBreakdown, MacroTile, tile_energy
+from .hardware import IMCMacro
+from .workloads import Layer
+
+COL_DIMS = ("K",)
+ROW_DIMS = ("C", "FX", "FY")
+MACRO_DUP_DIMS = ("OX", "OY", "G")    # duplication: weights copied per macro
+MACRO_SPLIT_DIMS = ("K",)             # split: different weights per macro
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialMapping:
+    """Unroll factors per loop dim for each physical axis."""
+
+    cols: Mapping[str, int]
+    rows: Mapping[str, int]
+    macros: Mapping[str, int]
+
+    def col_unroll(self) -> int:
+        return math.prod(self.cols.values()) if self.cols else 1
+
+    def row_unroll(self) -> int:
+        return math.prod(self.rows.values()) if self.rows else 1
+
+    def macro_unroll(self) -> int:
+        return math.prod(self.macros.values()) if self.macros else 1
+
+    def unroll_of(self, dim: str) -> int:
+        return (self.cols.get(dim, 1) * self.rows.get(dim, 1)
+                * self.macros.get(dim, 1))
+
+    def describe(self) -> str:
+        fmt = lambda m: ",".join(f"{k}:{v}" for k, v in m.items()) or "-"
+        return (f"cols[{fmt(self.cols)}] rows[{fmt(self.rows)}] "
+                f"macros[{fmt(self.macros)}]")
+
+
+def is_legal(layer: Layer, macro: IMCMacro, sm: SpatialMapping) -> bool:
+    if sm.col_unroll() > macro.d1 or sm.row_unroll() > macro.rows:
+        return False
+    if sm.macro_unroll() > macro.n_macros:
+        return False
+    for dims, allowed in ((sm.cols, COL_DIMS), (sm.rows, ROW_DIMS),
+                          (sm.macros, MACRO_DUP_DIMS + MACRO_SPLIT_DIMS)):
+        for d, u in dims.items():
+            if d not in allowed or u < 1:
+                return False
+    for d in set(list(sm.cols) + list(sm.rows) + list(sm.macros)):
+        if sm.unroll_of(d) > layer.dim(d):
+            return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingCost:
+    """Full cost of one layer under one spatial mapping."""
+
+    mapping: SpatialMapping
+    macro_energy: EnergyBreakdown        # datapath energy (Eq. 1-11)
+    weight_tiles: int                    # distinct weight tiles written
+    inputs_per_tile: int                 # input vectors streamed per tile
+    cycles: float                        # latency in macro cycles
+    spatial_utilization: float           # fraction of array cells doing MACs
+    # outer-memory traffic in bits (memory.py prices it):
+    weight_bits: float
+    input_bits: float
+    output_bits: float
+    psum_bits: float
+
+    @property
+    def total_traffic_bits(self) -> float:
+        return self.weight_bits + self.input_bits + self.output_bits \
+            + self.psum_bits
+
+
+def evaluate(layer: Layer, macro: IMCMacro, sm: SpatialMapping,
+             alpha: float | None = None) -> MappingCost:
+    """Cost one layer under one spatial mapping (weight-stationary)."""
+    from .energy import DEFAULT_ALPHA
+    alpha = DEFAULT_ALPHA if alpha is None else alpha
+
+    k_cols = sm.cols.get("K", 1)
+    k_macros = sm.macros.get("K", 1)
+    row_un = sm.row_unroll()
+    dup_macros = math.prod(v for d, v in sm.macros.items()
+                           if d in MACRO_DUP_DIMS) or 1
+
+    # --- tiling counts --------------------------------------------------------
+    n_k_tiles = math.ceil(layer.dim("K") / (k_cols * k_macros))
+    n_acc_tiles = math.ceil(layer.accumulation_depth / row_un)
+    # temporal iterations of the duplicated spatial dims
+    n_spatial_temporal = 1
+    spatial_total = 1
+    for d in MACRO_DUP_DIMS:
+        u = sm.macros.get(d, 1)
+        n_spatial_temporal *= math.ceil(layer.dim(d) / u)
+        spatial_total *= layer.dim(d)
+    weight_tiles = n_k_tiles * n_acc_tiles            # per duplicated macro set
+    inputs_per_tile = layer.dim("B") * n_spatial_temporal
+
+    # --- per-tile energy (all macros of the duplicated set together) ----------
+    rows_used = min(row_un, layer.accumulation_depth)
+    cols_used = min(k_cols, layer.dim("K"))
+    tile = MacroTile(n_inputs=inputs_per_tile, rows_used=rows_used,
+                     cols_used=cols_used, weight_loads=1)
+    active_macros = k_macros * dup_macros
+    e_tile = tile_energy(macro, tile, alpha=alpha).scaled(active_macros)
+    macro_energy = e_tile.scaled(weight_tiles)
+
+    # --- utilization -----------------------------------------------------------
+    useful_macs = layer.macs
+    occupied = (rows_used * cols_used * macro.bw * active_macros
+                * weight_tiles * inputs_per_tile)
+    capacity = (macro.rows * macro.cols * macro.n_macros
+                * weight_tiles * inputs_per_tile)
+    spatial_utilization = occupied / capacity
+
+    # --- latency ---------------------------------------------------------------
+    cc_per_input = (macro.cc_bs * macro.adc_share if macro.analog
+                    else macro.cc_bs * macro.m_mux)
+    write_cycles = rows_used * weight_tiles           # one row write per cycle
+    cycles = weight_tiles * inputs_per_tile * cc_per_input + write_cycles
+
+    # --- outer-memory traffic ----------------------------------------------------
+    # Weights: each element enters the macro once (weight-stationary),
+    # duplicated dup_macros times (paper: OX/OY/G duplication cost).
+    weight_bits = layer.weight_elems * layer.w_prec * dup_macros
+    # Inputs: refetched once per temporal K tile (columns already share).
+    input_bits = layer.input_elems * layer.i_prec * n_k_tiles
+    # Outputs written once...
+    output_bits = layer.output_elems * layer.psum_prec
+    # ...plus partial-sum spill/refill when the accumulation is split.
+    psum_bits = (layer.output_elems * layer.psum_prec
+                 * 2 * max(0, n_acc_tiles - 1))
+    return MappingCost(
+        mapping=sm, macro_energy=macro_energy, weight_tiles=weight_tiles,
+        inputs_per_tile=inputs_per_tile, cycles=cycles,
+        spatial_utilization=spatial_utilization, weight_bits=weight_bits,
+        input_bits=input_bits, output_bits=output_bits, psum_bits=psum_bits)
+
+
+# --------------------------------------------------------------------------- #
+# mapping enumeration                                                          #
+# --------------------------------------------------------------------------- #
+def _unroll_candidates(dim_size: int, cap: int) -> list[int]:
+    """Candidate unroll factors: powers of two plus the exact bounds."""
+    cap = max(1, min(dim_size, cap))
+    cands = {1, cap}
+    p = 2
+    while p < cap:
+        cands.add(p)
+        p *= 2
+    if dim_size <= cap:
+        cands.add(dim_size)
+    return sorted(cands)
+
+
+def enumerate_mappings(layer: Layer, macro: IMCMacro,
+                       max_candidates: int = 4096) -> Iterator[SpatialMapping]:
+    """Enumerate legal spatial mappings (bounded powers-of-two lattice)."""
+    k = layer.dim("K")
+    count = 0
+    for k_col in _unroll_candidates(k, macro.d1):
+        # rows: greedy lattice over C, FX, FY
+        row_opts = []
+        for c_un in _unroll_candidates(layer.dim("C"), macro.rows):
+            rem = macro.rows // c_un
+            for fx_un in _unroll_candidates(layer.dim("FX"), rem):
+                rem2 = rem // fx_un
+                for fy_un in _unroll_candidates(layer.dim("FY"), rem2):
+                    row_opts.append({"C": c_un, "FX": fx_un, "FY": fy_un})
+        for rows in row_opts:
+            # macros: either split K further, or duplicate over OX/OY/G
+            macro_opts: list[dict[str, int]] = [{}]
+            if macro.n_macros > 1:
+                for d in MACRO_DUP_DIMS:
+                    for u in _unroll_candidates(layer.dim(d), macro.n_macros):
+                        if u > 1:
+                            macro_opts.append({d: u})
+                for u in _unroll_candidates(
+                        max(1, k // k_col), macro.n_macros):
+                    if u > 1:
+                        macro_opts.append({"K": u})
+            for mac in macro_opts:
+                sm = SpatialMapping(cols={"K": k_col}, rows=dict(rows),
+                                    macros=mac)
+                if is_legal(layer, macro, sm):
+                    yield sm
+                    count += 1
+                    if count >= max_candidates:
+                        return

@@ -1,0 +1,138 @@
+"""Mesh-DSE: the paper's mapping methodology applied to the TPU pod
+(DESIGN.md §2 analogy table, made executable).
+
+Exactly like ``dse.best_mapping`` enumerates spatial unrollings of a
+layer over an IMC array and prices each with the analytical energy
+model, ``choose_plan`` enumerates parallelism plans (the pod's "spatial
+mappings") and prices each with the three-term roofline model:
+
+    t_step ~= max(t_compute, t_memory, t_collective)     s.t. state fits
+
+The collective estimates are napkin closed forms per plan (derived in
+EXPERIMENTS.md §Perf, validated against dry-run-measured collective
+bytes); the winner is then *confirmed* by an actual lower+compile
+dry-run — hypothesis -> measure, the loop the brief prescribes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.common import PLANS
+from repro.roofline import _specs_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEstimate:
+    plan: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hbm_gb: float
+    fits: bool
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def estimate_plan(cfg, shape, plan: str, chips: int = 256,
+                  data_axis: int = 16, model_axis: int = 16,
+                  peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                  ici_bw: float = 50e9, hbm_bytes: float = 16e9,
+                  remat_factor: float = 4.0 / 3.0) -> PlanEstimate:
+    """Closed-form three-term estimate of one (plan, arch, shape)."""
+    from repro import roofline as _rl
+    from repro.launch.steps import make_opt_config
+    from repro.runtime import optim
+
+    param_b = _specs_bytes(cfg.param_specs())
+    opt_b = _specs_bytes(optim.state_specs(cfg.param_specs(),
+                                           make_opt_config(cfg)))
+    grad_b = param_b
+    tokens = shape.global_batch * shape.seq_len
+    act_elem = jnp.dtype(cfg.compute_dtype).itemsize
+    d = cfg.d_model
+    act_b = cfg.n_layers * tokens * d * act_elem     # residual stream/layer
+
+    model_fl = _rl.model_flops(cfg, shape)
+    compute_s = model_fl * remat_factor / (chips * peak_flops)
+
+    if plan == "ep_dp":
+        # experts sharded over (model x data); attention/dense DP+ZeRO-3.
+        # No per-layer residual TP exchange; pay expert-weight gathers
+        # over the data axis + the DP-grid -> EP-grid token exchange.
+        if cfg.moe is None:
+            # degenerates to dp_fsdp with no benefit; never prefer it
+            e = estimate_plan(cfg, shape, "dp_fsdp", chips=chips,
+                              data_axis=data_axis, model_axis=model_axis,
+                              peak_flops=peak_flops, hbm_bw=hbm_bw,
+                              ici_bw=ici_bw, hbm_bytes=hbm_bytes,
+                              remat_factor=remat_factor)
+            return dataclasses.replace(e, plan="ep_dp",
+                                       collective_s=e.collective_s * 1.01)
+        state_per_chip = (param_b + opt_b + grad_b) / chips
+        n_moe = cfg.n_layers // cfg.moe.every
+        dispatch = (2.0 * 3.0 * n_moe * tokens * d * act_elem
+                    * cfg.moe.capacity_factor * cfg.moe.top_k / data_axis)
+        coll_bytes = (3.0 * param_b / model_axis
+                      * (data_axis - 1) / data_axis + dispatch
+                      + 2.0 * grad_b / chips)
+        state_traffic = (3 * param_b + 2 * opt_b) / data_axis
+        act_per_chip = 4 * act_b / chips
+        mem_bytes_step = state_traffic + 8 * act_b / chips
+        return PlanEstimate(
+            plan=plan, compute_s=compute_s,
+            memory_s=mem_bytes_step / hbm_bw,
+            collective_s=coll_bytes / ici_bw,
+            hbm_gb=(state_per_chip + act_per_chip) / 1e9,
+            fits=(state_per_chip + act_per_chip) < hbm_bytes * 0.9)
+
+    if plan == "ddp":
+        # params/opt replicated, grads ring-all-reduced (~2x payload/dev)
+        state_per_chip = param_b + opt_b + grad_b
+        coll_bytes = 2.0 * grad_b
+        state_traffic = 3 * param_b + 2 * opt_b          # per chip (local)
+    elif plan == "dp_fsdp":
+        # params sharded over the data axis only; gathered fwd+remat+bwd
+        state_per_chip = (param_b + opt_b + grad_b) / data_axis
+        coll_bytes = 3.0 * param_b * (data_axis - 1) / data_axis \
+            + 2.0 * grad_b / data_axis
+        state_traffic = 3 * param_b + 2 * opt_b / data_axis
+    else:  # "2d"
+        # fully sharded state; per-layer TP activation exchange:
+        # one all-gather + one all-reduce of the (tokens/dp, d) residual
+        # per mixer/FFN pair, x3 passes, + FSDP param gathers, + (MoE)
+        # the same DP->EP dispatch exchange ep_dp pays
+        state_per_chip = (param_b + opt_b + grad_b) / chips
+        act_layer = tokens * d * act_elem / data_axis
+        coll_bytes = (3.0 * 2.0 * cfg.n_layers * act_layer
+                      + 3.0 * param_b / chips * (data_axis - 1))
+        if cfg.moe is not None:
+            n_moe = cfg.n_layers // cfg.moe.every
+            coll_bytes += (2.0 * 3.0 * n_moe * tokens * d * act_elem
+                           * cfg.moe.capacity_factor * cfg.moe.top_k
+                           / data_axis)
+        state_traffic = (3 * param_b + 2 * opt_b) / data_axis
+    act_per_chip = 4 * act_b / chips
+    mem_bytes_step = state_traffic + 8 * act_b / chips
+
+    return PlanEstimate(
+        plan=plan,
+        compute_s=compute_s,
+        memory_s=mem_bytes_step / hbm_bw,
+        collective_s=coll_bytes / ici_bw,
+        hbm_gb=(state_per_chip + act_per_chip) / 1e9,
+        fits=(state_per_chip + act_per_chip) < hbm_bytes * 0.9)
+
+
+def choose_plan(cfg, shape, chips: int = 256, **kw) -> PlanEstimate:
+    """argmin over plans, feasibility-constrained (like the mapping DSE
+    discards unrollings that do not fit the array)."""
+    cands = [estimate_plan(cfg, shape, p, chips=chips, **kw)
+             for p in PLANS]
+    feasible = [c for c in cands if c.fits]
+    pool = feasible or cands
+    return min(pool, key=lambda c: c.step_s)

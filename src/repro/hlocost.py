@@ -1,0 +1,268 @@
+"""Analytical cost extraction from optimized (post-SPMD) HLO text.
+
+Why this exists: the XLA *CPU* backend's ``compiled.cost_analysis()``
+does not multiply while-loop bodies by their trip counts, so for
+scan-over-layers models it underreports FLOPs/bytes/collectives by
+~n_layers x (verified empirically; see EXPERIMENTS.md §Dry-run).  This
+module rebuilds the three roofline inputs from the HLO text itself:
+
+* **FLOPs** — every ``dot``/``dot_general`` contributes
+  2 x prod(result shape) x prod(contracting dim sizes) (batch dims are
+  part of the result; convolutions are not used by these models).
+* **HBM bytes** — every *top-level* instruction of a computation reads
+  its operands and writes its result once (fusion interiors live in
+  VMEM/registers and are skipped): a standard post-fusion traffic
+  proxy.
+* **collective bytes** — result-shape payloads per collective op.
+
+Costs are accumulated per computation, then the call graph is walked
+from ENTRY with multipliers: ``while`` bodies/conditions multiply by
+the ``known_trip_count`` annotation XLA emits for scan loops; fusion /
+call / conditional sites multiply by 1.
+
+All numbers are per device (the SPMD module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8.0, "f32": 4.0, "f16": 2.0, "bf16": 2.0,
+    "f8e4m3fn": 1.0, "f8e5m2": 1.0,
+    "s64": 8.0, "u64": 8.0, "s32": 4.0, "u32": 4.0,
+    "s16": 2.0, "u16": 2.0, "s8": 1.0, "u8": 1.0,
+    "s4": 0.5, "u4": 0.5, "pred": 1.0, "c64": 8.0, "c128": 16.0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+#: ops that move no HBM bytes: views, tuple plumbing, metadata
+_NO_TRAFFIC_OPS = frozenset({
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "token", "reshape", "transpose", "iota", "rng-state",
+    "partition-id", "replica-id", "domain", "opt-barrier",
+})
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# result shape is either a parenthesized tuple (may contain '=' inside
+# /*index=N*/ comments) or a single space-free token
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+                     r"(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_CALLEE_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_\w+)="
+                        r"%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _dims(shape_txt: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_txt):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype,
+                        [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shape_txt: str) -> float:
+    total = 0.0
+    for dtype, dims in _dims(shape_txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: [0.0, 0]))
+    # call sites: list of (callee_name, multiplier)
+    calls: list = dataclasses.field(default_factory=list)
+
+
+def _parse_computations(hlo: str) -> dict[str, CompCost]:
+    comps: dict[str, CompCost] = {}
+    cur: CompCost | None = None
+    cur_shapes: dict[str, str] = {}
+    entry_name = None
+
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("->" in line) \
+                and line.rstrip().endswith("{"):
+            # computation header: "%name (params...) -> type {" — params
+            # may nest parens, so just take the first token.
+            head = line.strip()
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].strip()
+            name = head.split()[0].split("(")[0].lstrip("%")
+            if name:
+                cur = comps.setdefault(name, CompCost())
+                cur_shapes = {}
+                if is_entry:
+                    entry_name = name
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_txt, op = m.group(1), m.group(2), m.group(3)
+        cur_shapes[name] = shape_txt
+        res_bytes = _bytes_of(shape_txt)
+
+        # ---- call sites ---------------------------------------------------
+        if op in ("while",):
+            tm = _TRIP_RE.search(line)
+            trips = int(tm.group(1)) if tm else 1
+            for callee in _CALLEE_RE.findall(line):
+                cur.calls.append((callee, trips, True))
+            # while reads+writes its carry each iteration: count the
+            # carry traffic once (buffers are donated/aliased in steady
+            # state and the body's own ops account for touches).
+            continue
+        if op in ("fusion", "call", "conditional", "custom-call",
+                  "async-start", "async-done"):
+            # fusion interiors execute in registers/VMEM: recurse for
+            # FLOPs/collectives but NOT bytes (the call site is one read
+            # of operands + one write of the result).
+            include_bytes = op != "fusion"
+            for callee in _CALLEE_RE.findall(line):
+                cur.calls.append((callee, 1, include_bytes))
+            if op == "fusion":
+                operands = _OPERAND_RE.findall(
+                    line.split("(", 1)[1].split(")", 1)[0])
+                op_bytes = [_bytes_of(cur_shapes.get(o, ""))
+                            for o in operands]
+                if "dynamic-update-slice" in name or \
+                        "dynamic_update_slice" in name:
+                    # in-place accumulator update: the big aliased
+                    # operand is read/written only at the slice; charge
+                    # ~3 slice-sized accesses (read update, r/w slice)
+                    big = max(op_bytes) if op_bytes else 0.0
+                    cur.bytes += 3.0 * (sum(op_bytes) - big)
+                else:
+                    cur.bytes += res_bytes + sum(op_bytes)
+            continue
+
+        # ---- collectives ----------------------------------------------------
+        base = op.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVE_OPS:
+            if op.endswith("-done"):
+                continue
+            per = []
+            for dtype, dims in _dims(shape_txt):
+                n = 1
+                for d in dims:
+                    n *= d
+                per.append(n * _DTYPE_BYTES[dtype])
+            if not per:
+                continue
+            payload = max(per) if op.endswith("-start") else sum(per)
+            cur.coll_bytes += payload
+            cur.coll_by_kind[base][0] += payload
+            cur.coll_by_kind[base][1] += 1
+            cur.bytes += payload
+            continue
+
+        # ---- dots ------------------------------------------------------------
+        if op in ("dot", "dot-general", "dot_general"):
+            cdims = _CONTRACT_RE.search(line)
+            operands = _OPERAND_RE.findall(
+                line.split("(", 1)[1].split(")", 1)[0])
+            k = 1
+            if cdims and operands:
+                lhs_shape = cur_shapes.get(operands[0], "")
+                parsed = _dims(lhs_shape)
+                if parsed:
+                    ldims = parsed[0][1]
+                    for ci in cdims.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            k *= ldims[int(ci)]
+            n_res = 1
+            for _, dims in _dims(shape_txt):
+                for d in dims:
+                    n_res *= d
+                break
+            cur.flops += 2.0 * n_res * k
+            cur.bytes += res_bytes + sum(
+                _bytes_of(cur_shapes.get(o, "")) for o in operands[:2])
+            continue
+
+        # ---- everything else at top level: traffic only ----------------------
+        if op in _NO_TRAFFIC_OPS:
+            continue
+        operands = []
+        if "(" in line:
+            operands = _OPERAND_RE.findall(
+                line.split("(", 1)[1].split(")", 1)[0])
+        if op == "dynamic-slice":
+            # reads only the slice (the result), not the whole operand
+            cur.bytes += 2 * res_bytes
+            continue
+        if op == "dynamic-update-slice":
+            # in-place aliased: reads + writes the update slice only
+            upd = _bytes_of(cur_shapes.get(operands[1], "")) \
+                if len(operands) > 1 else res_bytes
+            cur.bytes += 2 * upd
+            continue
+        cur.bytes += res_bytes + sum(
+            _bytes_of(cur_shapes.get(o, "")) for o in operands[:4])
+
+    comps["__entry__"] = comps.get(entry_name, CompCost()) \
+        if entry_name else CompCost()
+    if entry_name:
+        comps["__entry_name__"] = entry_name  # type: ignore
+    return comps
+
+
+def analyze(hlo: str) -> dict:
+    """Total per-device flops / bytes / collective bytes, loop-aware."""
+    comps = _parse_computations(hlo)
+    entry = comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "collectives": {}}
+
+    memo: dict[str, tuple[float, float, float, dict]] = {}
+
+    def total(name: str, stack=()) -> tuple[float, float, float, dict]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, 0.0, {})
+        c = comps[name]
+        f, b, cb = c.flops, c.bytes, c.coll_bytes
+        kinds: dict[str, list] = {k: list(v)
+                                  for k, v in c.coll_by_kind.items()}
+        for callee, mult, include_bytes in c.calls:
+            cf, cby, ccb, ck = total(callee, stack + (name,))
+            f += mult * cf
+            b += mult * cby * (1.0 if include_bytes else 0.0)
+            cb += mult * ccb
+            for k, (kb, kn) in ck.items():
+                cur = kinds.setdefault(k, [0.0, 0])
+                cur[0] += mult * kb
+                cur[1] += mult * kn
+        memo[name] = (f, b, cb, kinds)
+        return memo[name]
+
+    f, b, cb, kinds = total(entry)
+    return {
+        "flops": f, "bytes": b, "collective_bytes": cb,
+        "collectives": {k: {"bytes": v[0], "count": v[1]}
+                        for k, v in kinds.items()},
+    }

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the in-array MVM.
+
+    dimc_mvm.py  bit-parallel-weight / bit-serial-input integer MVM —
+                 bit-true vs the digital adder tree (pl.pallas_call,
+                 MXU-aligned BlockSpecs, K-innermost accumulation)
+    aimc_mvm.py  charge-domain MVM with per-array-tile ADC clipping /
+                 quantization (the paper's AIMC accuracy cost, made
+                 functional)
+    ops.py       jit'd wrappers (interpret=True off-TPU) + float<->int
+                 quantization + the QAT straight-through linear
+    ref.py       pure-jnp oracles the kernels are tested against
+
+Hardware adaptation notes: DESIGN.md §3.
+"""
+
+from .ops import aimc_matmul, dimc_matmul, imc_linear_sim  # noqa: F401

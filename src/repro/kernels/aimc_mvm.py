@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: AIMC charge-domain MVM with ADC quantization.
+
+TPU-native rethink of the paper's AIMC datapath (DESIGN.md §3): there
+is no charge-sharing analogue on the MXU, so the kernel reproduces the
+*information flow*: per weight-bit-plane bitline sums over the array
+depth (one MXU pass per plane), an ADC fake-quantization of each
+partial sum over the bitline's dynamic range (VPU epilogue), then
+shift-add recombination and cross-tile digital accumulation.
+
+The K grid axis tiles the reduction at exactly ``rows`` — the physical
+array depth — because that is the granularity at which the ADC clips
+and quantizes; making bk != rows would change the semantics, not just
+the schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _aimc_kernel(x_ref, w_ref, o_ref, *, bi: int, bw: int, adc_res: int,
+                 rows: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xt = x_ref[...].astype(jnp.float32)           # DAC levels in [0, 2^bi-1]
+    w = w_ref[...].astype(jnp.int32)
+    uw = w & ((1 << bw) - 1)
+
+    full_scale = float(rows * (2 ** bi - 1))      # bitline dynamic range
+    n_codes = float(2 ** adc_res - 1)
+    lsb = full_scale / n_codes
+
+    acc = jnp.zeros_like(o_ref)
+    for j in range(bw):                            # one bitline per weight bit
+        wp = ((uw >> j) & 1).astype(jnp.float32)
+        psum = jax.lax.dot_general(                # analog accumulation
+            xt, wp, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        code = jnp.clip(jnp.round(psum / lsb), 0.0, n_codes)   # ADC
+        sj = -(1 << j) if j == bw - 1 else (1 << j)
+        acc = acc + sj * (code * lsb)              # shift-add recombine
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bi", "bw", "adc_res", "rows", "bm", "bn", "interpret"))
+def aimc_mvm(x: jax.Array, w: jax.Array, *, bi: int = 4, bw: int = 4,
+             adc_res: int = 6, rows: int = 256, bm: int = 128,
+             bn: int = 128, interpret: bool = False) -> jax.Array:
+    """AIMC MVM: x (M,K) uint levels, w (K,N) signed int -> (M,N) f32.
+
+    K must be processed in tiles of ``rows`` (ADC conversion boundary);
+    K is padded up to a multiple of ``rows`` with zero contribution —
+    zero cells leave the bitline charge unchanged, matching unused rows.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn = min(bm, m), min(bn, n)
+    if k % rows:
+        pad = rows - k % rows
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        k = k + pad
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), k // rows)
+    kernel = functools.partial(_aimc_kernel, bi=bi, bw=bw,
+                               adc_res=adc_res, rows=rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, rows), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((rows, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,112 @@
+"""Public jit'd wrappers for the IMC execution kernels.
+
+``interpret`` mode is selected automatically: on anything that is not a
+real TPU the kernel body runs through the Pallas interpreter (exact
+same semantics, Python-level execution), so the whole library is
+CPU-testable while targeting TPU.
+
+Also provides the float<->integer quantization plumbing used by
+``repro.core.imc_sim`` for IMC-simulated linear layers (QAT with a
+straight-through estimator).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .aimc_mvm import aimc_mvm
+from .dimc_mvm import dimc_mvm
+from . import ref as ref  # noqa: F401  (re-exported oracle)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def dimc_matmul(x: jax.Array, w: jax.Array, *, bi: int = 8, bw: int = 8,
+                signed_inputs: bool = True, interpret: bool | None = None,
+                **block_kw) -> jax.Array:
+    """Exact BPBS integer matmul (DIMC semantics), int32 result."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return dimc_mvm(x, w, bi=bi, bw=bw, signed_inputs=signed_inputs,
+                    interpret=interpret, **block_kw)
+
+
+def aimc_matmul(x: jax.Array, w: jax.Array, *, bi: int = 4, bw: int = 4,
+                adc_res: int = 6, rows: int = 256,
+                interpret: bool | None = None, **block_kw) -> jax.Array:
+    """AIMC matmul with per-array-tile ADC quantization, float32 result."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return aimc_mvm(x, w, bi=bi, bw=bw, adc_res=adc_res, rows=rows,
+                    interpret=interpret, **block_kw)
+
+
+# --------------------------------------------------------------------------- #
+# float <-> integer quantization for IMC-simulated layers                      #
+# --------------------------------------------------------------------------- #
+def quantize_symmetric(x: jax.Array, bits: int,
+                       axis: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Symmetric linear quantization to signed ``bits``; returns (q, scale)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32), scale
+
+
+def quantize_unsigned(x: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """Asymmetric-free unsigned quantization (post-activation tensors)."""
+    qmax = 2.0 ** bits - 1.0
+    amax = jnp.max(jnp.maximum(x, 0.0))
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), 0.0, qmax)
+    return q.astype(jnp.int32), scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def imc_linear_sim(x: jax.Array, w: jax.Array, mode: str = "dimc",
+                   bi: int = 8, bw: int = 8, adc_res: int = 6) -> jax.Array:
+    """IMC-simulated float linear layer y = x @ w.
+
+    Forward runs the quantized IMC kernel (exact DIMC or ADC-noisy
+    AIMC); backward is a straight-through estimator w.r.t. the float
+    operands — the standard QAT arrangement, enabling training *through*
+    the IMC's quantization/clipping noise.
+    """
+    xq, sx = quantize_symmetric(x, bi)
+    wq, sw = quantize_symmetric(w, bw)
+    if mode == "dimc":
+        y = dimc_matmul(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                        bi=bi, bw=bw).astype(jnp.float32)
+    elif mode == "aimc":
+        # Differential (two-phase) signed-activation handling, as real
+        # AIMC macros do: y = A(x+) - A(x-) with unsigned DAC levels in
+        # each phase — avoids burning half the bitline dynamic range on
+        # an offset.  Array depth tracks the actual reduction length.
+        rows = min(256, x.shape[-1])
+        xq32 = xq.astype(jnp.int32)
+        wq32 = wq.astype(jnp.int32)
+        y_pos = aimc_matmul(jnp.maximum(xq32, 0), wq32, bi=bi - 1, bw=bw,
+                            adc_res=adc_res, rows=rows)
+        y_neg = aimc_matmul(jnp.maximum(-xq32, 0), wq32, bi=bi - 1, bw=bw,
+                            adc_res=adc_res, rows=rows)
+        y = y_pos - y_neg
+    else:
+        raise ValueError(mode)
+    return y * sx * sw
+
+
+def _imc_fwd(x, w, mode, bi, bw, adc_res):
+    y = imc_linear_sim(x, w, mode, bi, bw, adc_res)
+    return y, (x, w)
+
+
+def _imc_bwd(mode, bi, bw, adc_res, resids, g):
+    x, w = resids
+    return (g @ w.T, x.T @ g)     # straight-through estimator
+
+
+imc_linear_sim.defvjp(_imc_fwd, _imc_bwd)

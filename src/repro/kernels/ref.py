@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for the IMC execution kernels.
+
+These define the *semantics* the Pallas kernels must match bit-true:
+
+* ``dimc_mvm_ref`` — DIMC bit-parallel-weight / bit-serial-input (BPBS)
+  integer MVM with digital adder-tree accumulation.  Mathematically this
+  equals an exact int32 matmul; the reference computes it through the
+  explicit bit-plane decomposition to pin down two's-complement handling.
+* ``aimc_mvm_ref`` — AIMC charge-domain MVM: per weight-bit-plane the
+  bitline accumulates an analog sum over ``rows`` cells, which an
+  ``adc_res``-bit ADC quantizes over the bitline's full dynamic range
+  before the digital shift-add recombination (paper Sec. IV-C).  The
+  quantization error introduced here is AIMC's accuracy cost — the
+  knob the paper trades against energy.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weight_bit_planes(w: jnp.ndarray, bw: int) -> list[jnp.ndarray]:
+    """Two's-complement bit planes of an int weight tensor.
+
+    ``w = -2^(bw-1) * p[bw-1] + sum_j 2^j * p[j]`` with ``p[j] in {0,1}``.
+    """
+    uw = w.astype(jnp.int32) & ((1 << bw) - 1)
+    return [((uw >> j) & 1).astype(jnp.int32) for j in range(bw)]
+
+
+def input_bit_planes(x: jnp.ndarray, bi: int, signed: bool) -> list[jnp.ndarray]:
+    ux = x.astype(jnp.int32) & ((1 << bi) - 1)
+    planes = [((ux >> j) & 1).astype(jnp.int32) for j in range(bi)]
+    return planes
+
+
+def _plane_weight(j: int, bits: int, signed: bool) -> int:
+    if signed and j == bits - 1:
+        return -(1 << j)
+    return 1 << j
+
+
+def dimc_mvm_ref(x: jnp.ndarray, w: jnp.ndarray, bi: int, bw: int,
+                 signed_inputs: bool = True) -> jnp.ndarray:
+    """Exact BPBS integer MVM: x (M,K) int, w (K,N) int -> (M,N) int32.
+
+    Inputs stream bit-serially (bi planes), weights sit bit-parallel
+    (bw planes wired to the multiplier gates); every (input-bit,
+    weight-plane) partial product is accumulated by the adder tree.
+    """
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    w_planes = weight_bit_planes(w, bw)
+    x_planes = input_bit_planes(x, bi, signed_inputs)
+    for i, xp in enumerate(x_planes):
+        si = _plane_weight(i, bi, signed_inputs)
+        for j, wp in enumerate(w_planes):
+            sj = _plane_weight(j, bw, True)
+            acc = acc + si * sj * (xp @ wp)
+    return acc
+
+
+def aimc_adc_quantize(psum: jnp.ndarray, rows: int, bi_levels: int,
+                      adc_res: int) -> jnp.ndarray:
+    """Quantize a bitline partial sum to the ADC's code grid.
+
+    The bitline dynamic range is [0, rows * bi_levels] (every cell
+    contributes at most the DAC full-scale); the ADC spreads 2^adc_res
+    codes across it.  Returns the *dequantized* value (a multiple of the
+    LSB), i.e. quantization error only, no scaling.
+    """
+    full_scale = float(rows * bi_levels)
+    n_codes = float(2 ** adc_res - 1)
+    lsb = full_scale / n_codes
+    code = jnp.clip(jnp.round(psum / lsb), 0.0, n_codes)
+    return code * lsb
+
+
+def aimc_mvm_ref(x: jnp.ndarray, w: jnp.ndarray, bi: int, bw: int,
+                 adc_res: int, rows: int) -> jnp.ndarray:
+    """AIMC charge-domain MVM: x (M,K) uint levels in [0, 2^bi-1],
+    w (K,N) signed int in [-2^(bw-1), 2^(bw-1)-1] -> (M,N) float32.
+
+    K is processed in tiles of ``rows`` (the physical array depth): each
+    tile's per-weight-bit partial sum goes through one ADC conversion
+    before shift-add recombination and cross-tile digital accumulation.
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    bi_levels = 2 ** bi - 1
+    acc = jnp.zeros((m, n), jnp.float32)
+    w_planes = weight_bit_planes(w, bw)
+    for k0 in range(0, k, rows):
+        k1 = min(k0 + rows, k)
+        xt = x[:, k0:k1].astype(jnp.float32)
+        tile = jnp.zeros((m, n), jnp.float32)
+        for j, wp in enumerate(w_planes):
+            psum = xt @ wp[k0:k1].astype(jnp.float32)
+            q = aimc_adc_quantize(psum, rows, bi_levels, adc_res)
+            tile = tile + _plane_weight(j, bw, True) * q
+        acc = acc + tile
+    return acc
+
+
+def matmul_int_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain exact integer matmul (what DIMC must equal)."""
+    return (x.astype(jnp.int32) @ w.astype(jnp.int32)).astype(jnp.int32)

@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell,
+prove it fits (memory_analysis) and extract roofline terms
+(cost_analysis + collective parse).  Brief: MULTI-POD DRY-RUN steps 3-4.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k --mesh single --out experiments/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+from repro import configs, hlocost, roofline  # noqa: E402
+from repro.launch import mesh as mesh_mod  # noqa: E402
+from repro.launch.steps import build_step  # noqa: E402
+from repro.models.common import Dist  # noqa: E402
+
+
+VARIANTS = {
+    "save_moe": lambda c: __import__("dataclasses").replace(
+        c, remat_policy="save_moe"),
+    "save_dots": lambda c: __import__("dataclasses").replace(
+        c, remat_policy="save_dots"),
+    "bf16params": lambda c: __import__("dataclasses").replace(
+        c, param_dtype=__import__("jax.numpy", fromlist=["x"]).bfloat16),
+    "cap1": lambda c: __import__("dataclasses").replace(
+        c, moe=__import__("dataclasses").replace(c.moe,
+                                                 capacity_factor=1.0)),
+    "wkv_chunked": lambda c: __import__("dataclasses").replace(
+        c, wkv_chunked=True),
+    "mb4": lambda c: __import__("dataclasses").replace(c, grad_accum=4),
+    "mb8": lambda c: __import__("dataclasses").replace(c, grad_accum=8),
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: Path, verbose: bool = True,
+             plan: str = "2d", variants: tuple[str, ...] = ()) -> dict:
+    cfg = configs.get(arch)
+    shape = configs.SHAPES[shape_name]
+    for v in variants:
+        cfg = VARIANTS[v](cfg)
+    suffix = "" if plan == "2d" else f"__{plan}"
+    if variants:
+        suffix += "__" + "_".join(variants)
+    if not configs.shape_applicable(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": "long_500k needs sub-quadratic attention "
+                         "(DESIGN.md §5)"}
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_name}.json").write_text(
+            json.dumps(rec, indent=1))
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIPPED "
+                  f"(pure full attention)")
+        return rec
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    if plan == "auto":
+        plan = __import__("repro.core.meshdse", fromlist=["choose_plan"]) \
+            .choose_plan(cfg, shape, chips=chips).plan
+        suffix = f"__auto_{plan}"
+    dist = Dist(mesh=mesh, fsdp_over_pod=cfg.fsdp_over_pod, plan=plan)
+
+    t0 = time.time()
+    step_fn, args = build_step(cfg, shape, dist)
+
+    with mesh:
+        lowered = step_fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # loop-aware HLO cost extraction (the XLA CPU backend's own
+    # cost_analysis does not multiply while-loop bodies — see
+    # repro/hlocost.py and EXPERIMENTS.md §Dry-run)
+    costs = hlocost.analyze(hlo)
+    rl = roofline.build(
+        arch, shape_name, mesh_name, chips, costs,
+        roofline.model_flops(cfg, shape),
+        mesh_mod.PEAK_FLOPS_BF16, mesh_mod.HBM_BW, mesh_mod.ICI_BW,
+        min_bytes_per_device=roofline.analytic_min_bytes(cfg, shape,
+                                                         chips))
+
+    mem = {}
+    if ma is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem[f] = getattr(ma, f, None)
+        args_b = (mem.get("argument_size_in_bytes") or 0)
+        alias_b = (mem.get("alias_size_in_bytes") or 0)
+        temp_b = (mem.get("temp_size_in_bytes") or 0)
+        out_b = (mem.get("output_size_in_bytes") or 0)
+        mem["resident_bytes_per_device"] = args_b + temp_b + (out_b - alias_b)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips, "plan": plan,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "roofline": rl.to_dict(),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"compile {t_compile:.1f}s, "
+              f"resident/dev "
+              f"{(mem.get('resident_bytes_per_device') or 0)/2**30:.2f} GiB, "
+              f"bottleneck {rl.bottleneck} "
+              f"(c={rl.compute_s*1e3:.1f}ms "
+              f"m={rl.memory_s_lower*1e3:.1f}..{rl.memory_s*1e3:.1f}ms "
+              f"coll={rl.collective_s*1e3:.1f}ms) mfu~{rl.mfu:.3f}",
+              flush=True)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json".replace("/",
+                                                                      "_")
+    (out_dir / fname).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(configs.SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--plan", default="2d",
+                    help="parallelism plan: 2d | ddp | dp_fsdp | ep_dp | "
+                         "auto (mesh-DSE chooses, see core/meshdse.py)")
+    ap.add_argument("--variant", default="",
+                    help="comma list of config variants: "
+                         + ", ".join(VARIANTS))
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    cells = []
+    if args.all:
+        for a in configs.ARCH_IDS:
+            for s in configs.SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    variants = tuple(v for v in args.variant.split(",") if v)
+    suffix = "" if args.plan == "2d" else f"__{args.plan}"
+    if variants:
+        suffix += "__" + "_".join(variants)
+    for a, s in cells:
+        for m in meshes:
+            fname = out_dir / f"{a}__{s}__{m}{suffix}.json"
+            try:
+                run_cell(a, s, m, out_dir, plan=args.plan,
+                         variants=variants)
+            except Exception:
+                failures += 1
+                print(f"[dryrun] FAILED {a} x {s} x {m}")
+                traceback.print_exc()
+                rec = {"arch": a, "shape": s, "mesh": m, "status": "failed",
+                       "plan": args.plan, "variants": list(variants),
+                       "error": traceback.format_exc()[-2000:]}
+                out_dir.mkdir(parents=True, exist_ok=True)
+                fname.write_text(json.dumps(rec, indent=1))
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

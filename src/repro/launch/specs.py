@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every model input (multi-pod dry-run
+brief, step 2): weak-type-correct, shardable, zero device allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models.common import Dist
+from repro.models.lm import LM, ModelConfig
+
+
+def _sds(shape, dtype, dist: Dist, logical):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=dist.sharding(logical, shape))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec,
+                      dist: Dist) -> dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    out: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "frames":
+        out["frames"] = _sds((b, s, cfg.frame_dim), jnp.bfloat16, dist,
+                             ("dp", None, None))
+        out["labels"] = _sds((b, s), jnp.int32, dist, ("dp", None))
+        return out
+    if cfg.frontend == "image_text":
+        s_text = s - cfg.img_tokens
+        out["images"] = _sds((b, cfg.img_tokens, cfg.img_dim), jnp.bfloat16,
+                             dist, ("dp", None, None))
+        out["tokens"] = _sds((b, s_text), jnp.int32, dist, ("dp", None))
+        out["labels"] = _sds((b, s_text), jnp.int32, dist, ("dp", None))
+        return out
+    out["tokens"] = _sds((b, s), jnp.int32, dist, ("dp", None))
+    out["labels"] = _sds((b, s), jnp.int32, dist, ("dp", None))
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec,
+                        dist: Dist) -> dict[str, jax.ShapeDtypeStruct]:
+    specs = train_batch_specs(cfg, shape, dist)
+    specs.pop("labels", None)
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeSpec,
+                       dist: Dist) -> dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch
+    if cfg.frontend == "frames":
+        tok = _sds((b, cfg.frame_dim), jnp.bfloat16, dist, ("dp", None))
+    else:
+        tok = _sds((b,), jnp.int32, dist, ("dp",))
+    return {"tokens": tok,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, dist: Dist) -> dict:
+    """All lowering inputs for one (arch x shape) cell (brief step 2)."""
+    lm = LM(cfg, dist)
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape, dist)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape, dist)}
+    if shape.kind == "decode":
+        return {"cache": lm.cache_structs(shape.global_batch,
+                                          shape.seq_len),
+                **decode_token_specs(cfg, shape, dist)}
+    raise ValueError(shape.kind)

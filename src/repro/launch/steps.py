@@ -1,0 +1,99 @@
+"""Step builders: the jitted train / prefill / decode entry points plus
+their ShapeDtypeStruct argument tuples for lowering (dry-run) or real
+execution.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.launch.specs import (decode_token_specs, prefill_batch_specs,
+                                train_batch_specs)
+from repro.models.common import Dist, shape_structs
+from repro.models.lm import LM, ModelConfig
+from repro.runtime import optim
+
+
+def make_opt_config(cfg: ModelConfig, total_steps: int = 10_000
+                    ) -> optim.AdamWConfig:
+    return optim.AdamWConfig(moment_dtype=cfg.moment_dtype,
+                             total_steps=total_steps)
+
+
+def make_train_step(cfg: ModelConfig, dist: Dist,
+                    opt_cfg: optim.AdamWConfig | None = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``cfg.grad_accum > 1`` the global batch is processed as that
+    many microbatches under a scan, accumulating f32 gradients —
+    activation footprint scales 1/k at the cost of one f32 grad buffer
+    (sharded like the params)."""
+    lm = LM(cfg, dist)
+    opt_cfg = opt_cfg or make_opt_config(cfg)
+    k = cfg.grad_accum
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            loss, grads = jax.value_and_grad(lm.loss)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda t: t.reshape((k, t.shape[0] // k) + t.shape[1:]),
+                batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(lm.loss)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, l
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            grads, losses = jax.lax.scan(body, acc0, micro)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = jnp.mean(losses)
+        new_p, new_s, metrics = optim.apply_updates(params, grads,
+                                                    opt_state, opt_cfg)
+        return new_p, new_s, {"loss": loss, **metrics}
+
+    return jax.jit(train_step, donate_argnums=(0, 1))
+
+
+def make_prefill(cfg: ModelConfig, dist: Dist, max_seq: int | None = None):
+    lm = LM(cfg, dist)
+    return jax.jit(lambda params, batch: lm.prefill(params, batch,
+                                                    max_seq=max_seq))
+
+
+def make_decode_step(cfg: ModelConfig, dist: Dist):
+    lm = LM(cfg, dist)
+    return jax.jit(lm.decode_step, donate_argnums=(1,))
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, dist: Dist):
+    """One (arch x shape) cell -> (jitted fn, lowering args).
+
+    train_4k lowers ``train_step``; prefill_32k lowers ``prefill``;
+    decode_32k / long_500k lower ``serve_step`` (one new token against a
+    seq_len KV cache — per the brief)."""
+    lm = LM(cfg, dist)
+    p_structs = lm.param_structs()
+    if shape.kind == "train":
+        opt_cfg = make_opt_config(cfg)
+        fn = make_train_step(cfg, dist, opt_cfg)
+        o_structs = shape_structs(
+            optim.state_specs(cfg.param_specs(), opt_cfg),
+            cfg.param_dtype, lm.dist)
+        batch = train_batch_specs(cfg, shape, lm.dist)
+        return fn, (p_structs, o_structs, batch)
+    if shape.kind == "prefill":
+        fn = make_prefill(cfg, dist)
+        batch = prefill_batch_specs(cfg, shape, lm.dist)
+        return fn, (p_structs, batch)
+    if shape.kind == "decode":
+        fn = make_decode_step(cfg, dist)
+        cache = lm.cache_structs(shape.global_batch, shape.seq_len)
+        toks = decode_token_specs(cfg, shape, lm.dist)
+        return fn, (p_structs, cache, toks["tokens"], toks["pos"])
+    raise ValueError(shape.kind)

@@ -1,0 +1,137 @@
+"""Training driver: data pipeline -> sharded train step -> checkpoints,
+straggler monitoring, restart/resume, optional gradient compression.
+
+Runs anywhere: on the single-CPU container use ``--smoke`` (reduced
+config); on a real pod the same entry point builds the (data, model)
+mesh from the available devices (elastic: whatever count survives).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --smoke --steps 20 --global-batch 8 --seq-len 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.steps import make_opt_config
+from repro.models.common import Dist
+from repro.models.lm import LM
+from repro.runtime import optim
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.compress import ef_compress_tree, init_error_tree
+from repro.runtime.data import DataConfig, TokenDataset, \
+    synth_multimodal_batch
+from repro.runtime.elastic import make_mesh_from_devices
+from repro.runtime.monitor import StepMonitor
+
+
+def build_dist(model_axis: int) -> Dist:
+    if len(jax.devices()) == 1:
+        return Dist(mesh=None)
+    return Dist(mesh=make_mesh_from_devices(model_axis=model_axis))
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--total-steps", type=int, default=None,
+                    help="LR-schedule horizon (defaults to --steps); set "
+                         "it when training in resumable segments")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--model-axis", type=int, default=16)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true",
+                    help="int8 + error-feedback on gradients (cross-pod "
+                         "compression numerics; see runtime/compress.py)")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else \
+        configs.get(args.arch)
+    dist = build_dist(args.model_axis)
+    lm = LM(cfg, dist)
+    horizon = args.total_steps or args.steps
+    opt_cfg = optim.AdamWConfig(lr=args.lr,
+                                warmup_steps=max(2, horizon // 10),
+                                total_steps=horizon,
+                                moment_dtype=cfg.moment_dtype)
+
+    data = TokenDataset(DataConfig(global_batch=args.global_batch,
+                                   seq_len=args.seq_len,
+                                   vocab_size=cfg.vocab_size))
+
+    params = lm.init(jax.random.PRNGKey(0))
+    opt_state = optim.init_state(params, opt_cfg)
+    err_tree = init_error_tree(params) if args.grad_compression else None
+    start_step = 0
+
+    ckpt = None
+    if args.checkpoint_dir:
+        ckpt = Checkpointer(args.checkpoint_dir)
+        if args.resume and ckpt.latest_step() is not None:
+            start_step, restored = ckpt.restore(
+                target={"params": params, "opt": opt_state})
+            params, opt_state = restored["params"], restored["opt"]
+            print(f"[train] resumed from step {start_step}")
+
+    compress = args.grad_compression
+
+    @jax.jit
+    def train_step(params, opt_state, err_tree, batch):
+        loss, grads = jax.value_and_grad(lm.loss)(params, batch)
+        if compress:
+            grads, err_tree = ef_compress_tree(grads, err_tree)
+        params, opt_state, metrics = optim.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, err_tree, {"loss": loss, **metrics}
+
+    monitor = StepMonitor()
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        if cfg.frontend == "tokens":
+            host = data.batch(step)
+        else:
+            host = synth_multimodal_batch(cfg, data.local_batch,
+                                          args.seq_len, step)
+        batch = {k: jnp.asarray(v) for k, v in host.items()}
+        monitor.start()
+        params, opt_state, err_tree, metrics = train_step(
+            params, opt_state, err_tree, batch)
+        loss = float(metrics["loss"])
+        monitor.stop(step)
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"lr {float(metrics['lr']):.2e}")
+        if ckpt and (step + 1) % args.checkpoint_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                      extra_meta={"arch": cfg.name})
+    if ckpt:
+        ckpt.wait()
+    wall = time.time() - t0
+    summary = {"first_loss": losses[0], "last_loss": losses[-1],
+               "steps": len(losses), "wall_s": wall,
+               "monitor": monitor.summary()}
+    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({len(losses)} steps, {wall:.1f}s)")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

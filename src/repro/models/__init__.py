@@ -1,0 +1,4 @@
+"""Model zoo: generic decoder-LM assembly + mixers + tinyML nets."""
+
+from .common import Dist, NO_DIST, ParamSpec            # noqa: F401
+from .lm import LM, ModelConfig                          # noqa: F401

@@ -1,0 +1,324 @@
+"""Attention mixers: GQA (with sliding/global windows, QK-norm, biases)
+and MLA (multi-head latent attention, MiniCPM3/DeepSeek style).
+
+Each mixer exposes ``specs`` (declarative params), ``apply`` (full
+sequence: training / prefill) and ``decode`` (single step against a
+preallocated cache).  Per-layer variation (gemma3's 5:1 local:global
+pattern) is *data-driven*: ``is_global`` arrives as a traced scalar so
+all 26 layers share one scanned HLO body (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Dist, ParamSpec, apply_rope, blockwise_attention,
+                     causal_mask_fn, prefix_lm_mask_fn, rms_norm, NEG_INF)
+
+
+# --------------------------------------------------------------------------- #
+# configs                                                                      #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    rope_local_theta: float | None = None   # gemma3 local layers
+    sliding_window: int = 0                 # 0 = always full attention
+    global_every: int = 0                   # gemma3: layer i global if (i+1)%N==0
+    qk_norm: bool = False
+    softmax_scale: float | None = None
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    n_heads: int
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_dim: int = 64
+    rope_theta: float = 1e4
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+# --------------------------------------------------------------------------- #
+# GQA                                                                          #
+# --------------------------------------------------------------------------- #
+def gqa_specs(d_model: int, a: AttnConfig) -> dict[str, Any]:
+    s: dict[str, Any] = {
+        "wq": ParamSpec((d_model, a.q_dim), ("fsdp", "tp")),
+        "wk": ParamSpec((d_model, a.kv_dim), ("fsdp", "tp")),
+        "wv": ParamSpec((d_model, a.kv_dim), ("fsdp", "tp")),
+        "wo": ParamSpec((a.q_dim, d_model), ("tp", "fsdp")),
+    }
+    if a.qkv_bias:
+        s["bq"] = ParamSpec((a.q_dim,), ("tp",), init="zeros")
+        s["bk"] = ParamSpec((a.kv_dim,), ("tp",), init="zeros")
+        s["bv"] = ParamSpec((a.kv_dim,), ("tp",), init="zeros")
+    if a.qk_norm:
+        s["q_norm"] = ParamSpec((a.head_dim,), (None,), init="zeros")
+        s["k_norm"] = ParamSpec((a.head_dim,), (None,), init="zeros")
+    return s
+
+
+def _qkv(p, x, a: AttnConfig, dist: Dist):
+    b, s, _ = x.shape
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0.0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0.0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0.0)
+    q = dist.shard(q.reshape(b, s, a.n_heads, a.head_dim),
+                   ("dp", None, "tp", None))
+    k = dist.shard(k.reshape(b, s, a.n_kv_heads, a.head_dim),
+                   ("dp", None, "tp", None))
+    v = dist.shard(v.reshape(b, s, a.n_kv_heads, a.head_dim),
+                   ("dp", None, "tp", None))
+    if a.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _angles(a: AttnConfig, angles_global, angles_local, is_global):
+    if angles_local is None:
+        return angles_global
+    return jnp.where(is_global, angles_global, angles_local)
+
+
+def gqa_apply(p, x, *, a: AttnConfig, dist: Dist, angles_global,
+              angles_local=None, is_global=True, prefix_len: int = 0,
+              q_chunk: int = 512, kv_chunk: int = 1024,
+              return_kv: bool = False):
+    """Full-sequence attention (training / prefill).  With
+    ``return_kv`` also returns the (roped) K and V for cache seeding."""
+    b, s, d_model = x.shape
+    q, k, v = _qkv(p, x, a, dist)
+    ang = _angles(a, angles_global, angles_local, is_global)[:s]
+    q, k = apply_rope(q, ang), apply_rope(k, ang)
+
+    window = a.sliding_window
+
+    def mask_fn(q_idx, kv_idx):
+        causal = q_idx[:, None] >= kv_idx[None, :]
+        if prefix_len > 0:
+            causal |= ((q_idx[:, None] < prefix_len)
+                       & (kv_idx[None, :] < prefix_len))
+        if window <= 0:
+            return causal
+        in_window = (q_idx[:, None] - kv_idx[None, :]) < window
+        return causal & (in_window | jnp.asarray(is_global))
+
+    # Triangular block skipping wins only when heads are NOT
+    # TP-sharded: under the 2d plan the per-pair accumulator updates
+    # force GSPMD re-layouts that cost far more than the skipped FLOPs
+    # (measured: gemma3 prefill collectives 0.54 s -> 292 s).
+    tri = (prefix_len <= q_chunk) and dist.plan != "2d"
+    o = blockwise_attention(q, k, v, mask_fn, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk,
+                            softmax_scale=a.softmax_scale,
+                            causal_blocks=tri)
+    o = o.reshape(b, s, a.q_dim)
+    out = o @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_cache_specs(a: AttnConfig, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16) -> dict[str, ParamSpec]:
+    shape = (batch, max_seq, a.n_kv_heads, a.head_dim)
+    # Decode caches shard kv-heads over TP when divisible (musicgen
+    # kv=32, olmoe/qwen kv=16 — avoids the scores psum), else fall back
+    # to head_dim (divisible for every assigned arch).  The resolver's
+    # axis-reuse rule implements the fallback: the second "tp" entry
+    # only binds if the first was dropped.  Never the sequence dim — a
+    # per-step dynamic-update-slice on a sharded dim re-lays-out the
+    # whole cache (DESIGN.md §4).
+    return {"k": ParamSpec(shape, ("dp", None, "tp", "tp"), init="zeros",
+                           dtype=dtype),
+            "v": ParamSpec(shape, ("dp", None, "tp", "tp"), init="zeros",
+                           dtype=dtype)}
+
+
+def gqa_decode(p, x, cache, pos, *, a: AttnConfig, dist: Dist,
+               angles_global, angles_local=None, is_global=True):
+    """One decode step.  x: (B, 1, d); cache[k|v]: (B, Smax, Hkv, hd);
+    pos: scalar int32 — current position (number of tokens already in
+    the cache)."""
+    b = x.shape[0]
+    q, k, v = _qkv(p, x, a, dist)
+    ang_all = _angles(a, angles_global, angles_local, is_global)
+    ang = jax.lax.dynamic_slice_in_dim(ang_all, pos, 1, axis=0)
+    q, k = apply_rope(q, ang), apply_rope(k, ang)
+
+    # q must MIRROR the cache's TP choice (kv-heads when divisible,
+    # else head_dim) — a heads-sharded q against an hd-sharded cache
+    # makes GSPMD replicate the whole cache every step (measured
+    # 11.9 GiB/step of all-gather on glm4 decode).
+    if dist.mesh is not None:
+        tp_axes = dist._physical("tp")
+        tp_size = math.prod(dist.mesh.shape[ax] for ax in tp_axes) \
+            if tp_axes else 1
+        if tp_size > 1 and a.n_kv_heads % tp_size != 0 \
+                and a.head_dim % tp_size == 0:
+            q = dist.shard(q, ("dp", None, None, "tp"))
+            k = dist.shard(k, ("dp", None, None, "tp"))
+            v = dist.shard(v, ("dp", None, None, "tp"))
+
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+
+    smax = ck.shape[1]
+    groups = a.n_heads // a.n_kv_heads
+    qg = q.reshape(b, 1, a.n_kv_heads, groups, a.head_dim)
+    scale = (a.softmax_scale if a.softmax_scale is not None
+             else 1.0 / math.sqrt(a.head_dim))
+    scores = jnp.einsum("bqhgd,bkhd->bhgk", qg, ck,
+                        preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(smax)
+    valid = idx <= pos
+    if a.sliding_window > 0:
+        in_win = (pos - idx) < a.sliding_window
+        valid &= in_win | jnp.asarray(is_global)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", attn.astype(cv.dtype), cv)
+    o = o.reshape(b, 1, a.q_dim)
+    return o @ p["wo"], {"k": ck, "v": cv}
+
+
+# --------------------------------------------------------------------------- #
+# MLA (multi-head latent attention)                                            #
+# --------------------------------------------------------------------------- #
+def mla_specs(d_model: int, m: MLAConfig) -> dict[str, Any]:
+    return {
+        "wq_a": ParamSpec((d_model, m.q_lora_rank), ("fsdp", "tp")),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), init="zeros"),
+        "wq_b": ParamSpec((m.q_lora_rank, m.n_heads * m.qk_dim),
+                          ("fsdp", "tp")),
+        "wkv_a": ParamSpec((d_model, m.kv_lora_rank + m.qk_rope_dim),
+                           ("fsdp", None)),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="zeros"),
+        "wk_b": ParamSpec((m.kv_lora_rank, m.n_heads * m.qk_nope_dim),
+                          ("fsdp", "tp")),
+        "wv_b": ParamSpec((m.kv_lora_rank, m.n_heads * m.v_dim),
+                          ("fsdp", "tp")),
+        "wo": ParamSpec((m.n_heads * m.v_dim, d_model), ("tp", "fsdp")),
+    }
+
+
+def _mla_q(p, x, m: MLAConfig, angles):
+    b, s, _ = x.shape
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(b, s, m.n_heads, m.qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, angles)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p, x, m: MLAConfig, angles):
+    b, s, _ = x.shape
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope.reshape(b, s, 1, m.qk_rope_dim), angles)
+    return c_kv, k_rope
+
+
+def mla_apply(p, x, *, m: MLAConfig, dist: Dist, angles,
+              q_chunk: int = 512, kv_chunk: int = 1024,
+              return_latent: bool = False):
+    """Full-sequence MLA (materialized K/V — the training-path form).
+    With ``return_latent`` also returns (c_kv, k_rope) for cache
+    seeding (the compressed-latent cache)."""
+    b, s, _ = x.shape
+    angles = angles[:s]
+    q_nope, q_rope = _mla_q(p, x, m, angles)
+    c_kv, k_rope = _mla_kv_latent(p, x, m, angles)
+    k_nope = (c_kv @ p["wk_b"]).reshape(b, s, m.n_heads, m.qk_nope_dim)
+    v = (c_kv @ p["wv_b"]).reshape(b, s, m.n_heads, m.v_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, m.n_heads, m.qk_rope_dim))],
+        axis=-1)
+    q = dist.shard(q, ("dp", None, "tp", None))
+    k = dist.shard(k, ("dp", None, "tp", None))
+    v = dist.shard(v, ("dp", None, "tp", None))
+    o = blockwise_attention(q, k, v, causal_mask_fn(), q_chunk=q_chunk,
+                            kv_chunk=kv_chunk,
+                            softmax_scale=1.0 / math.sqrt(m.qk_dim),
+                            causal_blocks=(dist.plan != "2d"))
+    out = o.reshape(b, s, m.n_heads * m.v_dim) @ p["wo"]
+    if return_latent:
+        return out, (c_kv, k_rope[:, :, 0])
+    return out
+
+
+def mla_cache_specs(m: MLAConfig, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16) -> dict[str, ParamSpec]:
+    # The compressed-latent cache is MLA's whole point: kv_lora_rank +
+    # rope_dim floats per token instead of 2*H*hd.  Latent dim shards
+    # over TP (same DUS-layout argument as gqa_cache_specs).
+    return {
+        "c_kv": ParamSpec((batch, max_seq, m.kv_lora_rank),
+                          ("dp", None, "tp"), init="zeros", dtype=dtype),
+        "k_rope": ParamSpec((batch, max_seq, m.qk_rope_dim),
+                            ("dp", None, None), init="zeros", dtype=dtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, *, m: MLAConfig, dist: Dist, angles):
+    """One decode step in the *absorbed* form: scores and context are
+    computed directly against the latent cache (W_uk/W_uv folded into
+    the query/output sides), so per-step work scales with kv_lora_rank
+    rather than H*hd."""
+    b = x.shape[0]
+    ang = jax.lax.dynamic_slice_in_dim(angles, pos, 1, axis=0)
+    q_nope, q_rope = _mla_q(p, x, m, ang)
+    c_kv_t, k_rope_t = _mla_kv_latent(p, x, m, ang)
+
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_t.astype(cache["c_kv"].dtype), pos, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_t[:, :, 0].astype(cache["k_rope"].dtype),
+        pos, axis=1)
+
+    wk_b = p["wk_b"].reshape(m.kv_lora_rank, m.n_heads, m.qk_nope_dim)
+    # absorb W_uk into q:  (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b)
+    s_lat = jnp.einsum("bqhr,bkr->bhk", q_lat, cc.astype(q_lat.dtype),
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhd,bkd->bhk", q_rope,
+                        cr.astype(q_rope.dtype),
+                        preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(m.qk_dim)
+    scores = (s_lat + s_rope) * scale
+    idx = jnp.arange(cc.shape[1])
+    scores = jnp.where((idx <= pos)[None, None], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhk,bkr->bhr", attn.astype(cc.dtype), cc)
+    wv_b = p["wv_b"].reshape(m.kv_lora_rank, m.n_heads, m.v_dim)
+    o = jnp.einsum("bhr,rhd->bhd", ctx, wv_b.astype(ctx.dtype))
+    o = o.reshape(b, 1, m.n_heads * m.v_dim)
+    return o @ p["wo"], {"c_kv": cc, "k_rope": cr}

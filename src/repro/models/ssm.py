@@ -1,0 +1,404 @@
+"""State-space / linear-recurrence mixers: Mamba (Jamba's SSM layers)
+and RWKV6 "Finch" (data-dependent decay).
+
+Both recurrences run as two-level time scans: an outer scan over chunks
+(rematerialized — bounds backward-pass memory to one chunk) and an
+inner sequential scan whose carried state is small ((B, d_inner, N) for
+Mamba, (B, H, hd, hd) for RWKV6).  The recurrent state update itself is
+not an MVM and therefore not IMC-mappable — the workload extractor
+marks these FLOPs ``imc_ineligible`` (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import Dist, ParamSpec, rms_norm
+
+
+def _chunked_time_scan(step_fn, state, xs_tree, seq_len: int,
+                       chunk: int = 128):
+    """scan(step_fn) over time with chunk-level remat.
+
+    xs_tree leaves: (B, S, ...) — time axis 1.  Returns (state, ys) with
+    ys leaves (B, S, ...).
+    """
+    chunk = min(chunk, seq_len)
+    assert seq_len % chunk == 0
+    n_chunks = seq_len // chunk
+
+    def to_chunks(x):
+        # (B, S, ...) -> (n_chunks, chunk, B, ...)
+        perm = (1, 0) + tuple(range(2, x.ndim))
+        xt = jnp.transpose(x, perm)
+        return xt.reshape((n_chunks, chunk) + xt.shape[1:])
+
+    xs_c = jax.tree.map(to_chunks, xs_tree)
+
+    @jax.checkpoint
+    def chunk_body(state, xs_chunk):
+        return jax.lax.scan(step_fn, state, xs_chunk)
+
+    state, ys_c = jax.lax.scan(chunk_body, state, xs_c)
+
+    def from_chunks(y):
+        # (n_chunks, chunk, B, ...) -> (B, S, ...)
+        yt = y.reshape((seq_len,) + y.shape[2:])
+        perm = (1, 0) + tuple(range(2, yt.ndim))
+        return jnp.transpose(yt, perm)
+
+    return state, jax.tree.map(from_chunks, ys_c)
+
+
+# --------------------------------------------------------------------------- #
+# Mamba                                                                        #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0          # 0 -> ceil(d_model / 16)
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def rank(self, d_model: int) -> int:
+        return self.dt_rank or max(1, d_model // 16)
+
+
+def mamba_specs(d_model: int, c: MambaConfig) -> dict[str, Any]:
+    di, n, r = c.d_inner(d_model), c.d_state, c.rank(d_model)
+    return {
+        "in_proj": ParamSpec((d_model, 2 * di), ("fsdp", "tp")),
+        "conv_w": ParamSpec((c.d_conv, di), (None, "tp"), scale=0.3),
+        "conv_b": ParamSpec((di,), ("tp",), init="zeros"),
+        "x_proj": ParamSpec((di, r + 2 * n), ("tp", None)),
+        "dt_proj": ParamSpec((r, di), (None, "tp")),
+        "dt_bias": ParamSpec((di,), ("tp",), init="zeros"),
+        "a_log": ParamSpec((di, n), ("tp", None), init="ones"),
+        "d_skip": ParamSpec((di,), ("tp",), init="ones"),
+        "out_proj": ParamSpec((di, d_model), ("tp", "fsdp")),
+    }
+
+
+def _mamba_ssm_inputs(p, xz, c: MambaConfig, d_model: int):
+    """Everything up to the recurrence, batched over time."""
+    di, n, r = c.d_inner(d_model), c.d_state, c.rank(d_model)
+    x, z = jnp.split(xz, 2, axis=-1)
+    dbc = x @ p["x_proj"]
+    dt, b_in, c_in = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])      # (B,S,di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (di,N)
+    return x, z, dt, b_in, c_in, a
+
+
+def _mamba_step(a):
+    def step(h, xs):
+        # h: (B, di, N) f32
+        x_t, dt_t, b_t, c_t = xs                                 # (B, di/N)
+        da = jnp.exp(dt_t[..., None].astype(jnp.float32) * a)    # (B,di,N)
+        dbx = (dt_t * x_t)[..., None] * b_t[:, None, :].astype(jnp.float32)
+        h = h * da + dbx
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y_t.astype(x_t.dtype)
+    return step
+
+
+def mamba_apply(p, x_res, *, c: MambaConfig, dist: Dist,
+                chunk: int = 128, return_state: bool = False):
+    """Full-sequence Mamba mixer. x_res: (B, S, d_model).  With
+    ``return_state`` also returns (h_final, conv_tail) for cache
+    seeding."""
+    b, s, d_model = x_res.shape
+    di = c.d_inner(d_model)
+    xz = x_res @ p["in_proj"]
+    xz = dist.shard(xz, ("dp", None, "tp"))
+    x_raw, z, dt, b_in, c_in, a = _mamba_ssm_inputs(p, xz, c, d_model)
+
+    # causal depthwise conv along time
+    xp = jnp.pad(x_raw, ((0, 0), (c.d_conv - 1, 0), (0, 0)))
+    x = sum(xp[:, i:i + s] * p["conv_w"][i] for i in range(c.d_conv))
+    x = jax.nn.silu(x + p["conv_b"])
+
+    h0 = jnp.zeros((b, di, c.d_state), jnp.float32)
+    h, y = _chunked_time_scan(_mamba_step(a), h0, (x, dt, b_in, c_in), s,
+                              chunk=chunk)
+    y = y + x * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_tail = x_raw[:, s - (c.d_conv - 1):]
+        return out, (h, conv_tail)
+    return out
+
+
+def mamba_cache_specs(d_model: int, c: MambaConfig, batch: int,
+                      dtype=jnp.float32) -> dict[str, ParamSpec]:
+    di = c.d_inner(d_model)
+    return {
+        "h": ParamSpec((batch, di, c.d_state), ("dp", "tp", None),
+                       init="zeros", dtype=jnp.float32),
+        "conv": ParamSpec((batch, c.d_conv - 1, di), ("dp", None, "tp"),
+                          init="zeros", dtype=dtype),
+    }
+
+
+def mamba_decode(p, x_res, cache, *, c: MambaConfig, dist: Dist):
+    """One decode step. x_res: (B, 1, d_model)."""
+    b, _, d_model = x_res.shape
+    xz = x_res @ p["in_proj"]
+    x, z, dt, b_in, c_in, a = _mamba_ssm_inputs(p, xz, c, d_model)
+    x, z, dt, b_in, c_in = (t[:, 0] for t in (x, z, dt, b_in, c_in))
+
+    conv_hist = jnp.concatenate(
+        [cache["conv"], x[:, None].astype(cache["conv"].dtype)], axis=1)
+    xc = jnp.einsum("btd,td->bd", conv_hist.astype(x.dtype), p["conv_w"])
+    xc = jax.nn.silu(xc + p["conv_b"])
+
+    h, y = _mamba_step(a)(cache["h"], (xc, dt, b_in, c_in))
+    y = y + xc * p["d_skip"]
+    y = (y * jax.nn.silu(z))[:, None]
+    new_cache = {"h": h, "conv": conv_hist[:, 1:]}
+    return y @ p["out_proj"], new_cache
+
+
+# --------------------------------------------------------------------------- #
+# RWKV6 (Finch)                                                                #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    mix_lora: int = 32       # ddlerp LoRA dim (5 interpolation targets)
+    decay_lora: int = 64
+
+    def n_heads(self, d_model: int) -> int:
+        return d_model // self.head_dim
+
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv6_specs(d_model: int, c: RWKVConfig) -> dict[str, Any]:
+    h = c.n_heads(d_model)
+    return {
+        # --- time mix ---
+        "mu_x": ParamSpec((d_model,), (None,), init="zeros"),
+        "mu": ParamSpec((5, d_model), (None, None), init="zeros"),
+        "tm_w1": ParamSpec((d_model, 5 * c.mix_lora), ("fsdp", None),
+                           scale=0.01),
+        "tm_w2": ParamSpec((5, c.mix_lora, d_model), (None, None, "fsdp"),
+                           scale=0.01),
+        "td_w1": ParamSpec((d_model, c.decay_lora), ("fsdp", None),
+                           scale=0.01),
+        "td_w2": ParamSpec((c.decay_lora, d_model), (None, "fsdp"),
+                           scale=0.01),
+        "time_decay": ParamSpec((d_model,), (None,), init="zeros"),
+        "time_faaaa": ParamSpec((h, c.head_dim), (None, None), scale=0.02),
+        "wr": ParamSpec((d_model, d_model), ("fsdp", "tp")),
+        "wk": ParamSpec((d_model, d_model), ("fsdp", "tp")),
+        "wv": ParamSpec((d_model, d_model), ("fsdp", "tp")),
+        "wg": ParamSpec((d_model, d_model), ("fsdp", "tp")),
+        "ln_x": ParamSpec((d_model,), (None,), init="zeros"),
+        "wo": ParamSpec((d_model, d_model), ("tp", "fsdp")),
+        # --- channel mix (token-shift mixes; matmuls added by
+        # rwkv6_block_specs which knows d_ff) ---
+        "cm_mu_k": ParamSpec((d_model,), (None,), init="zeros"),
+        "cm_mu_r": ParamSpec((d_model,), (None,), init="zeros"),
+    }
+
+
+def rwkv6_block_specs(d_model: int, d_ff: int,
+                      c: RWKVConfig) -> dict[str, Any]:
+    s = rwkv6_specs(d_model, c)
+    s["cm_wk"] = ParamSpec((d_model, d_ff), ("fsdp", "tp"))
+    s["cm_wv"] = ParamSpec((d_ff, d_model), ("tp", "fsdp"))
+    s["cm_wr"] = ParamSpec((d_model, d_model), ("fsdp", "tp"))
+    return s
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation (RWKV6's ddlerp)."""
+    diff = x_prev - x
+    xx = x + diff * p["mu_x"]
+    a = jnp.tanh(xx @ p["tm_w1"])
+    b_, s, _ = x.shape
+    a = a.reshape(b_, s, 5, -1)
+    offs = jnp.einsum("bsli,lid->lbsd", a, p["tm_w2"].astype(a.dtype))
+    outs = []
+    for i, name in enumerate(_MIX_NAMES):
+        outs.append(x + diff * (p["mu"][i] + offs[i]))
+    return outs
+
+
+def _rwkv_step(u):
+    """u: (H, hd) bonus. state: (B, H, hd, hd) f32 (k-major)."""
+    def step(s_state, xs):
+        r_t, k_t, v_t, w_t = xs                      # (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       s_state + u[None, :, :, None] * kv)
+        s_new = w_t.astype(jnp.float32)[..., None] * s_state + kv
+        return s_new, y.astype(r_t.dtype)
+    return step
+
+
+def _rwkv_rkvwg(p, x, x_prev, c: RWKVConfig):
+    b, s, d_model = x.shape
+    h = c.n_heads(d_model)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(b, s, h, c.head_dim)
+    k = (xk @ p["wk"]).reshape(b, s, h, c.head_dim)
+    v = (xv @ p["wv"]).reshape(b, s, h, c.head_dim)
+    g = jax.nn.silu(xg @ p["wg"])
+    dd = jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"]
+    logw = -jnp.exp((p["time_decay"] + dd).astype(jnp.float32))
+    logw = logw.reshape(b, s, h, c.head_dim)     # log decay, always < 0
+    return r, k, v, g, jnp.exp(logw), logw
+
+
+def _group_norm(y, gamma, n_heads):
+    b, s, d = y.shape
+    yf = y.astype(jnp.float32).reshape(b, s, n_heads, d // n_heads)
+    mean = yf.mean(axis=-1, keepdims=True)
+    var = yf.var(axis=-1, keepdims=True)
+    yf = (yf - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (yf.reshape(b, s, d) * (1.0 + gamma)).astype(y.dtype)
+
+
+def _wkv_chunk_parallel(r, k, v, logw, u, state, chunk: int):
+    """Chunkwise-parallel WKV6 (GLA-style): within a chunk everything is
+    batched einsums; chunks are scanned with the (B,H,K,V) state carry.
+
+    Numerically stable by construction: every exponent that survives the
+    causal mask is a *difference of cumulative log-decays* with
+    c_{t-1} <= c_s for s < t, i.e. <= 0 (decays are < 1), so no overflow
+    anywhere.  This removes the sequential S-step recurrence that made
+    rwkv6 train HBM-bound in the roofline (EXPERIMENTS.md §Perf)."""
+    b, s, h, kd = r.shape
+    vd = v.shape[-1]
+    assert s % chunk == 0
+    n = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, n, chunk, h, t.shape[-1]).transpose(
+            1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r.astype(jnp.float32),
+                                      k.astype(jnp.float32),
+                                      v.astype(jnp.float32), logw))
+
+    idx = jnp.arange(chunk)
+    strict_lower = idx[:, None] > idx[None, :]
+
+    @jax.checkpoint
+    def step(S, xs):
+        rt, kt, vt, lw = xs                       # (B, T, H, K/V)
+        cum = jnp.cumsum(lw, axis=1)              # c_t
+        c_prev = cum - lw                         # c_{t-1}
+        c_tot = cum[:, -1:]                       # c_T
+        # cross-chunk: y += (r * exp(c_{t-1})) @ S_in
+        r_dec = rt * jnp.exp(c_prev)
+        y = jnp.einsum("bthk,bhkv->bthv", r_dec, S)
+        # intra-chunk: att[t,s] = sum_k r_t k_s exp(c_{t-1}-c_s), s<t
+        dmat = c_prev[:, :, None] - cum[:, None]  # (B,T,S,H,K)
+        dmat = jnp.where(strict_lower[None, :, :, None, None], dmat,
+                         -jnp.inf)
+        att = jnp.einsum("bthk,bshk,btshk->bths", rt, kt, jnp.exp(dmat))
+        diag = jnp.einsum("bthk,hk,bthk->bth", rt, u, kt)
+        y = y + jnp.einsum("bths,bshv->bthv", att, vt) \
+            + diag[..., None] * vt
+        # outgoing state
+        k_dec = kt * jnp.exp(c_tot - cum)
+        S_new = jnp.exp(c_tot[:, 0, :, :, None]) * S \
+            + jnp.einsum("bshk,bshv->bhkv", k_dec, vt)
+        return S_new, y
+
+    state, ys = jax.lax.scan(step, state, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, vd)
+    return state, y.astype(r.dtype)
+
+
+def rwkv6_time_mix(p, x, *, c: RWKVConfig, dist: Dist, chunk: int = 128,
+                   x_prev=None, state=None, return_state: bool = False,
+                   chunked_wkv: bool = False, wkv_chunk: int = 32):
+    """Full-sequence RWKV6 attention replacement. x: (B, S, d_model)."""
+    b, s, d_model = x.shape
+    h = c.n_heads(d_model)
+    if x_prev is None:
+        x_prev_seq = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev_seq = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, w, logw = _rwkv_rkvwg(p, x, x_prev_seq, c)
+    if state is None:
+        state = jnp.zeros((b, h, c.head_dim, c.head_dim), jnp.float32)
+    u = p["time_faaaa"].astype(jnp.float32)
+    if chunked_wkv and s % wkv_chunk == 0 and s > 1:
+        state, y = _wkv_chunk_parallel(r, k, v, logw, u, state,
+                                       chunk=wkv_chunk)
+    else:
+        state, y = _chunked_time_scan(_rwkv_step(u), state, (r, k, v, w),
+                                      s, chunk=chunk)
+    y = y.reshape(b, s, d_model)
+    y = _group_norm(y, p["ln_x"], h) * g
+    out = y @ p["wo"]
+    if return_state:
+        return out, state, x[:, -1]
+    return out
+
+
+def rwkv6_channel_mix(p, x, *, dist: Dist, x_prev=None,
+                      return_last: bool = False):
+    b, s, d_model = x.shape
+    if x_prev is None:
+        x_prev_seq = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev_seq = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    diff = x_prev_seq - x
+    xk = x + diff * p["cm_mu_k"]
+    xr = x + diff * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    kk = dist.shard(kk, ("dp", None, "tp"))
+    y = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    if return_last:
+        return y, x[:, -1]
+    return y
+
+
+def rwkv6_cache_specs(d_model: int, c: RWKVConfig, batch: int,
+                      dtype=jnp.bfloat16) -> dict[str, ParamSpec]:
+    h = c.n_heads(d_model)
+    return {
+        "state": ParamSpec((batch, h, c.head_dim, c.head_dim),
+                           ("dp", "tp", None, None), init="zeros",
+                           dtype=jnp.float32),
+        "x_tm": ParamSpec((batch, d_model), ("dp", None), init="zeros",
+                          dtype=dtype),
+        "x_cm": ParamSpec((batch, d_model), ("dp", None), init="zeros",
+                          dtype=dtype),
+    }
+
+
+def rwkv6_block_decode(p, x, cache, *, c: RWKVConfig, dist: Dist,
+                       norm1, norm2, eps: float):
+    """One decode step through a full RWKV6 block (time mix + channel
+    mix with their token-shift states). x: (B, 1, d_model)."""
+    xa = rms_norm(x, norm1, eps)
+    y, state, last = rwkv6_time_mix(
+        p, xa, c=c, dist=dist, x_prev=cache["x_tm"].astype(xa.dtype),
+        state=cache["state"], return_state=True)
+    x = x + y
+    xb = rms_norm(x, norm2, eps)
+    y2, last_cm = rwkv6_channel_mix(
+        p, xb, dist=dist, x_prev=cache["x_cm"].astype(xb.dtype),
+        return_last=True)
+    x = x + y2
+    new_cache = {"state": state,
+                 "x_tm": last.astype(cache["x_tm"].dtype),
+                 "x_cm": last_cm.astype(cache["x_cm"].dtype)}
+    return x, new_cache

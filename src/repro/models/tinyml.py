@@ -1,0 +1,178 @@
+"""Runnable tinyMLPerf models (paper Sec. VI case-study workloads) with
+switchable execution backends:
+
+    'float' — plain f32 (reference)
+    'dimc'  — every MVM through the exact BPBS kernel (int quantized)
+    'aimc'  — every MVM through the ADC-quantizing AIMC kernel
+
+Convolutions lower to im2col + MVM, exactly the decomposition the paper
+assumes for IMC mapping (Sec. II-A), so the same kernels serve all
+layers and accuracy-vs-ADC-resolution studies run end to end
+(examples/train_imc_qat.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import imc_linear_sim
+
+DAE_WIDTHS = (640, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640)
+
+
+@dataclasses.dataclass(frozen=True)
+class IMCExecConfig:
+    mode: str = "float"          # float | dimc | aimc
+    bi: int = 8
+    bw: int = 8
+    adc_res: int = 6
+
+
+def _linear(params, x, exec_cfg: IMCExecConfig):
+    w, b = params["w"], params["b"]
+    if exec_cfg.mode == "float":
+        y = x @ w
+    else:
+        y = imc_linear_sim(x, w, exec_cfg.mode, exec_cfg.bi, exec_cfg.bw,
+                           exec_cfg.adc_res)
+    return y + b
+
+
+def _init_linear(key, c_in, c_out):
+    k1, _ = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (c_in, c_out)) / jnp.sqrt(c_in),
+            "b": jnp.zeros((c_out,))}
+
+
+# --------------------------------------------------------------------------- #
+# DeepAutoEncoder (anomaly detection)                                          #
+# --------------------------------------------------------------------------- #
+def init_dae(key, widths=DAE_WIDTHS):
+    keys = jax.random.split(key, len(widths) - 1)
+    return [_init_linear(k, widths[i], widths[i + 1])
+            for i, k in enumerate(keys)]
+
+
+def dae_forward(params, x, exec_cfg: IMCExecConfig = IMCExecConfig()):
+    for i, p in enumerate(params):
+        x = _linear(p, x, exec_cfg)
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def dae_loss(params, x, exec_cfg: IMCExecConfig = IMCExecConfig()):
+    recon = dae_forward(params, x, exec_cfg)
+    return jnp.mean(jnp.square(recon - x))
+
+
+# --------------------------------------------------------------------------- #
+# im2col convolution (conv -> MVM, the paper's IMC lowering)                    #
+# --------------------------------------------------------------------------- #
+def im2col(x, fh, fw, stride=1, pad="SAME"):
+    """x: (B, H, W, C) -> (B, Ho, Wo, fh*fw*C)."""
+    b, h, w, c = x.shape
+    if pad == "SAME":
+        ph, pw = (fh - 1) // 2, (fw - 1) // 2
+        x = jnp.pad(x, ((0, 0), (ph, fh - 1 - ph), (pw, fw - 1 - pw),
+                        (0, 0)))
+    ho = (x.shape[1] - fh) // stride + 1
+    wo = (x.shape[2] - fw) // stride + 1
+    cols = []
+    for i in range(fh):
+        for j in range(fw):
+            cols.append(x[:, i:i + ho * stride:stride,
+                          j:j + wo * stride:stride])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv_as_mvm(params, x, fh, fw, stride, exec_cfg: IMCExecConfig,
+                depthwise: bool = False):
+    cols = im2col(x, fh, fw, stride)
+    b, ho, wo, k = cols.shape
+    if depthwise:
+        # (fh*fw, C) filters: contract patch dim per channel
+        c = x.shape[-1]
+        patches = cols.reshape(b, ho, wo, fh * fw, c)
+        y = jnp.einsum("bhwpc,pc->bhwc", patches, params["w"]) + params["b"]
+        return y
+    flat = cols.reshape(b * ho * wo, k)
+    y = _linear(params, flat, exec_cfg)
+    return y.reshape(b, ho, wo, -1)
+
+
+def _init_conv(key, c_in, c_out, fh, fw):
+    return _init_linear(key, fh * fw * c_in, c_out)
+
+
+def _init_dw(key, c, fh, fw):
+    return {"w": jax.random.normal(key, (fh * fw, c)) * 0.1,
+            "b": jnp.zeros((c,))}
+
+
+# --------------------------------------------------------------------------- #
+# DS-CNN (keyword spotting)                                                    #
+# --------------------------------------------------------------------------- #
+def init_dscnn(key, n_classes=12, ch=64):
+    ks = jax.random.split(key, 11)
+    p: dict[str, Any] = {"stem": _init_conv(ks[0], 1, ch, 10, 4)}
+    for i in range(4):
+        p[f"dw{i}"] = _init_dw(ks[1 + 2 * i], ch, 3, 3)
+        p[f"pw{i}"] = _init_conv(ks[2 + 2 * i], ch, ch, 1, 1)
+    p["head"] = _init_linear(ks[9], ch, n_classes)
+    return p
+
+
+def dscnn_forward(params, x, exec_cfg: IMCExecConfig = IMCExecConfig()):
+    """x: (B, 49, 10, 1) MFCC."""
+    y = conv_as_mvm(params["stem"], x, 10, 4, 2, exec_cfg)
+    y = jax.nn.relu(y)
+    for i in range(4):
+        y = jax.nn.relu(conv_as_mvm(params[f"dw{i}"], y, 3, 3, 1, exec_cfg,
+                                    depthwise=True))
+        y = jax.nn.relu(conv_as_mvm(params[f"pw{i}"], y, 1, 1, 1, exec_cfg))
+    y = jnp.mean(y, axis=(1, 2))
+    return _linear(params["head"], y, exec_cfg)
+
+
+# --------------------------------------------------------------------------- #
+# ResNet8 (CIFAR image classification)                                         #
+# --------------------------------------------------------------------------- #
+def init_resnet8(key, n_classes=10):
+    ks = iter(jax.random.split(key, 16))
+    p: dict[str, Any] = {"stem": _init_conv(next(ks), 3, 16, 3, 3)}
+    chans = [(16, 16, 1), (16, 32, 2), (32, 64, 2)]
+    for i, (cin, cout, stride) in enumerate(chans):
+        p[f"b{i}c1"] = _init_conv(next(ks), cin, cout, 3, 3)
+        p[f"b{i}c2"] = _init_conv(next(ks), cout, cout, 3, 3)
+        if stride != 1 or cin != cout:
+            p[f"b{i}sk"] = _init_conv(next(ks), cin, cout, 1, 1)
+    p["head"] = _init_linear(next(ks), 64, n_classes)
+    return p
+
+
+def resnet8_forward(params, x, exec_cfg: IMCExecConfig = IMCExecConfig()):
+    """x: (B, 32, 32, 3)."""
+    y = jax.nn.relu(conv_as_mvm(params["stem"], x, 3, 3, 1, exec_cfg))
+    chans = [(16, 16, 1), (16, 32, 2), (32, 64, 2)]
+    for i, (cin, cout, stride) in enumerate(chans):
+        h = jax.nn.relu(conv_as_mvm(params[f"b{i}c1"], y, 3, 3, stride,
+                                    exec_cfg))
+        h = conv_as_mvm(params[f"b{i}c2"], h, 3, 3, 1, exec_cfg)
+        sk = y if f"b{i}sk" not in params else conv_as_mvm(
+            params[f"b{i}sk"], y, 1, 1, stride, exec_cfg)
+        y = jax.nn.relu(h + sk)
+    y = jnp.mean(y, axis=(1, 2))
+    return _linear(params["head"], y, exec_cfg)
+
+
+FORWARDS: dict[str, tuple[Callable, Callable, tuple]] = {
+    # name -> (init, forward, input_shape (no batch))
+    "deep_autoencoder": (init_dae, dae_forward, (640,)),
+    "ds_cnn": (init_dscnn, dscnn_forward, (49, 10, 1)),
+    "resnet8": (init_resnet8, resnet8_forward, (32, 32, 3)),
+}

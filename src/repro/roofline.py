@@ -1,0 +1,261 @@
+"""Three-term roofline analysis from compiled XLA artifacts (brief:
+ROOFLINE ANALYSIS).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` reports *per-device* FLOPs/bytes (the SPMD
+module is the per-device program — verified against hand-counted FLOPs
+in the de-risk experiment), so the per-chip division is already done;
+HLO totals are per_device * chips.  collective_bytes is not in
+cost_analysis: we parse the post-SPMD optimized HLO and sum the result
+shapes of every collective op (documented proxy for per-device link
+traffic; ring algorithms move ~2x for all-reduce — constant factors do
+not change which term dominates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8.0, "f32": 4.0, "f16": 2.0, "bf16": 2.0,
+    "f8e4m3fn": 1.0, "f8e5m2": 1.0,
+    "s64": 8.0, "u64": 8.0, "s32": 4.0, "u32": 4.0,
+    "s16": 2.0, "u16": 2.0, "s8": 1.0, "u8": 1.0,
+    "s4": 0.5, "u4": 0.5, "pred": 1.0, "c64": 8.0, "c128": 16.0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[^)=]*?\)?)\s*"
+    r"(all-gather-start|all-reduce-start|collective-permute-start|"
+    r"all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"\(")
+
+
+def _shape_bytes_list(text: str) -> list[float]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dtype])
+    return out
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Sum per-device result bytes per collective kind from optimized HLO.
+
+    Sync ops: payload = sum of result shapes.  Async ``-start`` ops
+    return an (operand, result) tuple: payload = the largest element
+    (the gathered/reduced result); ``-done`` ops are skipped (their
+    shape repeats the start's result).
+    """
+    out: dict[str, dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shapes, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        sizes = _shape_bytes_list(shapes)
+        if not sizes:
+            continue
+        b = max(sizes) if op.endswith("-start") else sum(sizes)
+        d = out.setdefault(kind, {"bytes": 0.0, "count": 0.0})
+        d["bytes"] += b
+        d["count"] += 1
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: dict[str, dict[str, float]]
+    model_flops_total: float
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    #: analytic lower bound on HBM bytes (state touched the minimum
+    #: number of times a step requires); bytes_per_device from the
+    #: CPU-lowered HLO is the pessimistic upper bound (unfused, f32)
+    min_bytes_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def memory_s_lower(self) -> float:
+        return self.min_bytes_per_device / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        """Dominant term.  The memory term uses the geometric mean of
+        the analytic lower bound and the CPU-HLO upper bound when both
+        exist (EXPERIMENTS.md §Roofline discusses the band)."""
+        terms = {"compute": self.compute_s, "memory": self.memory_s_mid,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def memory_s_mid(self) -> float:
+        if self.min_bytes_per_device > 0 and self.bytes_per_device > 0:
+            return (self.memory_s_lower * self.memory_s) ** 0.5
+        return self.memory_s
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time if the three terms fully overlap."""
+        return max(self.compute_s, self.memory_s_mid, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — remat/redundancy waste detector."""
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (chips * peak * step lower bound)."""
+        denom = self.chips * self.peak_flops * self.step_s
+        return self.model_flops_total / denom if denom else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "min_bytes_per_device": self.min_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collectives": self.collectives,
+            "model_flops_total": self.model_flops_total,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "memory_s_lower": self.memory_s_lower,
+            "memory_s_mid": self.memory_s_mid,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_s": self.step_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+        }
+
+
+def active_params(cfg) -> int:
+    """Parameter count with MoE experts scaled to activated fraction."""
+    from repro.models.common import _iter_specs
+    import math as _math
+    total = 0
+    moe = cfg.moe
+    for path, spec in _iter_specs(cfg.param_specs()):
+        n = _math.prod(spec.shape)
+        in_moe = any(str(p).endswith("_moe") for p in path)
+        if moe is not None and in_moe and path[-1] in ("w_gate", "w_up",
+                                                       "w_down"):
+            n = int(n * moe.top_k / moe.n_experts)
+        total += n
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference steps."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch            # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def _specs_bytes(spec_tree) -> float:
+    """Total bytes of a ParamSpec tree (global, all shards)."""
+    import math as _math
+    import jax.numpy as jnp
+    from repro.models.common import _iter_specs
+    total = 0.0
+    for _, s in _iter_specs(spec_tree):
+        dt = s.dtype if s.dtype is not None else jnp.float32
+        total += _math.prod(s.shape) * jnp.dtype(dt).itemsize
+    return total
+
+
+def analytic_min_bytes(cfg, shape, chips: int) -> float:
+    """Per-device lower bound on HBM traffic for one step: every piece
+    of state touched the minimum number of times the step requires
+    (well-fused TPU backend).  DESIGN.md §Roofline discusses the band
+    against the CPU-lowered-HLO upper bound."""
+    import jax.numpy as jnp
+    from repro.launch.steps import make_opt_config
+    from repro.models.lm import LM
+    from repro.runtime import optim
+
+    param_b = _specs_bytes(cfg.param_specs())
+    act_elem = jnp.dtype(cfg.compute_dtype).itemsize
+    d = cfg.d_model
+    if shape.kind == "train":
+        opt_b = _specs_bytes(optim.state_specs(
+            cfg.param_specs(), make_opt_config(cfg)))
+        # fwd read + remat read + bwd read + grads write/read + optimizer
+        # read/write of params and both moments
+        state_traffic = 3 * param_b + 2 * param_b + 2 * (param_b + opt_b)
+        tokens = shape.global_batch * shape.seq_len
+        # residual carries: saved once, read once in bwd (+ grad pass)
+        act_traffic = 4 * cfg.n_layers * tokens * d * act_elem
+        logits = 2 * tokens * cfg.padded_vocab * 4  # f32 chunks, fwd+bwd
+        return (state_traffic + act_traffic + logits) / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        lm = LM(cfg)
+        cache_b = _specs_bytes(lm.cache_specs(shape.global_batch,
+                                              shape.seq_len))
+        act = 2 * cfg.n_layers * tokens * d * act_elem
+        return (param_b + act + cache_b) / chips
+    # decode: read all params, read whole cache, write the new slots
+    lm = LM(cfg)
+    cache_b = _specs_bytes(lm.cache_specs(shape.global_batch,
+                                          shape.seq_len))
+    return (param_b + cache_b) / chips
+
+
+def build(arch: str, shape_name: str, mesh_name: str, chips: int,
+          hlo_costs: dict, model_flops_total: float,
+          peak_flops: float, hbm_bw: float, ici_bw: float,
+          min_bytes_per_device: float = 0.0) -> Roofline:
+    """hlo_costs: output of repro.hlocost.analyze (loop-aware)."""
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=float(hlo_costs.get("flops", 0.0)),
+        bytes_per_device=float(hlo_costs.get("bytes", 0.0)),
+        collective_bytes_per_device=float(
+            hlo_costs.get("collective_bytes", 0.0)),
+        collectives=hlo_costs.get("collectives", {}),
+        model_flops_total=model_flops_total,
+        peak_flops=peak_flops, hbm_bw=hbm_bw, ici_bw=ici_bw,
+        min_bytes_per_device=min_bytes_per_device)

@@ -1,0 +1,7 @@
+"""Distributed runtime substrate: optimizer, data, checkpoint/restore,
+elastic resharding, gradient compression, straggler monitoring."""
+
+from .optim import AdamWConfig, apply_updates, init_state, state_specs  # noqa: F401
+from .checkpoint import Checkpointer                                    # noqa: F401
+from .data import DataConfig, TokenDataset                              # noqa: F401
+from .monitor import StepMonitor                                        # noqa: F401

@@ -1,0 +1,89 @@
+"""Elastic scaling: rebuild the mesh from the devices that remain and
+reshard the training state onto it.
+
+Failure model: a pod/host drops out -> the job restarts (or catches the
+runtime error), calls ``best_mesh_shape`` with the surviving device
+count, rebuilds meshes/shardings through the same ``Dist`` resolver,
+and restores the last checkpoint with ``Checkpointer.restore(target=...)``
+which device_puts every tensor with the *new* sharding.  The batch
+schedule is preserved by keeping global batch constant and re-deriving
+per-host shards (``TokenDataset`` splits by process index).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.common import Dist
+
+
+def best_mesh_shape(n_devices: int, model_axis: int = 16,
+                    min_model_axis: int = 4) -> tuple[int, int]:
+    """(data, model) for a possibly-degraded device count.
+
+    Keeps the TP axis as large as divisibility allows (TP size changes
+    re-tile weights, DP size only changes throughput), shrinking it only
+    when the device count forces it.
+    """
+    m = model_axis
+    while m >= min_model_axis:
+        if n_devices % m == 0:
+            return (n_devices // m, m)
+        m //= 2
+    return (n_devices, 1)
+
+
+def make_mesh_from_devices(devices=None, model_axis: int = 16) -> Mesh:
+    devices = jax.devices() if devices is None else devices
+    data, model = best_mesh_shape(len(devices), model_axis)
+    import numpy as np
+    dev = np.asarray(devices[:data * model]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    mesh_shape: tuple[int, int]
+    global_batch: int
+    per_host_batch: int
+
+    def describe(self) -> str:
+        return (f"elastic: {self.old_devices} -> {self.new_devices} devices, "
+                f"mesh {self.mesh_shape}, global batch {self.global_batch} "
+                f"({self.per_host_batch}/host)")
+
+
+def plan_resize(old_devices: int, new_devices: int, global_batch: int,
+                n_hosts: int = 1, model_axis: int = 16) -> ElasticPlan:
+    shape = best_mesh_shape(new_devices, model_axis)
+    assert global_batch % n_hosts == 0
+    return ElasticPlan(old_devices=old_devices, new_devices=new_devices,
+                       mesh_shape=shape, global_batch=global_batch,
+                       per_host_batch=global_batch // n_hosts)
+
+
+def reshard_state(state, target_structs):
+    """device_put every leaf with the target (new-mesh) sharding."""
+    def put(v, t):
+        sh = getattr(t, "sharding", None)
+        return jax.device_put(v, sh) if sh is not None else jax.device_put(v)
+    return jax.tree.map(put, state, target_structs)
+
+
+def resume_on_new_mesh(checkpointer, lm_factory, n_devices: int,
+                       model_axis: int = 16):
+    """Full elastic-resume flow: new mesh -> new Dist -> new target
+    structs -> restore checkpoint resharded.  ``lm_factory(dist)`` must
+    return an object with ``param_structs()``."""
+    mesh = make_mesh_from_devices(jax.devices()[:n_devices],
+                                  model_axis=model_axis)
+    dist = Dist(mesh=mesh)
+    lm = lm_factory(dist)
+    step, params = checkpointer.restore(target=lm.param_structs())
+    return mesh, lm, step, params

@@ -1,0 +1,77 @@
+"""Step-time monitoring and straggler detection.
+
+At 1000+ nodes the common failure modes are not crashes but *slow*
+hosts (thermal throttling, failing HBM, noisy neighbors).  The monitor
+keeps a rolling window of per-step wall times, flags steps beyond
+``threshold`` x the rolling median, and (multi-host) compares this
+host's time against the all-host median via a tiny all-gather so the
+*specific* straggler is named in the log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    wall_s: float
+    median_s: float
+    ratio: float
+    is_straggler: bool
+    slowest_host: int | None = None
+
+
+class StepMonitor:
+    def __init__(self, window: int = 50, threshold: float = 1.5,
+                 log_fn: Callable[[str], None] = print):
+        self.window = deque(maxlen=window)
+        self.threshold = threshold
+        self.log = log_fn
+        self._t0: float | None = None
+        self.reports: list[StragglerReport] = []
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> StragglerReport:
+        assert self._t0 is not None, "start() not called"
+        wall = time.perf_counter() - self._t0
+        self._t0 = None
+        med = statistics.median(self.window) if self.window else wall
+        ratio = wall / max(med, 1e-9)
+        slow_host = None
+        if jax.process_count() > 1:
+            times = np.asarray(jax.experimental.multihost_utils
+                               .process_allgather(np.float64(wall)))
+            slow_host = int(np.argmax(times))
+            med = float(np.median(times))
+            ratio = float(times[jax.process_index()] / max(med, 1e-9))
+        rep = StragglerReport(step=step, wall_s=wall, median_s=med,
+                              ratio=ratio,
+                              is_straggler=ratio > self.threshold,
+                              slowest_host=slow_host)
+        if rep.is_straggler:
+            self.log(f"[straggler] step {step}: {wall:.3f}s vs median "
+                     f"{med:.3f}s (x{ratio:.2f})"
+                     + (f" slowest host={slow_host}"
+                        if slow_host is not None else ""))
+        self.window.append(wall)
+        self.reports.append(rep)
+        return rep
+
+    def summary(self) -> dict[str, float]:
+        if not self.window:
+            return {}
+        w = list(self.window)
+        return {"median_s": statistics.median(w),
+                "p90_s": sorted(w)[int(0.9 * (len(w) - 1))],
+                "n_stragglers": sum(r.is_straggler for r in self.reports)}

@@ -1,0 +1,10 @@
+"""Shared pytest config.  Deliberately does NOT set
+--xla_force_host_platform_device_count: unit/smoke tests must see the
+single real CPU device; only dryrun subprocesses force 512."""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-minute integration tests (dry-run compiles)")

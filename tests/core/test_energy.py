@@ -1,0 +1,125 @@
+"""Unit + property tests for the unified energy model (paper Eq. 1-11)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy, tech
+from repro.core.hardware import IMCMacro, IMCType
+
+
+def _aimc(rows=256, cols=256, bw=4, bi=4, adc=5, dac=4, tech_nm=22,
+          vdd=0.8, **kw):
+    return IMCMacro(name="t", imc_type=IMCType.AIMC, rows=rows, cols=cols,
+                    tech_nm=tech_nm, vdd=vdd, bw=bw, bi=bi, adc_res=adc,
+                    dac_res=dac, **kw)
+
+
+def _dimc(rows=256, cols=256, bw=4, bi=4, m=4, tech_nm=22, vdd=0.8, **kw):
+    return IMCMacro(name="t", imc_type=IMCType.DIMC, rows=rows, cols=cols,
+                    tech_nm=tech_nm, vdd=vdd, bw=bw, bi=bi, m_mux=m, **kw)
+
+
+# --------------------------------------------------------------------- Eq. 10
+@given(logn=st.integers(1, 12), b=st.integers(1, 16))
+@settings(max_examples=200, deadline=None)
+def test_adder_tree_closed_form_matches_stage_sum(logn, b):
+    """F = B*N + N - B + log2(N) - 1 equals the explicit per-stage sum
+    sum_n (B + n - 1) * N / 2^n (paper Eq. 10)."""
+    n = 2 ** logn
+    explicit = sum((b + stage - 1) * n / (2 ** stage)
+                   for stage in range(1, logn + 1))
+    closed = tech.adder_tree_full_adders(n, b)
+    assert math.isclose(explicit, closed, rel_tol=1e-12)
+
+
+def test_adder_tree_trivial():
+    assert tech.adder_tree_full_adders(1, 8) == 0.0
+
+
+# ------------------------------------------------------------------ structure
+def test_aimc_has_converters_dimc_does_not():
+    bd_a = energy.peak_energy(_aimc())
+    bd_d = energy.peak_energy(_dimc())
+    assert bd_a.e_adc > 0 and bd_a.e_dac > 0 and bd_a.e_logic == 0
+    assert bd_d.e_adc == 0 and bd_d.e_dac == 0 and bd_d.e_logic > 0
+    assert bd_d.e_adder_tree > 0
+
+
+def test_total_is_component_sum():
+    bd = energy.peak_energy(_aimc())
+    assert math.isclose(
+        bd.total_fj,
+        bd.e_mul + bd.e_acc + bd.e_peripherals + bd.e_weight_write,
+        rel_tol=1e-12)
+
+
+def test_peak_excludes_weight_write():
+    assert energy.peak_energy(_dimc()).e_weight_write == 0.0
+
+
+# ---------------------------------------------------------------- monotonicity
+@given(adc1=st.integers(3, 9), adc2=st.integers(3, 9))
+@settings(max_examples=50, deadline=None)
+def test_adc_energy_monotone_in_resolution(adc1, adc2):
+    lo, hi = sorted((adc1, adc2))
+    e_lo = energy.peak_energy(_aimc(adc=lo)).e_adc
+    e_hi = energy.peak_energy(_aimc(adc=hi)).e_adc
+    assert (e_hi >= e_lo) or lo == hi
+
+
+@given(v1=st.floats(0.5, 1.2), v2=st.floats(0.5, 1.2))
+@settings(max_examples=50, deadline=None)
+def test_energy_monotone_in_vdd(v1, v2):
+    lo, hi = sorted((v1, v2))
+    e_lo = energy.peak_energy(_dimc(vdd=lo)).fj_per_mac
+    e_hi = energy.peak_energy(_dimc(vdd=hi)).fj_per_mac
+    assert e_hi >= e_lo - 1e-9
+
+
+def test_bigger_array_amortizes_aimc_converters():
+    """Paper Sec. III: large arrays amortize ADC/DAC cost per MAC."""
+    small = energy.peak_energy(_aimc(rows=64, cols=64)).fj_per_mac
+    big = energy.peak_energy(_aimc(rows=1024, cols=1024)).fj_per_mac
+    assert big < small
+
+
+def test_higher_precision_costs_energy_dimc():
+    """Paper Sec. III: precision drops DIMC efficiency (Fig. 4)."""
+    e4 = energy.peak_tops_per_watt(_dimc(bw=4, bi=4))
+    e8 = energy.peak_tops_per_watt(_dimc(bw=8, bi=8))
+    assert e8 < e4
+
+
+def test_utilization_hurts_efficiency():
+    """Half-used array must cost more fJ/MAC than a full one."""
+    m = _aimc(rows=256, cols=256)
+    full = energy.tile_energy(m, energy.MacroTile(64, 256, 64))
+    half = energy.tile_energy(m, energy.MacroTile(64, 128, 32))
+    assert half.fj_per_mac > full.fj_per_mac
+
+
+def test_booth_reduces_dimc_energy():
+    plain = energy.peak_energy(_dimc(bw=8, bi=8, m=1)).fj_per_mac
+    booth = energy.peak_energy(_dimc(bw=8, bi=8, m=1, booth=True)).fj_per_mac
+    assert booth < plain
+
+
+# -------------------------------------------------------------------- guards
+def test_aimc_requires_converters():
+    with pytest.raises(ValueError):
+        IMCMacro(name="bad", imc_type=IMCType.AIMC, rows=16, cols=16,
+                 tech_nm=22, vdd=0.8, bw=4, bi=4)
+
+
+def test_aimc_rejects_mux():
+    with pytest.raises(ValueError):
+        _aimc(m_mux=4)
+
+
+def test_shape_divisibility_guards():
+    with pytest.raises(ValueError):
+        _dimc(cols=30, bw=4)
+    with pytest.raises(ValueError):
+        _dimc(rows=30, m=4)

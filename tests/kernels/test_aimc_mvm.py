@@ -1,0 +1,90 @@
+"""AIMC charge-domain kernel: matches the ADC-quantization oracle, and
+the quantization error behaves like the paper says it should."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _data(m, k, n, bi, bw, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2 ** bi, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-(2 ** (bw - 1)), 2 ** (bw - 1), (k, n)),
+                    jnp.int32)
+    return x, w
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 256, 16), (32, 700, 40),
+                                   (16, 100, 8), (64, 1024, 128)])
+@pytest.mark.parametrize("adc_res,rows", [(6, 256), (4, 64), (8, 512)])
+def test_aimc_matches_oracle(m, k, n, adc_res, rows):
+    x, w = _data(m, k, n, 4, 4, seed=m + k + adc_res)
+    y = ops.aimc_matmul(x, w, bi=4, bw=4, adc_res=adc_res, rows=rows)
+    yr = ref.aimc_mvm_ref(x, w, 4, 4, adc_res, rows)
+    # identical quantization grid; only f32 association noise remains
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5,
+                               atol=1e-2)
+
+
+def test_high_adc_res_recovers_near_exact():
+    """With enough ADC codes quantization error shrinks to < 1 LSB of
+    the recombined output."""
+    x, w = _data(16, 64, 16, 4, 4)
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    y = ops.aimc_matmul(x, w, bi=4, bw=4, adc_res=16, rows=64)
+    lsb = 64 * 15 / (2 ** 16 - 1)
+    bound = 0.5 * lsb * (2 ** 4)     # per-plane half-LSB, shift-added
+    assert np.abs(np.asarray(y) - exact).max() <= bound
+
+
+def test_error_decreases_with_adc_resolution():
+    """Paper Sec. II-B: AIMC accuracy is bought with ADC resolution."""
+    x, w = _data(32, 512, 32, 4, 4, seed=11)
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    errs = []
+    for adc in (3, 5, 7, 9):
+        y = np.asarray(ops.aimc_matmul(x, w, bi=4, bw=4, adc_res=adc,
+                                       rows=256))
+        errs.append(np.abs(y - exact).mean())
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_larger_arrays_larger_quant_error():
+    """Bigger accumulation depth -> wider dynamic range per code -> more
+    quantization noise (the array-size/accuracy trade-off)."""
+    x, w = _data(16, 1024, 16, 4, 4, seed=13)
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    e_small = np.abs(np.asarray(
+        ops.aimc_matmul(x, w, bi=4, bw=4, adc_res=5, rows=128)) - exact
+    ).mean()
+    e_big = np.abs(np.asarray(
+        ops.aimc_matmul(x, w, bi=4, bw=4, adc_res=5, rows=1024)) - exact
+    ).mean()
+    assert e_big > e_small
+
+
+def test_k_not_multiple_of_rows_padded():
+    x, w = _data(8, 300, 8, 4, 4, seed=7)
+    y = ops.aimc_matmul(x, w, bi=4, bw=4, adc_res=6, rows=256)
+    yr = ref.aimc_mvm_ref(x, w, 4, 4, 6, 256)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+
+
+def test_imc_linear_sim_gradients_and_value():
+    import jax
+    rng = np.random.default_rng(2)
+    xf = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    wf = jnp.asarray(rng.normal(size=(128, 16)), jnp.float32)
+    tol = {"dimc": 0.02, "aimc": 0.35}   # aimc carries real ADC noise
+    for mode in ("dimc", "aimc"):
+        y = ops.imc_linear_sim(xf, wf, mode, 8, 8, 8)
+        rel = np.abs(np.asarray(y) - np.asarray(xf @ wf)).mean() / \
+            np.abs(np.asarray(xf @ wf)).mean()
+        assert rel < tol[mode], (mode, rel)
+        gx, gw = jax.grad(
+            lambda a, b: ops.imc_linear_sim(a, b, mode, 8, 8, 8).sum(),
+            argnums=(0, 1))(xf, wf)
+        assert np.isfinite(np.asarray(gx)).all()
+        assert np.isfinite(np.asarray(gw)).all()

@@ -1,0 +1,52 @@
+"""Integration: the dry-run entry point on the production 512-device
+mesh, one representative cell per step kind (subprocess so the forced
+device count never leaks into other tests)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent.parent
+
+
+def _run_cell(tmp_path, arch, shape, mesh):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", str(tmp_path)]
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: os.environ[k] for k in ("HOME", "TMPDIR")
+                if k in os.environ})
+    res = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads(
+        (tmp_path / f"{arch}__{shape}__{mesh}.json").read_text())
+    return rec
+
+
+@pytest.mark.slow
+def test_train_cell_single_pod(tmp_path):
+    rec = _run_cell(tmp_path, "qwen1.5-0.5b", "train_4k", "single")
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    assert rec["roofline"]["flops_per_device"] > 1e12
+    assert rec["roofline"]["collective_bytes_per_device"] > 0
+    assert rec["memory_analysis"]["resident_bytes_per_device"] < 16 * 2**30
+
+
+@pytest.mark.slow
+def test_decode_cell_multi_pod(tmp_path):
+    rec = _run_cell(tmp_path, "qwen1.5-0.5b", "decode_32k", "multi")
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 512
+
+
+@pytest.mark.slow
+def test_long_context_skip_rule(tmp_path):
+    rec = _run_cell(tmp_path, "glm4-9b", "long_500k", "single")
+    assert rec["status"] == "skipped"
+    rec2 = _run_cell(tmp_path, "rwkv6-7b", "long_500k", "single")
+    assert rec2["status"] == "ok"

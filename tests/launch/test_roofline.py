@@ -1,0 +1,99 @@
+"""Unit tests for the HLO cost extraction + roofline assembly."""
+
+import numpy as np
+
+from repro import hlocost, roofline
+
+SYNTH_HLO = """
+HloModule test
+
+%inner (p0: f32[8,16], p1: f32[16,32]) -> f32[8,32] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %p1 = f32[16,32]{1,0} parameter(1)
+  ROOT %dot.1 = f32[8,32]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%body (carry: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %carry = (s32[], f32[8,16]) parameter(0)
+  %gte = f32[8,16]{1,0} get-tuple-element(%carry), index=1
+  %w = f32[16,32]{1,0} constant({...})
+  %c = f32[8,32]{1,0} call(%gte, %w), to_apply=%inner
+  %ar = f32[8,16]{1,0} all-reduce(%gte), replica_groups={}, to_apply=%add
+  %i = s32[] get-tuple-element(%carry), index=0
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond (carry: (s32[], f32[8,16])) -> pred[] {
+  %carry = (s32[], f32[8,16]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,32]) -> f32[8,32] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,32]{1,0} parameter(1)
+  %init = (s32[], f32[8,16]) tuple(%a)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %ag = f32[64,16]{1,0} all-gather(%a), dimensions={0}
+  ROOT %dot.9 = f32[8,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_dot_flops_counted_with_trip_counts():
+    res = hlocost.analyze(SYNTH_HLO)
+    per_dot = 2 * 8 * 32 * 16                 # 2*M*N*K
+    # entry dot + 5x loop body (call -> inner dot)
+    assert res["flops"] == per_dot * (1 + 5)
+
+
+def test_collectives_counted_with_trip_counts():
+    res = hlocost.analyze(SYNTH_HLO)
+    ar_bytes = 8 * 16 * 4 * 5                  # all-reduce in the loop x5
+    ag_bytes = 64 * 16 * 4                     # entry all-gather
+    assert res["collectives"]["all-reduce"]["bytes"] == ar_bytes
+    assert res["collectives"]["all-reduce"]["count"] == 5
+    assert res["collectives"]["all-gather"]["bytes"] == ag_bytes
+    assert res["collective_bytes"] == ar_bytes + ag_bytes
+
+
+def test_no_traffic_ops_skipped():
+    res = hlocost.analyze(SYNTH_HLO)
+    # parameters/tuples/gtes contribute no bytes; dots and collectives do
+    assert res["bytes"] > 0
+    dot_traffic = (8 * 32 + 8 * 16 + 16 * 32) * 4
+    assert res["bytes"] >= dot_traffic
+
+
+def test_roofline_terms_and_bottleneck():
+    costs = {"flops": 197e12, "bytes": 819e9 * 2, "collective_bytes": 50e9,
+             "collectives": {}}
+    rl = roofline.build("a", "s", "single", 256, costs,
+                        model_flops_total=197e12 * 256 * 0.5,
+                        peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+                        min_bytes_per_device=819e9 * 2)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 2.0) < 1e-9
+    assert abs(rl.collective_s - 1.0) < 1e-9
+    assert rl.bottleneck == "memory"
+    assert abs(rl.useful_flops_ratio - 0.5) < 1e-9
+    assert abs(rl.mfu - 0.25) < 1e-9
+
+
+def test_model_flops_train_vs_decode():
+    from repro import configs
+    cfg = configs.get("qwen1.5-0.5b")
+    tr = roofline.model_flops(cfg, configs.SHAPES["train_4k"])
+    de = roofline.model_flops(cfg, configs.SHAPES["decode_32k"])
+    n = roofline.active_params(cfg)
+    assert tr == 6.0 * n * 256 * 4096
+    assert de == 2.0 * n * 128
+
+
+def test_active_params_moe_scaling():
+    from repro import configs
+    dense_like = roofline.active_params(configs.get("qwen1.5-0.5b"))
+    assert dense_like == configs.get("qwen1.5-0.5b").n_params()
+    moe_cfg = configs.get("olmoe-1b-7b")
+    active = roofline.active_params(moe_cfg)
+    total = moe_cfg.n_params()
+    assert active < total * 0.35               # 8 of 64 experts + shared

@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests (assignment brief, deliverable f):
+instantiate the REDUCED same-family config, run one forward/train step
+on CPU, assert output shapes + finite values; plus one prefill/decode
+round for the serving path.  The FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.lm import LM
+from repro.runtime import optim
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    batch = {}
+    s_text = S - (cfg.img_tokens if cfg.frontend == "image_text" else 0)
+    if cfg.frontend == "frames":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.frame_dim)), jnp.float32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        return batch
+    batch["tokens"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, s_text)), jnp.int32)
+    batch["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, s_text)), jnp.int32)
+    if cfg.frontend == "image_text":
+        batch["images"] = jnp.asarray(
+            rng.normal(size=(B, cfg.img_tokens, cfg.img_dim)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    lm = LM(cfg)
+    rng = np.random.default_rng(0)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+
+    opt_cfg = optim.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10,
+                                moment_dtype=cfg.moment_dtype)
+    state = optim.init_state(params, opt_cfg)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(lm.loss)(params, batch)
+        p2, s2, metrics = optim.apply_updates(params, grads, state, opt_cfg)
+        return p2, s2, loss, metrics
+
+    p2, s2, loss, metrics = step(params, state, batch)
+    assert jnp.isfinite(loss), arch
+    assert jnp.isfinite(metrics["grad_norm"])
+    # params actually moved
+    delta = max(float(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)).max())
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(p2)))
+    assert delta > 0
+    # second step with the updated state keeps the loss finite
+    _, _, loss2, _ = step(p2, s2, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = configs.get_smoke(arch)
+    lm = LM(cfg)
+    rng = np.random.default_rng(1)
+    params = lm.init(jax.random.PRNGKey(2))
+    batch = _batch(cfg, rng)
+    batch.pop("labels")
+
+    logits, cache, pos = jax.jit(
+        lambda p, b: lm.prefill(p, b, max_seq=S + 4))(params, batch)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert jnp.isfinite(logits).all(), arch
+    # padded vocab columns masked out
+    if cfg.padded_vocab != cfg.vocab_size:
+        assert float(logits[..., cfg.vocab_size:].max()) < -1e29
+
+    if cfg.frontend == "frames":
+        tok = jnp.asarray(rng.normal(size=(B, cfg.frame_dim)), jnp.float32)
+    else:
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    logits2, cache2 = jax.jit(lm.decode_step)(params, cache, tok,
+                                              jnp.int32(S))
+    assert logits2.shape == (B, 1, cfg.padded_vocab)
+    assert jnp.isfinite(logits2).all(), arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_full_config_matches_brief(arch):
+    """Pin the exact published dimensions from the assignment table."""
+    cfg = configs.get(arch)
+    want = {
+        "qwen1.5-0.5b": (24, 1024, 2816, 151936),
+        "glm4-9b": (40, 4096, 13696, 151552),
+        "gemma3-1b": (26, 1152, 6912, 262144),
+        "minicpm3-4b": (62, 2560, 6400, 73448),
+        "jamba-1.5-large-398b": (72, 8192, 24576, 65536),
+        "olmoe-1b-7b": (16, 2048, 1024, 50304),
+        "arctic-480b": (35, 7168, 4864, 32000),
+        "paligemma-3b": (18, 2048, 16384, 257216),
+        "musicgen-large": (48, 2048, 8192, 2048),
+        "rwkv6-7b": (32, 4096, 14336, 65536),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == want
+    moe_want = {
+        "jamba-1.5-large-398b": (16, 2), "olmoe-1b-7b": (64, 8),
+        "arctic-480b": (128, 2),
+    }
+    if arch in moe_want:
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == moe_want[arch]
+    if arch == "arctic-480b":
+        assert cfg.moe.dense_residual
+    if arch == "gemma3-1b":
+        assert cfg.attn.sliding_window > 0 and cfg.attn.global_every == 6
+    if arch == "rwkv6-7b":
+        assert cfg.pattern == ("rwkv6",)
+    if arch == "jamba-1.5-large-398b":
+        assert cfg.pattern.count("attn") * 7 == cfg.pattern.count("mamba")
+
+
+@pytest.mark.parametrize("arch,approx_b", [
+    ("qwen1.5-0.5b", 0.62e9), ("glm4-9b", 9.4e9), ("gemma3-1b", 1.0e9),
+    ("minicpm3-4b", 4.1e9), ("jamba-1.5-large-398b", 398e9),
+    ("olmoe-1b-7b", 6.9e9), ("arctic-480b", 482e9),
+    ("paligemma-3b", 2.5e9), ("musicgen-large", 2.1e9),
+    ("rwkv6-7b", 7.6e9),
+])
+def test_param_counts_in_published_ballpark(arch, approx_b):
+    n = configs.get(arch).n_params()
+    assert 0.7 * approx_b < n < 1.4 * approx_b, (arch, n, approx_b)

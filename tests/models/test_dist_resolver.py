@@ -1,0 +1,74 @@
+"""Property tests for the logical-axis resolver (sharding legality is
+load-bearing for every dry-run cell)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+REPO = Path(__file__).resolve().parent.parent.parent
+
+SCRIPT_TMPL = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import math
+import jax
+from repro.models.common import Dist, PLANS
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+for plan in PLANS:
+    dist = Dist(mesh=mesh, plan=plan)
+    # 1. every resolved spec only uses real axes, each at most once
+    for logical in [("dp", "tp"), ("fsdp", "tp"), ("ep", None, "fsdp"),
+                    ("dp", "sp", None), ("tp", "tp"), ("dp_moe", "ep")]:
+        for shape in [(8, 8), (8, 8, 8), (4, 2), (6, 10), (1, 16),
+                      (3, 5), (8, 2, 4)]:
+            if len(shape) < len(logical):
+                continue
+            spec = dist.resolve(tuple(logical[:len(shape)]), shape)
+            used = []
+            for i, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                axes = (entry,) if isinstance(entry, str) else entry
+                for a in axes:
+                    assert a in mesh.axis_names, (plan, logical, spec)
+                    assert a not in used, ("axis reused", plan, spec)
+                    used.append(a)
+                # 2. divisibility always holds after resolution
+                size = math.prod(mesh.shape[a] for a in axes)
+                assert shape[i] % size == 0, (plan, logical, shape, spec)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_resolver_invariants_all_plans():
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    env.update({k: os.environ[k] for k in ("HOME", "TMPDIR")
+                if k in os.environ})
+    res = subprocess.run([sys.executable, "-c", SCRIPT_TMPL], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-1500:]
+    assert "OK" in res.stdout
+
+
+def test_no_mesh_is_noop():
+    from repro.models.common import NO_DIST
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert NO_DIST.shard(x, ("dp", "tp")) is x
+    assert NO_DIST.sharding(("dp",), (4,)) is None
+
+
+@given(st.sampled_from(["dp", "fsdp", "tp", "sp", "ep", "dp_moe"]),
+       st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_resolver_meshless_always_empty(name, dim):
+    from repro.models.common import NO_DIST
+    # meshless resolve returns an empty PartitionSpec
+    assert tuple(NO_DIST.resolve((name,), (dim,))) == ()

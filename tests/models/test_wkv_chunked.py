@@ -1,0 +1,85 @@
+"""Chunkwise-parallel WKV6 == the sequential recurrence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import (_chunked_time_scan, _rwkv_step,
+                              _wkv_chunk_parallel)
+
+
+def _inputs(b=2, s=64, h=3, k=8, seed=0):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.normal(size=(b, s, h, k)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, s, h, k)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, k)), jnp.float32)
+    # realistic decays: w = exp(-exp(dd)), dd ~ N(0,1)
+    logw = -np.exp(rng.normal(size=(b, s, h, k)))
+    u = jnp.asarray(rng.normal(size=(h, k)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(b, h, k, k)), jnp.float32) * 0.1
+    return r, kk, v, jnp.asarray(logw, jnp.float32), u, s0
+
+
+def test_chunked_matches_sequential():
+    r, k, v, logw, u, s0 = _inputs()
+    w = jnp.exp(logw)
+    s_seq, y_seq = _chunked_time_scan(_rwkv_step(u), s0, (r, k, v, w),
+                                      r.shape[1], chunk=16)
+    s_par, y_par = _wkv_chunk_parallel(r, k, v, logw, u, s0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_par), np.asarray(s_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_stable_with_strong_decay():
+    """Strong decays (w -> 0) must not produce inf/nan (the masked-
+    difference-of-cumsums construction keeps all exponents <= 0)."""
+    r, k, v, logw, u, s0 = _inputs(seed=3)
+    logw = logw * 30.0                      # w down to exp(-100)-ish
+    s_par, y_par = _wkv_chunk_parallel(r, k, v, logw, u, s0, chunk=16)
+    assert np.isfinite(np.asarray(y_par)).all()
+    assert np.isfinite(np.asarray(s_par)).all()
+    w = jnp.exp(logw)
+    s_seq, y_seq = _chunked_time_scan(_rwkv_step(u), s0, (r, k, v, w),
+                                      r.shape[1], chunk=16)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_gradients_match():
+    r, k, v, logw, u, s0 = _inputs(b=1, s=32, h=2, k=4, seed=5)
+    w = jnp.exp(logw)
+
+    def f_seq(r):
+        _, y = _chunked_time_scan(_rwkv_step(u), s0, (r, k, v, w),
+                                  r.shape[1], chunk=8)
+        return jnp.sum(y ** 2)
+
+    def f_par(r):
+        _, y = _wkv_chunk_parallel(r, k, v, logw, u, s0, chunk=8)
+        return jnp.sum(y ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f_par)(r)),
+                               np.asarray(jax.grad(f_seq)(r)),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_lm_level_equivalence():
+    """Full rwkv6 smoke model: chunked vs sequential logits agree."""
+    import dataclasses
+    from repro import configs
+    from repro.models.lm import LM
+    cfg = configs.get_smoke("rwkv6-7b")
+    cfg = dataclasses.replace(cfg, param_dtype=jnp.float32,
+                              compute_dtype=jnp.float32)
+    lm_seq = LM(cfg)
+    lm_par = LM(dataclasses.replace(cfg, wkv_chunked=True, scan_chunk=8))
+    params = lm_seq.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                (2, 32)), jnp.int32)}  # 32 % wkv_chunk == 0: chunked path taken
+    xa, _ = lm_seq.forward(params, batch)
+    xb, _ = lm_par.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(xb), np.asarray(xa),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,76 @@
+"""Checkpoint save/restore: atomicity, retention, reshard-on-restore."""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.runtime.checkpoint import Checkpointer, _flatten, _unflatten
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.normal(size=(8, 4)),
+                                        jnp.float32),
+                       "b": jnp.asarray(rng.normal(size=(4,)),
+                                        jnp.float32)},
+            "opt": {"m": {"w": jnp.zeros((8, 4))}},
+            }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    tree = _tree(1)
+    ck.save(7, tree)
+    step, restored = ck.restore()
+    assert step == 7
+    for (ka, va), (kb, vb) in zip(sorted(_flatten(tree).items()),
+                                  sorted(_flatten(restored).items())):
+        assert ka == kb
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=True)
+    ck.save(1, _tree(2))
+    ck.wait()
+    assert ck.latest_step() == 1
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_keep_last_k(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [3, 4]
+
+
+def test_restore_with_target_dtype_and_sharding(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    tree = _tree(3)
+    ck.save(5, tree)
+    target = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16), tree)
+    _, restored = ck.restore(target=target)
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_meta_written(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(9, _tree(4), extra_meta={"arch": "qwen"})
+    meta = json.loads((tmp_path / "step_00000009" / "meta.json").read_text())
+    assert meta["step"] == 9 and meta["arch"] == "qwen"
+
+
+def test_restore_missing_raises(tmp_path):
+    ck = Checkpointer(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        ck.restore()
+
+
+def test_flatten_unflatten_inverse():
+    t = _tree(5)
+    assert jax.tree.structure(_unflatten(_flatten(t))) == \
+        jax.tree.structure(t)

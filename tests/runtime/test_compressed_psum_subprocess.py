@@ -1,0 +1,40 @@
+"""shard_map int8 compressed all-reduce on a forced 8-device mesh
+(subprocess so the device count never leaks)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent.parent
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.runtime.compress import compressed_psum
+
+mesh = jax.make_mesh((8,), ("pod",))
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+exact = 8.0 * x                      # identical shard on every device
+got = compressed_psum(x, mesh, "pod")
+err = float(jnp.max(jnp.abs(got - exact)))
+scale = float(jnp.max(jnp.abs(x))) / 127.0
+assert err <= 8 * scale * 0.5 + 1e-6, (err, scale)
+print("OK", err)
+"""
+
+
+@pytest.mark.slow
+def test_compressed_psum_eight_devices():
+    import os
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    env.update({k: os.environ[k] for k in ("HOME", "TMPDIR")
+                if k in os.environ})
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-1500:]
+    assert "OK" in res.stdout

@@ -1,0 +1,87 @@
+"""AdamW (+ int8 moments) unit tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.runtime import optim
+
+
+def _quad_setup(moment_dtype):
+    c = optim.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0, clip_norm=1e9,
+                          moment_dtype=moment_dtype)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5]),
+              "b": jnp.asarray([[1.0, -1.0], [0.5, 2.0]])}
+    state = optim.init_state(params, c)
+    return c, params, state
+
+
+def _loss(params):
+    return (jnp.sum(jnp.square(params["w"]))
+            + jnp.sum(jnp.square(params["b"])))
+
+
+def test_adamw_converges_on_quadratic():
+    for mdt in (jnp.float32, jnp.bfloat16, optim.INT8_MOMENTS):
+        c, params, state = _quad_setup(mdt)
+        for _ in range(150):
+            grads = jax.grad(_loss)(params)
+            params, state, _ = optim.apply_updates(params, grads, state, c)
+        assert float(_loss(params)) < 1e-2, mdt
+
+
+def test_int8_state_is_actually_int8():
+    c, params, state = _quad_setup(optim.INT8_MOMENTS)
+    grads = jax.grad(_loss)(params)
+    params, state, _ = optim.apply_updates(params, grads, state, c)
+    assert state["m"]["w"]["q"].dtype == jnp.int8
+    assert state["v"]["b"]["q"].dtype == jnp.int8
+    assert state["m"]["w"]["s"].dtype == jnp.float32
+
+
+def test_int8_moments_track_f32_closely():
+    cf, params_f, state_f = _quad_setup(jnp.float32)
+    cq, params_q, state_q = _quad_setup(optim.INT8_MOMENTS)
+    for _ in range(30):
+        gf = jax.grad(_loss)(params_f)
+        params_f, state_f, _ = optim.apply_updates(params_f, gf, state_f, cf)
+        gq = jax.grad(_loss)(params_q)
+        params_q, state_q, _ = optim.apply_updates(params_q, gq, state_q, cq)
+    for k in params_f:
+        np.testing.assert_allclose(np.asarray(params_q[k]),
+                                   np.asarray(params_f[k]),
+                                   rtol=0.15, atol=0.05)
+
+
+def test_grad_clipping():
+    c = optim.AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = optim.init_state(params, c)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = optim.apply_updates(params, huge, state, c)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_schedule_warmup_and_cosine():
+    c = optim.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    assert float(optim.schedule(c, jnp.int32(0))) == 0.0
+    assert abs(float(optim.schedule(c, jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(optim.schedule(c, jnp.int32(100))) - 0.1) < 1e-6
+    mid = float(optim.schedule(c, jnp.int32(55)))
+    assert 0.1 < mid < 1.0
+
+
+def test_state_specs_mirror_params():
+    specs = {"a": ParamSpec((4, 8), ("fsdp", "tp")),
+             "nest": {"b": ParamSpec((3,), (None,))}}
+    c32 = optim.AdamWConfig()
+    st = optim.state_specs(specs, c32)
+    assert st["m"]["a"].shape == (4, 8)
+    assert st["m"]["a"].logical == ("fsdp", "tp")
+    c8 = optim.AdamWConfig(moment_dtype=optim.INT8_MOMENTS)
+    st8 = optim.state_specs(specs, c8)
+    assert st8["m"]["a"]["q"].dtype == jnp.int8
+    assert st8["m"]["a"]["s"].shape == (4, 1)

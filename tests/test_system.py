@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests for the whole system: the training driver
+learns, checkpoints survive restart bit-identically, the serving loop
+streams tokens, and the elastic reshard path restores onto a fresh
+target."""
+
+import jax
+import numpy as np
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+
+
+def test_train_driver_learns_and_checkpoints(tmp_path):
+    ck = tmp_path / "ck"
+    summary = train_mod.main([
+        "--arch", "qwen1.5-0.5b", "--smoke", "--steps", "14",
+        "--global-batch", "4", "--seq-len", "32",
+        "--checkpoint-dir", str(ck), "--checkpoint-every", "7",
+        "--lr", "1e-3",
+    ])
+    assert summary["last_loss"] < summary["first_loss"]
+    assert (ck / "step_00000014").exists()
+
+
+def test_restart_resumes_deterministically(tmp_path):
+    """Train 10 straight vs 5 + restart + 5: same final loss (data is
+    step-seeded, checkpoint carries params+opt state)."""
+    ck_a, ck_b = tmp_path / "a", tmp_path / "b"
+    args = ["--arch", "qwen1.5-0.5b", "--smoke", "--global-batch", "4",
+            "--seq-len", "32", "--lr", "1e-3", "--checkpoint-every", "5",
+            "--total-steps", "10"]
+    full = train_mod.main(args + ["--steps", "10",
+                                  "--checkpoint-dir", str(ck_a)])
+    train_mod.main(args + ["--steps", "5", "--checkpoint-dir", str(ck_b)])
+    resumed = train_mod.main(args + ["--steps", "10", "--resume",
+                                     "--checkpoint-dir", str(ck_b)])
+    np.testing.assert_allclose(resumed["last_loss"], full["last_loss"],
+                               rtol=1e-5)
+
+
+def test_grad_compression_path_trains(tmp_path):
+    summary = train_mod.main([
+        "--arch", "qwen1.5-0.5b", "--smoke", "--steps", "10",
+        "--global-batch", "4", "--seq-len", "32", "--lr", "1e-3",
+        "--grad-compression",
+    ])
+    assert summary["last_loss"] < summary["first_loss"] + 0.05
+
+
+def test_serve_driver_streams(tmp_path):
+    stats = serve_mod.main([
+        "--arch", "qwen1.5-0.5b", "--smoke", "--batch", "2",
+        "--prompt-len", "8", "--gen", "6",
+    ])
+    assert stats["decode_tok_per_s"] > 0
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Save on the default device layout, restore through the elastic
+    path onto explicit target structs (new-mesh stand-in)."""
+    from repro import configs
+    from repro.models.lm import LM
+    from repro.runtime.checkpoint import Checkpointer
+
+    cfg = configs.get_smoke("qwen1.5-0.5b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    ck = Checkpointer(tmp_path / "ck", async_save=False)
+    ck.save(3, {"params": params})
+
+    target = {"params": jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)}
+    step, restored = ck.restore(target=target)
+    assert step == 3
+    a = jax.tree.leaves(params)[0]
+    b = jax.tree.leaves(restored["params"])[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
