@@ -16,37 +16,45 @@ from repro.kernels import ops, ref
 from .common import timed
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    """Full bench, or ``smoke=True``: smaller shapes + single repeat so
+    CI can exercise every kernel path in seconds."""
     rng = np.random.default_rng(0)
-    m, k, n = 128, 1024, 128
+    m, k, n = (32, 256, 32) if smoke else (128, 1024, 128)
     x8 = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int32)
     w8 = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int32)
     xu = jnp.asarray(rng.integers(0, 16, (m, k)), jnp.int32)
     w4 = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int32)
 
+    # tile shapes actually passed to the kernels (also the defaults)
+    bm, bn, bk = 128, 128, 512
+    adc_rows = 128 if smoke else 256
+
     def dimc() -> str:
-        y = ops.dimc_matmul(x8, w8, bi=8, bw=8, bm=128, bn=128, bk=512)
+        y = ops.dimc_matmul(x8, w8, bi=8, bw=8, bm=bm, bn=bn, bk=bk)
         exact = bool((np.asarray(y) ==
                       np.asarray(ref.matmul_int_ref(x8, w8))).all())
-        vmem_kb = (128 * 512 + 512 * 128 + 128 * 128) * 4 / 1024
-        return (f"exact={exact} mxu_passes_per_tile=8 "
+        vmem_kb = (bm * bk + bk * bn + bm * bn) * 4 / 1024
+        return (f"exact={exact} mxu_passes_per_tile={bk // 64} "
                 f"vmem_per_tile={vmem_kb:.0f}KB")
 
     def aimc() -> str:
-        y = ops.aimc_matmul(xu, w4, bi=4, bw=4, adc_res=6, rows=256)
-        yr = ref.aimc_mvm_ref(xu, w4, 4, 4, 6, 256)
+        y = ops.aimc_matmul(xu, w4, bi=4, bw=4, adc_res=6, rows=adc_rows)
+        yr = ref.aimc_mvm_ref(xu, w4, 4, 4, 6, adc_rows)
         match = bool(np.allclose(np.asarray(y), np.asarray(yr), atol=1e-2))
         err = float(jnp.abs(
             y - (xu.astype(jnp.float32) @ w4.astype(jnp.float32))).mean())
-        vmem_kb = (128 * 256 + 256 * 128 + 128 * 128) * 4 / 1024
+        vmem_kb = (bm * adc_rows + adc_rows * bn + bm * bn) * 4 / 1024
         return (f"oracle_match={match} adc_noise_mean={err:.1f} "
-                f"mxu_passes_per_tile=4 vmem_per_tile={vmem_kb:.0f}KB")
+                f"mxu_passes_per_tile={adc_rows // 64} "
+                f"vmem_per_tile={vmem_kb:.0f}KB")
 
     # compile once, then time steady-state
     dimc()
     aimc()
-    timed("kernel_dimc_mvm_128x1024x128", dimc, repeats=3)
-    timed("kernel_aimc_mvm_128x1024x128", aimc, repeats=3)
+    repeats = 1 if smoke else 3
+    timed(f"kernel_dimc_mvm_{m}x{k}x{n}", dimc, repeats=repeats)
+    timed(f"kernel_aimc_mvm_{m}x{k}x{n}", aimc, repeats=repeats)
 
     def qat_step() -> str:
         xf = jnp.asarray(rng.normal(size=(32, 256)), jnp.float32)
@@ -56,4 +64,21 @@ def run() -> None:
         return f"ste_grad_norm={float(jnp.linalg.norm(g)):.1f}"
 
     qat_step()
-    timed("kernel_imc_qat_step", qat_step, repeats=3)
+    timed("kernel_imc_qat_step", qat_step, repeats=repeats)
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    from . import common
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes, single repeat (CI)")
+    args = ap.parse_args(argv)
+    common.header()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

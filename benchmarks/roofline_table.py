@@ -1,6 +1,12 @@
 """Roofline table from the dry-run artifacts (brief §Roofline): three
 terms per (arch x shape) on the single-pod mesh, dominant bottleneck,
-MODEL_FLOPS/HLO_FLOPS ratio."""
+MODEL_FLOPS/HLO_FLOPS ratio.
+
+Also prints an IMC-macro roofline (``imc_roofline_table``): for each
+Table II design x tinyMLPerf network, compute cycles vs the
+weight-write cycles embedded in the schedule and the outer-memory
+traffic, from the batched DSE engine's optimal mappings — the macro
+analogue of the pod compute/memory/collective split."""
 
 from __future__ import annotations
 
@@ -8,6 +14,7 @@ import json
 from pathlib import Path
 
 from repro import configs
+from repro.core import designs, dse, workloads
 
 from .common import timed
 
@@ -60,3 +67,33 @@ def run() -> None:
                 f"failed={len(failed)} optimized={n_opt}")
 
     timed("roofline_table", table)
+
+    def imc_table() -> str:
+        """Macro-level roofline over the batched DSE's optimal mappings:
+        ideal compute cycles at 100 % utilization vs scheduled cycles
+        (the gap is under-utilization + weight rewrites), plus traffic
+        per MAC — compute-bound vs movement-bound per (design, net)."""
+        dse.cache_clear()
+        macros = designs.table2_designs()
+        print(f"# {'network':18s} {'design':24s} {'ideal-cyc':>10s} "
+              f"{'sched-cyc':>10s} {'eff':>5s} {'bits/MAC':>9s} bound")
+        n_compute = 0
+        rows = 0
+        for net_name, fn in workloads.TINYML_NETWORKS.items():
+            layers = fn()
+            for macro in macros:
+                r = dse.map_network(net_name, layers, macro)
+                ideal = sum(l.layer.macs for l in r.layers) \
+                    / (macro.macs_per_cycle * macro.n_macros)
+                eff = ideal / r.total_cycles
+                bits_per_mac = sum(r.traffic_bits().values()) / r.total_macs
+                bound = "compute" if eff > 0.5 else "movement"
+                n_compute += bound == "compute"
+                rows += 1
+                print(f"# {net_name:18s} {macro.name:24s} {ideal:10.3g} "
+                      f"{r.total_cycles:10.3g} {eff:5.2f} "
+                      f"{bits_per_mac:9.2f} {bound}")
+        return (f"pairs={rows} compute_bound={n_compute} "
+                f"movement_bound={rows - n_compute}")
+
+    timed("imc_roofline_table", imc_table)

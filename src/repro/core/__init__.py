@@ -11,12 +11,19 @@ Layout:
     memory.py     outer memory hierarchy traffic/energy
     dse.py        ZigZag-lite mapping search (Sec. VI)
     meshdse.py    the same DSE methodology applied to the TPU pod mesh
+
+The hot path is batched: ``energy.tile_energy_batch`` /
+``mapping.evaluate_batch`` price whole candidate lattices as
+struct-of-arrays and ``dse.best_mapping`` argmins over them, with the
+scalar functions kept as bitwise reference oracles (see the module
+docstrings for the contract).
 """
 
 from .hardware import IMCMacro, IMCType                              # noqa: F401
 from .energy import (                                                # noqa: F401
-    EnergyBreakdown, MacroTile, peak_energy, peak_tops,
-    peak_tops_per_watt, peak_tops_per_mm2, tile_energy,
+    EnergyBreakdown, EnergyBreakdownBatch, MacroTile, peak_energy,
+    peak_tops, peak_tops_per_watt, peak_tops_per_mm2, tile_energy,
+    tile_energy_batch,
 )
 from .designs import (                                               # noqa: F401
     AIMC_DESIGNS, ALL_DESIGNS, DIMC_DESIGNS, DesignPoint,

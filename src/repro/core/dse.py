@@ -6,6 +6,33 @@ model + the outer-memory traffic model, and keep the best under the
 chosen objective (energy, latency, or EDP).  This reproduces the role
 ZigZag plays in the paper: "find the optimal spatial and temporal
 mapping for each architecture and each network layer".
+
+Engines
+-------
+``best_mapping`` supports two engines:
+
+* ``"batch"`` (default) — flatten the candidate lattice into
+  struct-of-arrays (``mapping.candidate_batch``), price every candidate
+  in one vectorized NumPy pass (``mapping.evaluate_batch`` +
+  ``MemoryModel.traffic_energy_batch``) and ``argmin`` the objective
+  column.  The winning index is handed back through the scalar oracle,
+  so the returned :class:`LayerResult` is bitwise identical to the
+  scalar engine's.
+* ``"scalar"`` — the original per-candidate Python loop, kept verbatim
+  as the reference oracle (``best_mapping_scalar``).
+
+The batched objective columns replicate the scalar objective's float
+operation order exactly (see ``mapping``/``energy`` module docstrings),
+so the argmin — including first-wins tie-breaking — selects the same
+candidate.  ``tests/core/test_batched_parity.py`` pins this.
+
+Layer-result cache
+------------------
+Deep networks repeat layer shapes (e.g. the autoencoder's 128x128
+stack); ``best_mapping`` memoizes results keyed on the *cost-relevant*
+layer signature (loop bounds + precisions — not the name), the macro,
+the memory model, the objective, and alpha.  ``cache_clear`` /
+``cache_info`` expose it; the scalar oracle never touches the cache.
 """
 
 from __future__ import annotations
@@ -14,9 +41,12 @@ import dataclasses
 import math
 from typing import Callable, Sequence
 
+import numpy as np
+
 from .energy import EnergyBreakdown
 from .hardware import IMCMacro
-from .mapping import MappingCost, enumerate_mappings, evaluate
+from .mapping import (MappingCost, candidate_batch, enumerate_mappings,
+                      evaluate, evaluate_batch)
 from .memory import MemoryModel
 from .workloads import Layer
 
@@ -108,15 +138,23 @@ OBJECTIVES: dict[str, Objective] = {
 }
 
 
-def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
-                 objective: str = "energy",
-                 alpha: float | None = None) -> LayerResult:
-    """Search the mapping space of one layer; return the argmin."""
+def _layer_resident_bytes(layer: Layer) -> int:
+    return (layer.weight_elems * layer.w_prec
+            + layer.input_elems * layer.i_prec
+            + layer.output_elems * layer.psum_prec) // 8
+
+
+def best_mapping_scalar(layer: Layer, macro: IMCMacro, mem: MemoryModel,
+                        objective: str = "energy",
+                        alpha: float | None = None) -> LayerResult:
+    """Reference oracle: the original per-candidate Python loop.
+
+    Never cached, never vectorized — the batched engine is validated
+    against this function, so keep it boring.
+    """
     obj = OBJECTIVES[objective]
     best: LayerResult | None = None
-    resident = (layer.weight_elems * layer.w_prec
-                + layer.input_elems * layer.i_prec
-                + layer.output_elems * layer.psum_prec) // 8
+    resident = _layer_resident_bytes(layer)
     for sm in enumerate_mappings(layer, macro):
         cost = evaluate(layer, macro, sm, alpha=alpha)
         res = LayerResult(
@@ -129,13 +167,102 @@ def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
     return best
 
 
+def best_mapping_batched(layer: Layer, macro: IMCMacro, mem: MemoryModel,
+                         objective: str = "energy",
+                         alpha: float | None = None) -> LayerResult:
+    """Vectorized search: one NumPy pass over all candidates + argmin.
+
+    The objective columns replicate the scalar objective's float
+    operation order, so ``argmin`` (first minimum wins) picks exactly
+    the candidate ``best_mapping_scalar`` keeps; the winner is then
+    re-priced through the scalar oracle so the returned object is
+    bitwise identical.
+    """
+    resident = _layer_resident_bytes(layer)
+    batch = candidate_batch(layer, macro)
+    if len(batch) == 0:
+        raise ValueError(f"no legal mapping for {layer.name} on {macro.name}")
+    costs = evaluate_batch(layer, macro, batch, alpha=alpha)
+    mem_fj = mem.traffic_energy_batch(costs, resident)
+    # Scalar association: sum(dict.values()) == ((w + i) + o) + p, then
+    # macro total + memory total.
+    mem_total = ((mem_fj["weights"] + mem_fj["inputs"])
+                 + mem_fj["outputs"]) + mem_fj["psums"]
+    total_energy = costs.macro_energy.total_fj + mem_total
+    if objective == "energy":
+        col = total_energy
+    elif objective == "latency":
+        col = costs.cycles
+    elif objective == "edp":
+        col = total_energy * costs.cycles
+    else:
+        raise KeyError(objective)
+    i = int(np.argmin(col))
+    cost = evaluate(layer, macro, batch.mapping_at(i), alpha=alpha)
+    return LayerResult(layer=layer, cost=cost,
+                       memory_energy_fj=mem.traffic_energy_fj(cost, resident))
+
+
+_ENGINES = {"batch": best_mapping_batched, "scalar": best_mapping_scalar}
+
+#: layer-result memo cache: (layer signature, macro, mem, objective, alpha)
+_CACHE: dict[tuple, LayerResult] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _cache_key(layer: Layer, macro: IMCMacro, mem: MemoryModel,
+               objective: str, alpha: float | None) -> tuple:
+    """Cost-relevant signature: everything but the layer *name*."""
+    return (tuple(sorted(layer.dims.items())), layer.w_prec, layer.i_prec,
+            layer.psum_prec, macro, mem, objective, alpha)
+
+
+def cache_clear() -> None:
+    _CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def cache_info() -> dict[str, int]:
+    return {"size": len(_CACHE), **_CACHE_STATS}
+
+
+def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
+                 objective: str = "energy",
+                 alpha: float | None = None,
+                 engine: str = "batch") -> LayerResult:
+    """Search the mapping space of one layer; return the argmin.
+
+    ``engine="batch"`` (default) evaluates all candidates in one
+    vectorized pass and memoizes per layer signature; ``"scalar"`` runs
+    the uncached reference loop.  Both return bitwise-identical results.
+    """
+    if engine == "scalar":
+        return best_mapping_scalar(layer, macro, mem, objective=objective,
+                                   alpha=alpha)
+    if engine not in _ENGINES:
+        raise KeyError(engine)
+    key = _cache_key(layer, macro, mem, objective, alpha)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _CACHE_STATS["hits"] += 1
+        return hit if hit.layer.name == layer.name \
+            else dataclasses.replace(hit, layer=layer)
+    _CACHE_STATS["misses"] += 1
+    res = _ENGINES[engine](layer, macro, mem, objective=objective,
+                           alpha=alpha)
+    _CACHE[key] = res
+    return res
+
+
 def map_network(network: str, layers: Sequence[Layer], macro: IMCMacro,
                 objective: str = "energy",
                 mem: MemoryModel | None = None,
-                alpha: float | None = None) -> NetworkResult:
+                alpha: float | None = None,
+                engine: str = "batch") -> NetworkResult:
     mem = mem or MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
     results = tuple(
-        best_mapping(l, macro, mem, objective=objective, alpha=alpha)
+        best_mapping(l, macro, mem, objective=objective, alpha=alpha,
+                     engine=engine)
         for l in layers if l.imc_eligible)
     return NetworkResult(network=network, macro_name=macro.name,
                          layers=results)

@@ -27,12 +27,33 @@ A switching-activity factor ``alpha`` models the 50 % operand sparsity
 protocol the paper uses for its comparisons (Sec. III).
 
 All energies are in femtojoules (fJ); see ``tech.py`` for units.
+
+Batched evaluation
+------------------
+``tile_energy`` prices ONE tile; the DSE prices thousands of candidate
+tiles per layer.  :func:`tile_energy_batch` evaluates Eq. 1-11 for a
+whole struct-of-arrays batch of tiles on one macro in a single
+vectorized NumPy pass, returning an :class:`EnergyBreakdownBatch`.
+
+Scalar-reference contract: ``tile_energy`` is the oracle.  The batched
+path performs the *same floating-point operations in the same order*
+(each scalar sub-expression is hoisted, each per-tile factor is applied
+in the scalar code's left-to-right association), so for every index
+``i``::
+
+    tile_energy_batch(macro, ...).at(i) == tile_energy(macro, tile_i)
+
+bitwise, not merely approximately.  ``tests/core/test_batched_parity.py``
+enforces this property; any edit to one path must be mirrored in the
+other.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+
+import numpy as np
 
 from . import tech as _tech
 from .hardware import IMCMacro
@@ -212,6 +233,156 @@ def tile_energy(macro: IMCMacro, tile: MacroTile,
     return EnergyBreakdown(
         e_wl=e_wl, e_bl=e_bl, e_logic=e_logic, e_adc=e_adc,
         e_adder_tree=e_tree, e_dac=e_dac, e_weight_write=e_write, macs=macs)
+
+
+# --------------------------------------------------------------------------- #
+# batched (struct-of-arrays) evaluation                                         #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class EnergyBreakdownBatch:
+    """Struct-of-arrays :class:`EnergyBreakdown` over N candidate tiles.
+
+    Every field is a float64 ndarray of shape (N,); ``at(i)`` extracts
+    one candidate as a scalar :class:`EnergyBreakdown`.  ``total_fj``
+    reproduces the scalar property's exact summation order
+    ``(e_mul + e_acc) + e_peripherals) + e_weight_write``.
+    """
+
+    e_wl: np.ndarray
+    e_bl: np.ndarray
+    e_logic: np.ndarray
+    e_adc: np.ndarray
+    e_adder_tree: np.ndarray
+    e_dac: np.ndarray
+    e_weight_write: np.ndarray
+    macs: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.e_wl)
+
+    @property
+    def e_cell(self) -> np.ndarray:
+        return self.e_wl + self.e_bl
+
+    @property
+    def e_mul(self) -> np.ndarray:
+        return self.e_cell + self.e_logic
+
+    @property
+    def e_acc(self) -> np.ndarray:
+        return self.e_adc + self.e_adder_tree
+
+    @property
+    def e_peripherals(self) -> np.ndarray:
+        return self.e_dac
+
+    @property
+    def total_fj(self) -> np.ndarray:
+        return self.e_mul + self.e_acc + self.e_peripherals \
+            + self.e_weight_write
+
+    @property
+    def fj_per_mac(self) -> np.ndarray:
+        return self.total_fj / np.maximum(self.macs, 1.0)
+
+    def scaled(self, k: np.ndarray | float) -> "EnergyBreakdownBatch":
+        return EnergyBreakdownBatch(
+            *(getattr(self, f.name) * k for f in dataclasses.fields(self)))
+
+    def at(self, i: int) -> EnergyBreakdown:
+        return EnergyBreakdown(
+            *(float(getattr(self, f.name)[i])
+              for f in dataclasses.fields(self)))
+
+
+def tile_energy_batch(macro: IMCMacro,
+                      n_inputs: np.ndarray,
+                      rows_used: np.ndarray,
+                      cols_used: np.ndarray,
+                      weight_loads: np.ndarray | int = 1,
+                      alpha: float = DEFAULT_ALPHA) -> EnergyBreakdownBatch:
+    """Vectorized :func:`tile_energy` over N tiles on one macro.
+
+    Arguments are integer arrays of shape (N,) (``weight_loads`` may be
+    a scalar).  Bitwise-identical to the scalar oracle per the module
+    docstring's scalar-reference contract.
+    """
+    n_inputs = np.asarray(n_inputs, dtype=np.int64)
+    rows_used = np.asarray(rows_used, dtype=np.int64)
+    cols_used = np.asarray(cols_used, dtype=np.int64)
+    weight_loads = np.broadcast_to(
+        np.asarray(weight_loads, dtype=np.int64), n_inputs.shape)
+
+    tp = macro.tech_params()
+    v2 = macro.vdd * macro.vdd
+    c_wl = tp.c_inv_ff
+    c_bl = tp.c_inv_ff
+    c_gate = tp.c_gate_ff
+    bw, bi = macro.bw, macro.bi
+    d1, d2, m = macro.d1, macro.d2, macro.m_mux
+    macs = n_inputs.astype(np.float64) * rows_used * cols_used
+
+    rows_drv = np.minimum(rows_used, macro.rows)
+    words = np.minimum(cols_used, d1)
+    mux_rows = np.ceil(rows_drv / m)
+
+    e_wl_line = c_wl * v2 * bw * d1
+    e_bl_word = c_bl * v2 * bw * d2 * m
+
+    if macro.analog:
+        cc_prech = macro.cc_bs * n_inputs
+        e_wl = e_wl_line * rows_drv * cc_prech * alpha
+        e_bl = e_bl_word * words * cc_prech * alpha
+    else:
+        if m > 1:
+            cc_prech = m * n_inputs
+            e_wl = e_wl_line * mux_rows * cc_prech * alpha
+            e_bl = e_bl_word * words * cc_prech * alpha
+        else:
+            cc_prech = weight_loads
+            e_wl = e_wl_line * rows_drv * cc_prech * alpha
+            e_bl = e_bl_word * words * cc_prech * alpha
+
+    if macro.analog:
+        e_logic = np.zeros_like(macs)
+    else:
+        g_mul = float(bw) * macro.cc_bs / bi
+        e_logic = v2 * c_gate * g_mul * macs * alpha
+
+    if macro.analog:
+        conversions = bw * (macs / max(d2, 1))
+        e_adc = _tech.adc_energy_fj(macro.adc_res, macro.vdd) * conversions \
+            / macro.cols_per_adc
+        n_tree, b_tree = max(2, bw), macro.adc_res
+        f_tree = _tech.adder_tree_full_adders(n_tree, b_tree)
+        cc_acc = macro.cc_bs * n_inputs
+        e_tree = c_gate * _tech.G_FA * v2 * words * f_tree * cc_acc * alpha
+    else:
+        e_adc = np.zeros_like(macs)
+        n_tree, b_tree = d2, bw
+        f_tree = _tech.adder_tree_full_adders(n_tree, b_tree)
+        occupancy = np.minimum(1.0, rows_drv / max(d2 * m, 1))
+        cc_acc = macro.cc_bs * m * n_inputs
+        e_tree = (c_gate * _tech.G_FA * v2 * words * f_tree * occupancy
+                  * cc_acc * alpha)
+
+    if macro.analog:
+        cc_bs = macro.cc_bs * n_inputs
+        e_dac = _tech.dac_energy_fj(macro.dac_res, macro.vdd) * rows_drv \
+            * cc_bs
+    else:
+        e_dac = np.zeros_like(macs)
+
+    bits_written = weight_loads * rows_drv * words * bw
+    e_write = WRITE_CINV_FACTOR * tp.c_inv_ff * v2 * bits_written
+
+    return EnergyBreakdownBatch(
+        e_wl=np.asarray(e_wl, dtype=np.float64),
+        e_bl=np.asarray(e_bl, dtype=np.float64),
+        e_logic=e_logic, e_adc=e_adc,
+        e_adder_tree=e_tree,
+        e_dac=np.asarray(e_dac, dtype=np.float64),
+        e_weight_write=np.asarray(e_write, dtype=np.float64), macs=macs)
 
 
 def peak_energy(macro: IMCMacro, alpha: float = DEFAULT_ALPHA,

@@ -14,15 +14,35 @@ The temporal schedule is weight-stationary (the IMC-natural choice): a
 weight tile is written once and all B*OX*OY input vectors stream
 through it; partial sums spill to the outer memory when the
 accumulation depth C*FX*FY exceeds the rows.
+
+Batched evaluation
+------------------
+:func:`evaluate` prices ONE (layer, mapping) pair; the DSE prices the
+whole candidate lattice.  :func:`candidate_batch` flattens a mapping
+sequence into struct-of-arrays unroll factors (:class:`MappingBatch`)
+and :func:`evaluate_batch` prices all of them in one vectorized NumPy
+pass (:class:`MappingCostBatch`), built on
+``energy.tile_energy_batch``.
+
+Scalar-reference contract: :func:`evaluate` is the oracle.  The batched
+path mirrors its arithmetic operation-for-operation (same tiling
+counts, same left-to-right float association), so per-candidate costs
+are bitwise identical and an argmin over the batch selects exactly the
+mapping the scalar loop would (ties break to the first candidate in
+enumeration order in both paths).  Enforced by
+``tests/core/test_batched_parity.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, Mapping
+from typing import Iterator, Mapping, Sequence
 
-from .energy import EnergyBreakdown, MacroTile, tile_energy
+import numpy as np
+
+from .energy import (EnergyBreakdown, EnergyBreakdownBatch, MacroTile,
+                     tile_energy, tile_energy_batch)
 from .hardware import IMCMacro
 from .workloads import Layer
 
@@ -213,3 +233,230 @@ def enumerate_mappings(layer: Layer, macro: IMCMacro,
                     count += 1
                     if count >= max_candidates:
                         return
+
+
+# --------------------------------------------------------------------------- #
+# batched (struct-of-arrays) evaluation                                        #
+# --------------------------------------------------------------------------- #
+#: macro-axis option codes stored in ``MappingBatch.mac_dim``.
+_MAC_NONE = 0
+_MAC_CODES = {d: i + 1 for i, d in enumerate(MACRO_DUP_DIMS)}   # OX/OY/G
+_MAC_K = len(MACRO_DUP_DIMS) + 1
+_MAC_NAMES = {v: k for k, v in _MAC_CODES.items()}
+
+
+@dataclasses.dataclass
+class MappingBatch:
+    """N spatial-mapping candidates for one layer, flattened to arrays.
+
+    Built directly as struct-of-arrays in *exact*
+    ``enumerate_mappings`` order — candidate ``i`` here is the ``i``-th
+    mapping the scalar generator yields, so an argmin index translates
+    straight to the oracle's pick.  ``mapping_at(i)`` materializes one
+    :class:`SpatialMapping` on demand (only the winner usually is);
+    ``mappings`` builds the whole tuple for tests/debugging.
+    """
+
+    k_cols: np.ndarray        # cols["K"] per candidate
+    k_macros: np.ndarray      # macros.get("K", 1)
+    c_un: np.ndarray          # rows["C"]
+    fx_un: np.ndarray         # rows["FX"]
+    fy_un: np.ndarray         # rows["FY"]
+    row_un: np.ndarray        # c_un * fx_un * fy_un
+    mac_dim: np.ndarray       # option code (_MAC_NONE / OX / OY / G / _MAC_K)
+    mac_un: np.ndarray        # unroll of the chosen macro dim (1 if none)
+    dup_macros: np.ndarray    # OX/OY/G macro unroll product (>= 1)
+    n_spatial_temporal: np.ndarray  # prod_d ceil(dim_d / macro_unroll_d)
+
+    def __len__(self) -> int:
+        return len(self.k_cols)
+
+    def mapping_at(self, i: int) -> SpatialMapping:
+        code = int(self.mac_dim[i])
+        if code == _MAC_NONE:
+            mac: dict[str, int] = {}
+        elif code == _MAC_K:
+            mac = {"K": int(self.mac_un[i])}
+        else:
+            mac = {_MAC_NAMES[code]: int(self.mac_un[i])}
+        return SpatialMapping(
+            cols={"K": int(self.k_cols[i])},
+            rows={"C": int(self.c_un[i]), "FX": int(self.fx_un[i]),
+                  "FY": int(self.fy_un[i])},
+            macros=mac)
+
+    @property
+    def mappings(self) -> tuple[SpatialMapping, ...]:
+        return tuple(self.mapping_at(i) for i in range(len(self)))
+
+
+def candidate_batch(layer: Layer, macro: IMCMacro,
+                    max_candidates: int = 4096) -> MappingBatch:
+    """Flatten the legal-mapping lattice of ``layer`` on ``macro`` into a
+    :class:`MappingBatch` without materializing per-candidate objects.
+
+    Replicates the ``enumerate_mappings`` nesting (k_col outer, row
+    lattice middle, macro option inner) with ``np.repeat``/``np.tile``.
+    Every lattice point is legal by construction (all factor lists are
+    capped by both the loop bound and the physical axis), which
+    ``tests/core/test_batched_parity.py`` cross-checks against the
+    generator.
+    """
+    k = layer.dim("K")
+    kcs = _unroll_candidates(k, macro.d1)
+
+    # --- row lattice (shared by every k_col) ----------------------------------
+    rc, rfx, rfy = [], [], []
+    for c_un in _unroll_candidates(layer.dim("C"), macro.rows):
+        rem = macro.rows // c_un
+        for fx_un in _unroll_candidates(layer.dim("FX"), rem):
+            rem2 = rem // fx_un
+            for fy_un in _unroll_candidates(layer.dim("FY"), rem2):
+                rc.append(c_un)
+                rfx.append(fx_un)
+                rfy.append(fy_un)
+    row_c = np.asarray(rc, dtype=np.int64)
+    row_fx = np.asarray(rfx, dtype=np.int64)
+    row_fy = np.asarray(rfy, dtype=np.int64)
+    n_rows = len(row_c)
+
+    # --- macro options: the OX/OY/G (duplication) part is k_col-independent ---
+    dup_dim, dup_un = [_MAC_NONE], [1]
+    if macro.n_macros > 1:
+        for d in MACRO_DUP_DIMS:
+            for u in _unroll_candidates(layer.dim(d), macro.n_macros):
+                if u > 1:
+                    dup_dim.append(_MAC_CODES[d])
+                    dup_un.append(u)
+    spatial_total = math.prod(layer.dim(d) for d in MACRO_DUP_DIMS)
+    dup_nst = [spatial_total if c == _MAC_NONE else
+               math.ceil(layer.dim(_MAC_NAMES[c]) / u)
+               * (spatial_total // layer.dim(_MAC_NAMES[c]))
+               for c, u in zip(dup_dim, dup_un)]
+
+    chunks = []
+    for k_col in kcs:
+        mac_dim = list(dup_dim)
+        mac_un = list(dup_un)
+        mac_nst = list(dup_nst)
+        if macro.n_macros > 1:
+            for u in _unroll_candidates(max(1, k // k_col), macro.n_macros):
+                if u > 1:
+                    mac_dim.append(_MAC_K)
+                    mac_un.append(u)
+                    mac_nst.append(spatial_total)
+        n_mac = len(mac_dim)
+        # enumeration order: rows outer, macro option inner
+        chunks.append((
+            np.full(n_rows * n_mac, k_col, dtype=np.int64),
+            np.repeat(row_c, n_mac), np.repeat(row_fx, n_mac),
+            np.repeat(row_fy, n_mac),
+            np.tile(np.asarray(mac_dim, dtype=np.int64), n_rows),
+            np.tile(np.asarray(mac_un, dtype=np.int64), n_rows),
+            np.tile(np.asarray(mac_nst, dtype=np.int64), n_rows),
+        ))
+
+    k_cols, c_un, fx_un, fy_un, mac_dim_a, mac_un_a, nst = (
+        np.concatenate(parts)[:max_candidates]
+        for parts in zip(*chunks))
+    is_k = mac_dim_a == _MAC_K
+    is_dup = (mac_dim_a != _MAC_NONE) & ~is_k
+    return MappingBatch(
+        k_cols=k_cols,
+        k_macros=np.where(is_k, mac_un_a, 1),
+        c_un=c_un, fx_un=fx_un, fy_un=fy_un,
+        row_un=c_un * fx_un * fy_un,
+        mac_dim=mac_dim_a, mac_un=mac_un_a,
+        dup_macros=np.where(is_dup, mac_un_a, 1),
+        n_spatial_temporal=nst)
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingCostBatch:
+    """Struct-of-arrays :class:`MappingCost` over N candidates."""
+
+    batch: MappingBatch
+    macro_energy: EnergyBreakdownBatch   # already scaled to all tiles/macros
+    weight_tiles: np.ndarray             # int64
+    inputs_per_tile: np.ndarray          # int64
+    cycles: np.ndarray                   # int64 (exact; scalar path is int too)
+    spatial_utilization: np.ndarray      # float64
+    weight_bits: np.ndarray              # int64
+    input_bits: np.ndarray               # int64
+    output_bits: np.ndarray              # int64
+    psum_bits: np.ndarray                # int64
+
+    def __len__(self) -> int:
+        return len(self.batch)
+
+    @property
+    def total_traffic_bits(self) -> np.ndarray:
+        return self.weight_bits + self.input_bits + self.output_bits \
+            + self.psum_bits
+
+    def at(self, i: int, layer: Layer, macro: IMCMacro,
+           alpha: float | None = None) -> MappingCost:
+        """Rebuild candidate ``i`` through the scalar oracle — the DSE
+        returns oracle-exact objects, the arrays only steer the argmin."""
+        return evaluate(layer, macro, self.batch.mapping_at(i), alpha=alpha)
+
+
+def evaluate_batch(layer: Layer, macro: IMCMacro, batch: MappingBatch,
+                   alpha: float | None = None) -> MappingCostBatch:
+    """Vectorized :func:`evaluate` over all candidates in ``batch``.
+
+    Mirrors the scalar oracle operation-for-operation (see module
+    docstring); utilization is the one field computed in float64
+    throughout (the scalar path forms exact big-int products first), so
+    it may differ in the last ulp — it is reporting-only, never an
+    objective.
+    """
+    from .energy import DEFAULT_ALPHA
+    alpha = DEFAULT_ALPHA if alpha is None else alpha
+
+    k_dim = layer.dim("K")
+    acc_depth = layer.accumulation_depth
+    b_dim = layer.dim("B")
+
+    # --- tiling counts (scalar: math.ceil of true division) ------------------
+    n_k_tiles = np.ceil(k_dim / (batch.k_cols * batch.k_macros)
+                        ).astype(np.int64)
+    n_acc_tiles = np.ceil(acc_depth / batch.row_un).astype(np.int64)
+    weight_tiles = n_k_tiles * n_acc_tiles
+    inputs_per_tile = b_dim * batch.n_spatial_temporal
+
+    # --- per-tile energy, scaled as the scalar path does ----------------------
+    rows_used = np.minimum(batch.row_un, acc_depth)
+    cols_used = np.minimum(batch.k_cols, k_dim)
+    active_macros = batch.k_macros * batch.dup_macros
+    e_tile = tile_energy_batch(macro, n_inputs=inputs_per_tile,
+                               rows_used=rows_used, cols_used=cols_used,
+                               weight_loads=np.ones_like(weight_tiles),
+                               alpha=alpha)
+    macro_energy = e_tile.scaled(active_macros).scaled(weight_tiles)
+
+    # --- utilization -----------------------------------------------------------
+    occupied = (rows_used * cols_used * float(macro.bw) * active_macros
+                * weight_tiles * inputs_per_tile)
+    capacity = (float(macro.rows * macro.cols * macro.n_macros)
+                * weight_tiles * inputs_per_tile)
+    spatial_utilization = occupied / capacity
+
+    # --- latency (ints throughout, exact) --------------------------------------
+    cc_per_input = (macro.cc_bs * macro.adc_share if macro.analog
+                    else macro.cc_bs * macro.m_mux)
+    write_cycles = rows_used * weight_tiles
+    cycles = weight_tiles * inputs_per_tile * cc_per_input + write_cycles
+
+    # --- outer-memory traffic ----------------------------------------------------
+    weight_bits = layer.weight_elems * layer.w_prec * batch.dup_macros
+    input_bits = layer.input_elems * layer.i_prec * n_k_tiles
+    output_bits = np.full(len(batch), layer.output_elems * layer.psum_prec,
+                          dtype=np.int64)
+    psum_bits = (layer.output_elems * layer.psum_prec
+                 * 2 * np.maximum(0, n_acc_tiles - 1))
+    return MappingCostBatch(
+        batch=batch, macro_energy=macro_energy, weight_tiles=weight_tiles,
+        inputs_per_tile=inputs_per_tile, cycles=cycles,
+        spatial_utilization=spatial_utilization, weight_bits=weight_bits,
+        input_bits=input_bits, output_bits=output_bits, psum_bits=psum_bits)

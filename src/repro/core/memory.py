@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 
 from . import tech as _tech
-from .mapping import MappingCost
+from .mapping import MappingCost, MappingCostBatch
 
 #: Global-buffer read/write energy per bit, in units of C_inv * V^2.
 #: A ~256 KB SRAM access at 28 nm/0.8 V costs a few fJ/bit; 20x C_inv V^2
@@ -60,3 +60,24 @@ class MemoryModel:
     def total_traffic_energy_fj(self, cost: MappingCost,
                                 resident_bytes: int = 0) -> float:
         return sum(self.traffic_energy_fj(cost, resident_bytes).values())
+
+    def traffic_energy_batch(self, costs: MappingCostBatch,
+                             resident_bytes: int = 0) -> dict:
+        """Vectorized :meth:`traffic_energy_fj` over a candidate batch.
+
+        Same per-bit pricing and the same off-chip decision (the
+        working set is a property of the layer, not the mapping), so
+        each entry is bitwise-equal to the scalar path's.
+        """
+        per_bit = self.sram_fj_per_bit()
+        off_chip = resident_bytes > self.buffer_bytes
+        if off_chip:
+            per_bit_w = per_bit + self.dram_fj_per_bit
+        else:
+            per_bit_w = per_bit
+        return {
+            "weights": costs.weight_bits * per_bit_w,
+            "inputs": costs.input_bits * per_bit,
+            "outputs": costs.output_bits * per_bit,
+            "psums": costs.psum_bits * per_bit,
+        }

@@ -17,8 +17,10 @@ dry-run — hypothesis -> measure, the loop the brief prescribes.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.common import PLANS
 from repro.roofline import _specs_bytes
@@ -130,9 +132,65 @@ def estimate_plan(cfg, shape, plan: str, chips: int = 256,
 
 def choose_plan(cfg, shape, chips: int = 256, **kw) -> PlanEstimate:
     """argmin over plans, feasibility-constrained (like the mapping DSE
-    discards unrollings that do not fit the array)."""
+    discards unrollings that do not fit the array).
+
+    This is the scalar oracle; :func:`choose_plan_grid` runs the same
+    selection over the full (plan x chips x axis-split) lattice with a
+    single masked argmin, mirroring ``dse.best_mapping_batched``.
+    """
     cands = [estimate_plan(cfg, shape, p, chips=chips, **kw)
              for p in PLANS]
     feasible = [c for c in cands if c.fits]
     pool = feasible or cands
     return min(pool, key=lambda c: c.step_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridChoice:
+    """Result of a lattice search over (plan, chips, data/model split)."""
+
+    best: PlanEstimate
+    chips: int
+    data_axis: int
+    model_axis: int
+    n_candidates: int
+
+    @property
+    def plan(self) -> str:
+        return self.best.plan
+
+
+def choose_plan_grid(cfg, shape,
+                     chips_options: Sequence[int] = (64, 128, 256, 512),
+                     **kw) -> GridChoice:
+    """Batched pod-level DSE: materialize every (plan, chips,
+    power-of-two data/model split) candidate, collect ``step_s`` and
+    feasibility into flat arrays, and pick the winner with one masked
+    argmin — exactly the struct-of-arrays selection
+    ``dse.best_mapping_batched`` performs over spatial mappings.
+
+    Infeasible candidates (state does not fit HBM) are masked to +inf;
+    if nothing fits, the plain argmin picks the least-bad, matching
+    :func:`choose_plan`'s fallback.  Ties break to the first candidate
+    in lattice order (plan-major within a split, splits within a chip
+    count), again mirroring the mapping DSE.
+    """
+    cands: list[PlanEstimate] = []
+    meta: list[tuple[int, int, int]] = []
+    for chips in chips_options:
+        d = 1
+        while d <= chips:
+            if chips % d == 0:
+                for plan in PLANS:
+                    cands.append(estimate_plan(
+                        cfg, shape, plan, chips=chips, data_axis=d,
+                        model_axis=chips // d, **kw))
+                    meta.append((chips, d, chips // d))
+            d *= 2
+    step = np.asarray([c.step_s for c in cands])
+    fits = np.asarray([c.fits for c in cands])
+    masked = np.where(fits, step, np.inf)
+    i = int(np.argmin(masked)) if fits.any() else int(np.argmin(step))
+    chips, data_axis, model_axis = meta[i]
+    return GridChoice(best=cands[i], chips=chips, data_axis=data_axis,
+                      model_axis=model_axis, n_candidates=len(cands))

@@ -23,7 +23,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -40,7 +40,7 @@ def gpipe(stage_fn, stage_params, x, *, mesh: Mesh, axis: str = "pod"):
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(),
-        check_vma=False)
+        check_rep=False)
     def run(params_local, x_all):
         sid = jax.lax.axis_index(axis)
         params_here = jax.tree.map(lambda t: t[0], params_local)

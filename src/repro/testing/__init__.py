@@ -1,0 +1,11 @@
+"""Test-support utilities shipped with the package.
+
+``repro.testing.hypocompat`` re-exports the real `hypothesis` API when
+it is installed (the ``[dev]`` extra pins it) and otherwise provides a
+small deterministic property-test driver with the same surface, so the
+tier-1 suite collects and runs in minimal containers.
+"""
+
+from . import hypocompat
+
+__all__ = ["hypocompat"]

@@ -1,0 +1,147 @@
+"""Hypothesis-compatible property-testing shim.
+
+The test suite uses a small slice of the `hypothesis` API:
+``@given(...)`` with positional or keyword strategies, ``@settings(...)``
+with ``max_examples``/``deadline``, and the ``integers`` / ``floats`` /
+``booleans`` / ``sampled_from`` strategies.  When `hypothesis` is
+installed (``pip install repro[dev]``) this module re-exports it
+verbatim.  When it is not — e.g. the minimal benchmark container — a
+deterministic fallback with the same surface drives each test with
+seeded pseudo-random examples, so the tier-1 suite stays runnable
+everywhere.  The fallback is intentionally simple: no shrinking, no
+example database, a per-test seed derived from the test name (stable
+across runs and processes).
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import assume, given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import hashlib
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Rejected(Exception):
+        """Raised by :func:`assume` to discard one drawn example."""
+
+    def assume(condition: bool) -> bool:
+        if not condition:
+            raise _Rejected()
+        return True
+
+    class _Strategy:
+        """A draw rule: ``draw(rng) -> value``."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def map(self, fn) -> "_Strategy":
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred) -> "_Strategy":
+            def draw(rng: random.Random):
+                for _ in range(1000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise _Rejected()
+            return _Strategy(draw)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float = 0.0, max_value: float = 1.0,
+                   allow_nan: bool = False, allow_infinity: bool = False):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(lambda rng: rng.choice(pool))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def lists(elems, min_size: int = 0, max_size: int = 10):
+            return _Strategy(lambda rng: [
+                elems.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+    st = _Strategies()
+
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        def deco(fn):
+            fn._hypocompat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            sig_params = [p for p in inspect.signature(fn).parameters
+                          if p != "self"]
+            # Positional strategies bind to the trailing parameters, the
+            # leading ones stay for pytest fixtures (hypothesis semantics).
+            pos_names = sig_params[len(sig_params) - len(arg_strategies):]
+            strategies = dict(zip(pos_names, arg_strategies))
+            strategies.update(kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_hypocompat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = int.from_bytes(hashlib.sha256(
+                    fn.__qualname__.encode()).digest()[:8], "big")
+                rng = random.Random(seed)
+                ran = 0
+                attempts = 0
+                while ran < n and attempts < n * 50:
+                    attempts += 1
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **{**kwargs, **drawn})
+                    except _Rejected:
+                        continue
+                    # Exception only: pytest.skip()/xfail() and
+                    # KeyboardInterrupt derive from BaseException and
+                    # must keep their control-flow meaning.
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"falsifying example ({ran + 1}/{n}): "
+                            f"{fn.__name__}(**{drawn!r})") from exc
+                    ran += 1
+                return None
+
+            # pytest must only see the non-strategy params (fixtures);
+            # otherwise it hunts for fixtures named like the strategies.
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            return wrapper
+        return deco

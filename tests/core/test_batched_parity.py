@@ -1,0 +1,243 @@
+"""Scalar-vs-batched DSE engine parity + golden-value regressions.
+
+The batched engine (``energy.tile_energy_batch``,
+``mapping.candidate_batch`` / ``evaluate_batch``,
+``dse.best_mapping_batched``) promises *bitwise* agreement with the
+scalar reference oracle — same floats, same argmin winner, same
+tie-breaking.  These tests enforce that contract over random
+AIMC/DIMC macros and layers, pin it on the paper's Fig. 7 case-study
+networks, and freeze golden ``EnergyBreakdown`` totals for the anchor
+designs so the model's numerics cannot drift silently.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.testing.hypocompat import (  # real hypothesis when installed
+    given, settings, st)
+
+from repro.core import designs, dse, energy, mapping, workloads
+from repro.core.hardware import IMCMacro, IMCType
+from repro.core.memory import MemoryModel
+
+
+# --------------------------------------------------------------------------- #
+# random design-point / workload generators                                   #
+# --------------------------------------------------------------------------- #
+def _make_macro(analog, rows, d1, bw, bi, m, adc, dac, n_macros,
+                tech_nm, vdd) -> IMCMacro:
+    if analog:
+        return IMCMacro(name="h-aimc", imc_type=IMCType.AIMC, rows=rows,
+                        cols=d1 * bw, tech_nm=tech_nm, vdd=vdd, bw=bw,
+                        bi=bi, adc_res=adc, dac_res=dac, n_macros=n_macros)
+    return IMCMacro(name="h-dimc", imc_type=IMCType.DIMC, rows=rows,
+                    cols=d1 * bw, tech_nm=tech_nm, vdd=vdd, bw=bw, bi=bi,
+                    m_mux=m, n_macros=n_macros)
+
+
+MACRO_STRAT = dict(
+    analog=st.booleans(),
+    rows=st.sampled_from([64, 128, 256, 512]),
+    d1=st.sampled_from([4, 16, 64, 256]),
+    bw=st.sampled_from([2, 4, 8]),
+    bi=st.sampled_from([2, 4, 8]),
+    m=st.sampled_from([1, 4, 16]),       # rows above are all % 16 == 0
+    adc=st.integers(3, 8),
+    dac=st.sampled_from([1, 2, 4]),
+    n_macros=st.sampled_from([1, 4, 12]),
+    tech_nm=st.sampled_from([5, 22, 28, 65]),
+    vdd=st.sampled_from([0.6, 0.8, 1.0]),
+)
+
+LAYER_STRAT = dict(
+    b=st.sampled_from([1, 4]),
+    k=st.integers(1, 96),
+    c=st.integers(1, 96),
+    ox=st.sampled_from([1, 5, 16]),
+    oy=st.sampled_from([1, 7, 16]),
+    fx=st.sampled_from([1, 3]),
+    fy=st.sampled_from([1, 3]),
+)
+
+
+def _make_layer(b, k, c, ox, oy, fx, fy):
+    return workloads.Layer("h-layer", "conv2d",
+                           dict(B=b, K=k, C=c, OX=ox, OY=oy, FX=fx, FY=fy))
+
+
+# --------------------------------------------------------------------------- #
+# tile_energy vs tile_energy_batch                                            #
+# --------------------------------------------------------------------------- #
+@given(**MACRO_STRAT)
+@settings(max_examples=60, deadline=None)
+def test_tile_energy_batch_bitwise(analog, rows, d1, bw, bi, m, adc, dac,
+                                   n_macros, tech_nm, vdd):
+    macro = _make_macro(analog, rows, d1, bw, bi, m, adc, dac, n_macros,
+                        tech_nm, vdd)
+    rng = np.random.default_rng(rows * d1 + bw)
+    n = 17
+    n_inputs = rng.integers(1, 5000, n)
+    rows_used = rng.integers(1, macro.rows + 1, n)
+    cols_used = rng.integers(1, macro.d1 + 1, n)
+    loads = rng.integers(1, 9, n)
+    batch = energy.tile_energy_batch(macro, n_inputs=n_inputs,
+                                     rows_used=rows_used,
+                                     cols_used=cols_used, weight_loads=loads)
+    for i in range(n):
+        ref = energy.tile_energy(macro, energy.MacroTile(
+            n_inputs=int(n_inputs[i]), rows_used=int(rows_used[i]),
+            cols_used=int(cols_used[i]), weight_loads=int(loads[i])))
+        assert batch.at(i) == ref       # dataclass eq -> exact float eq
+
+
+# --------------------------------------------------------------------------- #
+# candidate_batch vs enumerate_mappings (sequence identity)                    #
+# --------------------------------------------------------------------------- #
+@given(**{**MACRO_STRAT, **LAYER_STRAT})
+@settings(max_examples=40, deadline=None)
+def test_candidate_batch_matches_generator(analog, rows, d1, bw, bi, m, adc,
+                                           dac, n_macros, tech_nm, vdd,
+                                           b, k, c, ox, oy, fx, fy):
+    macro = _make_macro(analog, rows, d1, bw, bi, m, adc, dac, n_macros,
+                        tech_nm, vdd)
+    layer = _make_layer(b, k, c, ox, oy, fx, fy)
+    gen = list(mapping.enumerate_mappings(layer, macro))
+    batch = mapping.candidate_batch(layer, macro)
+    assert len(batch) == len(gen)
+    assert batch.mappings == tuple(gen)
+
+
+# --------------------------------------------------------------------------- #
+# evaluate vs evaluate_batch (per-candidate bitwise costs)                     #
+# --------------------------------------------------------------------------- #
+@given(**{**MACRO_STRAT, **LAYER_STRAT})
+@settings(max_examples=25, deadline=None)
+def test_evaluate_batch_bitwise(analog, rows, d1, bw, bi, m, adc, dac,
+                                n_macros, tech_nm, vdd, b, k, c, ox, oy,
+                                fx, fy):
+    macro = _make_macro(analog, rows, d1, bw, bi, m, adc, dac, n_macros,
+                        tech_nm, vdd)
+    layer = _make_layer(b, k, c, ox, oy, fx, fy)
+    batch = mapping.candidate_batch(layer, macro)
+    costs = mapping.evaluate_batch(layer, macro, batch)
+    rng = np.random.default_rng(k * 7 + c)
+    idx = rng.integers(0, len(batch), min(12, len(batch)))
+    for i in map(int, idx):
+        ref = mapping.evaluate(layer, macro, batch.mapping_at(i))
+        assert costs.macro_energy.at(i) == ref.macro_energy
+        assert int(costs.cycles[i]) == ref.cycles
+        assert int(costs.weight_tiles[i]) == ref.weight_tiles
+        assert int(costs.inputs_per_tile[i]) == ref.inputs_per_tile
+        assert int(costs.weight_bits[i]) == ref.weight_bits
+        assert int(costs.input_bits[i]) == ref.input_bits
+        assert int(costs.output_bits[i]) == ref.output_bits
+        assert int(costs.psum_bits[i]) == ref.psum_bits
+        # utilization is float-accumulated in the batch (reporting only)
+        assert math.isclose(float(costs.spatial_utilization[i]),
+                            ref.spatial_utilization, rel_tol=1e-12)
+
+
+# --------------------------------------------------------------------------- #
+# best_mapping: batched argmin == scalar loop, all objectives                  #
+# --------------------------------------------------------------------------- #
+@given(**{**MACRO_STRAT, **LAYER_STRAT,
+          "objective": st.sampled_from(["energy", "latency", "edp"])})
+@settings(max_examples=25, deadline=None)
+def test_best_mapping_engines_agree(analog, rows, d1, bw, bi, m, adc, dac,
+                                    n_macros, tech_nm, vdd, b, k, c, ox, oy,
+                                    fx, fy, objective):
+    macro = _make_macro(analog, rows, d1, bw, bi, m, adc, dac, n_macros,
+                        tech_nm, vdd)
+    layer = _make_layer(b, k, c, ox, oy, fx, fy)
+    mem = MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+    a = dse.best_mapping_scalar(layer, macro, mem, objective=objective)
+    bres = dse.best_mapping_batched(layer, macro, mem, objective=objective)
+    assert a == bres                     # bitwise: same mapping, same floats
+
+
+def test_fig7_layers_bit_identical():
+    """Acceptance pin: every layer of the Fig. 7 case-study networks on
+    every Table II design — batched winner == scalar winner, bitwise."""
+    for net_name, fn in workloads.TINYML_NETWORKS.items():
+        layers = fn()
+        for macro in designs.table2_designs():
+            mem = MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+            for layer in layers:
+                if not layer.imc_eligible:
+                    continue
+                a = dse.best_mapping_scalar(layer, macro, mem)
+                b = dse.best_mapping_batched(layer, macro, mem)
+                assert a == b, (net_name, macro.name, layer.name)
+
+
+# --------------------------------------------------------------------------- #
+# layer-result cache                                                          #
+# --------------------------------------------------------------------------- #
+def test_cache_hits_repeated_layers_and_preserves_results():
+    dse.cache_clear()
+    macro = designs.table2_designs()[0]
+    net = dse.map_network("dae", workloads.deep_autoencoder(), macro)
+    info = dse.cache_info()
+    # the autoencoder's 128x128 shape recurs 6 times -> 5 cache hits
+    assert info["hits"] >= 5
+    assert info["misses"] + info["hits"] == len(net.layers)
+    # cached results carry the *caller's* layer name, not the first seen
+    assert [r.layer.name for r in net.layers] \
+        == [l.name for l in workloads.deep_autoencoder()]
+    # and equal the uncached scalar engine end to end
+    ref = dse.map_network("dae", workloads.deep_autoencoder(), macro,
+                          engine="scalar")
+    assert net == ref
+
+
+def test_cache_distinguishes_objective_and_alpha():
+    dse.cache_clear()
+    macro = designs.table2_designs()[2]
+    layer = workloads.dense("d", 4, 256, 64)
+    mem = MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+    r1 = dse.best_mapping(layer, macro, mem, objective="energy")
+    r2 = dse.best_mapping(layer, macro, mem, objective="latency")
+    r3 = dse.best_mapping(layer, macro, mem, alpha=0.5)
+    assert dse.cache_info()["misses"] == 3
+    assert r1.cost.cycles >= r2.cost.cycles
+    assert r3.total_energy_fj != r1.total_energy_fj
+
+
+# --------------------------------------------------------------------------- #
+# golden-value regressions: anchor designs (paper Sec. III / Fig. 5)           #
+# --------------------------------------------------------------------------- #
+GOLDEN_PEAK = [
+    # (design, total_fj, fj_per_mac, tops_per_watt) at DEFAULT_ALPHA
+    ("papistas21-4b4b", 7209176866.320549, 1.492015368888889,
+     1340.468765740268),
+    ("dong20-4b4b", 120413121.27680513, 7.177181320000001,
+     278.6609270169588),
+    ("chih21-4b4b", 1508050269.8862183, 22.47170016, 89.00083152408882),
+    ("fujiwara22-4b4b", 528439182.48640513, 7.874357439375,
+     253.9889781989301),
+    ("tu22-8b8b", 837665247.3709364, 49.92873951023438, 40.057089756692946),
+]
+
+
+@pytest.mark.parametrize("name,total_fj,fj_per_mac,tops_w", GOLDEN_PEAK)
+def test_golden_peak_energy(name, total_fj, fj_per_mac, tops_w):
+    bd = energy.peak_energy(designs.by_name(name).macro)
+    assert bd.total_fj == pytest.approx(total_fj, rel=1e-12)
+    assert bd.fj_per_mac == pytest.approx(fj_per_mac, rel=1e-12)
+    assert bd.tops_per_watt == pytest.approx(tops_w, rel=1e-12)
+
+
+def test_golden_peak_energy_batch_path():
+    """The batched evaluator reproduces the golden peaks exactly."""
+    for name, total_fj, _, _ in GOLDEN_PEAK:
+        macro = designs.by_name(name).macro
+        bd = energy.tile_energy_batch(
+            macro, n_inputs=np.array([4096]),
+            rows_used=np.array([macro.rows]),
+            cols_used=np.array([macro.d1]),
+            weight_loads=np.array([1]))
+        peak = dataclasses.replace(bd.at(0), e_weight_write=0.0)
+        assert peak.total_fj == pytest.approx(total_fj, rel=1e-12)

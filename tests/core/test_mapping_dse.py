@@ -3,7 +3,8 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypocompat import (  # real hypothesis when installed
+    given, settings, st)
 
 from repro.core import designs, dse, mapping, workloads
 from repro.core.hardware import IMCMacro, IMCType

@@ -3,7 +3,8 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypocompat import (  # real hypothesis when installed
+    given, settings, st)
 
 from repro.kernels import ops, ref
 

@@ -3,6 +3,7 @@ mesh, one representative cell per step kind (subprocess so the forced
 device count never leaks into other tests)."""
 
 import json
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -15,8 +16,11 @@ REPO = Path(__file__).resolve().parent.parent.parent
 def _run_cell(tmp_path, arch, shape, mesh):
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
            "--shape", shape, "--mesh", mesh, "--out", str(tmp_path)]
-    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
-    import os
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           # pin the CPU backend: these scripts force host-platform
+           # devices, and without this jax probes for a TPU via the
+           # GCP metadata server (30 retries -> minutes of hang)
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     env.update({k: os.environ[k] for k in ("HOME", "TMPDIR")
                 if k in os.environ})
     res = subprocess.run(cmd, capture_output=True, text=True, env=env,

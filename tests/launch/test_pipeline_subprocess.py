@@ -1,5 +1,6 @@
 """GPipe-over-pod-axis correctness on a forced 4-device mesh."""
 
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -45,7 +46,11 @@ print("OK")
 @pytest.mark.slow
 def test_gpipe_matches_sequential():
     import os
-    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           # pin the CPU backend: these scripts force host-platform
+           # devices, and without this jax probes for a TPU via the
+           # GCP metadata server (30 retries -> minutes of hang)
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     env.update({k: os.environ[k] for k in ("HOME", "TMPDIR")
                 if k in os.environ})
     res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,

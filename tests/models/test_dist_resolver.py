@@ -7,7 +7,8 @@ import sys
 from pathlib import Path
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypocompat import (  # real hypothesis when installed
+    given, settings, st)
 
 REPO = Path(__file__).resolve().parent.parent.parent
 
@@ -48,7 +49,11 @@ print("OK")
 
 @pytest.mark.slow
 def test_resolver_invariants_all_plans():
-    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           # pin the CPU backend: these scripts force host-platform
+           # devices, and without this jax probes for a TPU via the
+           # GCP metadata server (30 retries -> minutes of hang)
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     env.update({k: os.environ[k] for k in ("HOME", "TMPDIR")
                 if k in os.environ})
     res = subprocess.run([sys.executable, "-c", SCRIPT_TMPL], env=env,

@@ -68,3 +68,23 @@ def test_meshdse_plan_choices():
     for p in ("ddp", "dp_fsdp"):
         est = meshdse.estimate_plan(configs.get("arctic-480b"), shape, p)
         assert not est.fits
+
+
+def test_meshdse_grid_search():
+    """The batched lattice search must agree with the scalar oracle on
+    its own lattice point and never pick a slower feasible plan."""
+    from repro import configs
+    from repro.core import meshdse
+    shape = configs.SHAPES["train_4k"]
+    for arch in ("qwen1.5-0.5b", "arctic-480b"):
+        cfg = configs.get(arch)
+        oracle = meshdse.choose_plan(cfg, shape, chips=256)
+        grid = meshdse.choose_plan_grid(cfg, shape, chips_options=(256,))
+        assert grid.chips == 256
+        assert grid.data_axis * grid.model_axis == 256
+        if oracle.fits:
+            # the oracle's fixed 16x16 split is inside the grid's
+            # lattice and feasible, so the feasibility-masked grid
+            # winner can only be at least as fast
+            assert grid.best.fits
+            assert grid.best.step_s <= oracle.step_s * (1 + 1e-12)

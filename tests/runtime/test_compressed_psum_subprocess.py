@@ -1,6 +1,7 @@
 """shard_map int8 compressed all-reduce on a forced 8-device mesh
 (subprocess so the device count never leaks)."""
 
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -31,7 +32,11 @@ print("OK", err)
 @pytest.mark.slow
 def test_compressed_psum_eight_devices():
     import os
-    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           # pin the CPU backend: these scripts force host-platform
+           # devices, and without this jax probes for a TPU via the
+           # GCP metadata server (30 retries -> minutes of hang)
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     env.update({k: os.environ[k] for k in ("HOME", "TMPDIR")
                 if k in os.environ})
     res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
