@@ -1,0 +1,85 @@
+"""Dense macro-grid design-space sweep, AIMC vs DIMC (the follow-up
+work arXiv 2405.14978 sweeps thousands of macro configurations per
+workload; this reproduces that experiment shape on the paper's cost
+model).
+
+One ``dse.sweep`` call prices every (design x mapping-candidate) pair
+of each tinyMLPerf workload through the jitted grid engine and reports,
+per IMC type, the best design under energy / latency / EDP plus the
+(energy, latency, area) Pareto frontier — the macro-level answer to
+"which IMC style wins where".
+
+Run:  PYTHONPATH=src python -m benchmarks.design_sweep [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import designs, dse, workloads
+
+from .common import timed
+
+
+def make_grid(smoke: bool = False) -> designs.MacroBatch:
+    """The swept knob ranges: >= 1000 designs (a 2405.14978-scale dense
+    grid) in full mode, a handful in smoke mode so CI stays fast."""
+    if smoke:
+        return designs.macro_grid(
+            rows=(64, 256), cols=(256,), adc_bits=(4, 6), dac_bits=(2,),
+            m_mux=(1, 16), tech_nm=(22,), vdd=(0.8,))
+    return designs.macro_grid(
+        rows=(64, 128, 256, 512, 1024), cols=(128, 256, 512),
+        adc_bits=(4, 5, 6, 7, 8), dac_bits=(1, 2, 4), m_mux=(1, 4, 16),
+        tech_nm=(5, 22, 28), vdd=(0.7, 0.8))
+
+
+def run(smoke: bool = False) -> None:
+    grid = make_grid(smoke)
+    nets = (("deep_autoencoder", workloads.deep_autoencoder()),)
+    if not smoke:
+        nets += (("resnet8", workloads.resnet8()),)
+
+    for net_name, layers in nets:
+        def sweep_net() -> str:
+            res = dse.sweep(net_name, layers, grid)
+            aimc = np.flatnonzero(grid.analog)
+            dimc = np.flatnonzero(~grid.analog)
+            total_macs = sum(l.macs for l in layers if l.imc_eligible)
+
+            def best_of(idx: np.ndarray) -> int:
+                return int(idx[np.argmin(res.energy_fj[idx])])
+
+            print(f"# {net_name}: {len(grid)} designs "
+                  f"({len(aimc)} AIMC / {len(dimc)} DIMC), "
+                  f"objective={res.objective}")
+            print(f"# {'design':44s} {'fJ/MAC':>8s} {'Mcycles':>9s} "
+                  f"{'mm2':>7s}")
+            for tag, d in (("best AIMC", best_of(aimc)),
+                           ("best DIMC", best_of(dimc))):
+                print(f"# {tag}: {grid.names[d]:42s}"
+                      f" {res.energy_fj[d] / total_macs:8.2f}"
+                      f" {res.cycles[d] / 1e6:9.2f}"
+                      f" {res.area_mm2[d]:7.3f}")
+            front = res.pareto()
+            for d in front[:5]:
+                print(f"#   pareto {grid.names[d]:42s}"
+                      f" {res.energy_fj[d] / total_macs:8.2f}"
+                      f" {res.cycles[d] / 1e6:9.2f}"
+                      f" {res.area_mm2[d]:7.3f}")
+            winner = "AIMC" if bool(grid.analog[res.best()]) else "DIMC"
+            return (f"designs={len(grid)} pareto={len(front)} "
+                    f"energy_winner={winner}")
+
+        timed(f"design_sweep_{net_name}", sweep_net)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid + single network so CI can exercise "
+                         "the full grid path in seconds")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

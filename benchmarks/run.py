@@ -5,7 +5,7 @@ CSV rows; `#`-prefixed lines are human-readable detail."""
 
 from __future__ import annotations
 
-from . import (common, fig4_survey, fig5_validation, fig6_tech,
+from . import (common, design_sweep, fig4_survey, fig5_validation, fig6_tech,
                fig7_casestudy, kernel_bench, lm_imc_casestudy,
                roofline_table)
 
@@ -17,6 +17,7 @@ def main() -> None:
     fig6_tech.run()
     fig7_casestudy.run()
     lm_imc_casestudy.run()
+    design_sweep.run()
     roofline_table.run()
     kernel_bench.run()
     print(f"# total benchmarks: {len(common.ROWS)}")

@@ -22,7 +22,10 @@ Reference keys follow the paper's bibliography: e.g. ``jia21`` = [24],
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+import itertools
+from typing import Iterable, Sequence
+
+import numpy as np
 
 from .hardware import IMCMacro, IMCType
 
@@ -198,6 +201,164 @@ def iter_designs(imc_type: IMCType | None = None) -> Iterable[DesignPoint]:
     for d in ALL_DESIGNS:
         if imc_type is None or d.macro.imc_type is imc_type:
             yield d
+
+
+# --------------------------------------------------------------------------- #
+# design-axis batching: struct-of-arrays macro grids                           #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MacroBatch:
+    """D macro design points flattened to struct-of-arrays knob columns.
+
+    This is the *design axis* of the batched DSE: where
+    ``mapping.MappingBatch`` vectorizes over candidate mappings of one
+    macro, a ``MacroBatch`` vectorizes over macro designs, so the grid
+    engine (``energy.tile_energy_grid`` / ``mapping.evaluate_grid``)
+    can price a (design x mapping-candidate) lattice in one pass.
+
+    Every array has shape (D,).  ``macro_at(i)`` returns the scalar
+    :class:`~repro.core.hardware.IMCMacro` the row was built from, so
+    grid results can always be handed back through the scalar oracles.
+    Build with :func:`MacroBatch.from_macros` or :func:`macro_grid`.
+    """
+
+    macros: tuple[IMCMacro, ...]
+    rows: np.ndarray          # int64, R
+    cols: np.ndarray          # int64, C (bit columns)
+    bw: np.ndarray            # int64
+    bi: np.ndarray            # int64
+    adc_res: np.ndarray       # int64 (0 for DIMC)
+    dac_res: np.ndarray       # int64 (0 for DIMC)
+    m_mux: np.ndarray         # int64 (1 for AIMC)
+    n_macros: np.ndarray      # int64
+    cols_per_adc: np.ndarray  # int64
+    adc_share: np.ndarray     # int64
+    analog: np.ndarray        # bool
+    booth: np.ndarray         # bool
+    tech_nm: np.ndarray       # float64
+    vdd: np.ndarray           # float64
+    d1: np.ndarray            # int64, cols // bw
+    d2: np.ndarray            # int64, rows // m_mux
+    cc_bs: np.ndarray         # int64, cycles per streamed input operand
+
+    def __len__(self) -> int:
+        return len(self.macros)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(m.name for m in self.macros)
+
+    def macro_at(self, i: int) -> IMCMacro:
+        return self.macros[i]
+
+    def area_mm2(self) -> np.ndarray:
+        """Per-design macro area [mm^2] (scalar area model per row)."""
+        return np.array([m.area_mm2 for m in self.macros], dtype=np.float64)
+
+    @staticmethod
+    def from_macros(macros: Sequence[IMCMacro]) -> "MacroBatch":
+        ms = tuple(macros)
+        if not ms:
+            raise ValueError("MacroBatch needs at least one design")
+        col = lambda attr, dt: np.array([getattr(m, attr) for m in ms],
+                                        dtype=dt)
+        return MacroBatch(
+            macros=ms,
+            rows=col("rows", np.int64), cols=col("cols", np.int64),
+            bw=col("bw", np.int64), bi=col("bi", np.int64),
+            adc_res=col("adc_res", np.int64), dac_res=col("dac_res", np.int64),
+            m_mux=col("m_mux", np.int64), n_macros=col("n_macros", np.int64),
+            cols_per_adc=col("cols_per_adc", np.int64),
+            adc_share=col("adc_share", np.int64),
+            analog=col("analog", bool), booth=col("booth", bool),
+            tech_nm=col("tech_nm", np.float64), vdd=col("vdd", np.float64),
+            d1=col("d1", np.int64), d2=col("d2", np.int64),
+            cc_bs=col("cc_bs", np.int64))
+
+
+def macro_grid(*,
+               imc_type: str | IMCType | Sequence[str | IMCType] =
+               (IMCType.AIMC, IMCType.DIMC),
+               rows: Sequence[int] = (64, 128, 256, 512, 1024),
+               cols: Sequence[int] = (256,),
+               bw: Sequence[int] = (4,),
+               bi: Sequence[int] = (4,),
+               adc_bits: Sequence[int] = (4, 5, 6, 7, 8),
+               dac_bits: Sequence[int] = (1, 2, 4),
+               m_mux: Sequence[int] = (1, 4, 16),
+               n_macros: Sequence[int] = (1,),
+               tech_nm: Sequence[float] = (28,),
+               vdd: Sequence[float] = (0.8,),
+               cols_per_adc: Sequence[int] = (1,),
+               adc_share: Sequence[int] = (8,),
+               booth: Sequence[bool] = (False,),
+               name_prefix: str = "grid") -> MacroBatch:
+    """Expand knob ranges into a deduplicated :class:`MacroBatch`.
+
+    The cartesian product of all knob axes is walked in a fixed,
+    documented order (imc_type outer, then rows, cols, bw, bi,
+    n_macros, tech_nm, vdd, then the type-specific axes).  Knob axes
+    that do not apply to a type are collapsed before deduplication:
+    AIMC points force ``m_mux=1`` (paper Sec. IV-B1) and ignore the
+    ``booth`` axis; DIMC points force ``adc_bits = dac_bits = 0`` and
+    ignore ``cols_per_adc`` / ``adc_share``.  Physically impossible
+    combinations (``cols`` not a multiple of ``bw``, ``rows`` not a
+    multiple of ``m_mux``) are dropped, so the returned batch contains
+    only constructible designs; it raises if nothing survives.
+    """
+    if isinstance(imc_type, (str, IMCType)):
+        imc_type = (imc_type,)
+    types = tuple(IMCType(t) for t in imc_type)
+
+    out: list[IMCMacro] = []
+    seen: set[tuple] = set()
+    for t in types:
+        analog = t is IMCType.AIMC
+        for r, c, w, i, nm, tn, v in itertools.product(
+                rows, cols, bw, bi, n_macros, tech_nm, vdd):
+            if c % w:
+                continue
+            if analog:
+                spec_axes = itertools.product(adc_bits, dac_bits,
+                                              cols_per_adc, adc_share)
+            else:
+                spec_axes = itertools.product(m_mux, booth)
+            for spec in spec_axes:
+                if analog:
+                    adc, dac, cpa, share = spec
+                    m, bo = 1, False
+                    if adc <= 0 or dac <= 0:
+                        continue
+                else:
+                    m, bo = spec
+                    adc = dac = 0
+                    cpa, share = 1, 8
+                    if r % m:
+                        continue
+                key = (t, r, c, w, i, adc, dac, m, nm, cpa, share, bo, tn, v)
+                if key in seen:
+                    continue
+                seen.add(key)
+                if analog:
+                    tag = f"a{adc}d{dac}"
+                    # non-default ADC sharing must be name-visible, or
+                    # distinct designs collide on one name
+                    if cpa != 1:
+                        tag += f"p{cpa}"
+                    if share != 8:
+                        tag += f"s{share}"
+                else:
+                    tag = f"m{m}" + ("b" if bo else "")
+                out.append(IMCMacro(
+                    name=f"{name_prefix}-{t.value}-r{r}c{c}w{w}i{i}-{tag}"
+                         f"-x{nm}-{tn:g}nm-{v:g}V",
+                    imc_type=t, rows=r, cols=c, tech_nm=tn, vdd=v, bw=w,
+                    bi=i, adc_res=adc, dac_res=dac, m_mux=m, n_macros=nm,
+                    cols_per_adc=cpa, adc_share=share, booth=bo))
+    if not out:
+        raise ValueError("macro_grid: no legal design point in the given "
+                         "knob ranges")
+    return MacroBatch.from_macros(out)
 
 
 # --------------------------------------------------------------------------- #

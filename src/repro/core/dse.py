@@ -33,6 +33,34 @@ stack); ``best_mapping`` memoizes results keyed on the *cost-relevant*
 layer signature (loop bounds + precisions — not the name), the macro,
 the memory model, the objective, and alpha.  ``cache_clear`` /
 ``cache_info`` expose it; the scalar oracle never touches the cache.
+
+Design-space sweeps
+-------------------
+:func:`sweep` adds the second batching axis: instead of one macro, it
+takes a whole ``designs.MacroBatch`` (typically from
+``designs.macro_grid``) and prices every (design x mapping-candidate)
+pair of every layer in one fused pass (``mapping.candidate_grid`` /
+``mapping.evaluate_grid`` on top of the jitted
+``energy.tile_energy_grid``).  Per design it keeps the per-layer
+argmin under the chosen objective — the same winner, bitwise, that
+running ``best_mapping`` per design would keep — and returns a
+:class:`SweepResult`:
+
+* ``energy_fj`` / ``cycles`` / ``edp`` / ``area_mm2`` — (D,) network
+  totals per design, bitwise equal to ``map_network`` on that design;
+* ``pareto_mask()`` / ``pareto()`` — the non-dominated designs over
+  (energy, latency, area), the paper-style efficiency frontier;
+* ``best()`` — argmin design index under the sweep objective;
+* ``network_result(d)`` — the full scalar-oracle
+  :class:`NetworkResult` for design ``d``, rebuilt from the stored
+  winning mappings without re-searching.
+
+Typical use::
+
+    grid = designs.macro_grid(rows=(256, 512), adc_bits=(4, 6, 8))
+    res = dse.sweep("resnet8", workloads.resnet8(), grid)
+    for d in res.pareto():
+        print(res.designs.macro_at(d).name, res.energy_fj[d])
 """
 
 from __future__ import annotations
@@ -43,6 +71,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from .designs import MacroBatch
 from .energy import EnergyBreakdown
 from .hardware import IMCMacro
 from .mapping import (MappingCost, candidate_batch, enumerate_mappings,
@@ -252,6 +281,168 @@ def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
                            alpha=alpha)
     _CACHE[key] = res
     return res
+
+
+# --------------------------------------------------------------------------- #
+# design-space sweep: batch over designs x mappings                            #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Per-design best-mapping network totals over a macro grid.
+
+    All arrays have shape (D,) and are indexed by the design's position
+    in ``designs``.  Totals are accumulated in the scalar engine's
+    float association, so ``energy_fj[d]`` et al. are bitwise what
+    ``map_network(..., designs.macro_at(d))`` reports.
+    """
+
+    network: str
+    objective: str
+    designs: MacroBatch
+    energy_fj: np.ndarray                # (D,) total network energy
+    cycles: np.ndarray                   # (D,) total network latency
+    area_mm2: np.ndarray                 # (D,) macro area
+    layer_names: tuple[str, ...]         # IMC-eligible layers, network order
+    # per distinct layer shape: (layer, grid, best_idx (D,)) — enough to
+    # rebuild any design's full scalar-oracle result without re-searching.
+    _shapes: tuple = dataclasses.field(repr=False, default=())
+    _layer_shape: tuple[int, ...] = dataclasses.field(repr=False, default=())
+    _alpha: float | None = dataclasses.field(repr=False, default=None)
+    _mem: MemoryModel | None = dataclasses.field(repr=False, default=None)
+
+    def __len__(self) -> int:
+        return len(self.energy_fj)
+
+    @property
+    def edp(self) -> np.ndarray:
+        return self.energy_fj * self.cycles
+
+    def best(self, objective: str | None = None) -> int:
+        """Index of the best design under ``objective`` (default: the
+        sweep objective)."""
+        col = {"energy": self.energy_fj, "latency": self.cycles,
+               "edp": self.edp}[objective or self.objective]
+        return int(np.argmin(col))
+
+    def pareto_mask(self) -> np.ndarray:
+        """(D,) bool: design is non-dominated over (energy, latency,
+        area) — no other design is <= on all three axes and < on one.
+        O(D^2) pairwise scan; fine for grids of a few thousand points."""
+        pts = np.stack([self.energy_fj, self.cycles.astype(np.float64),
+                        self.area_mm2], axis=1)
+        ge_all = (pts[:, None, :] >= pts[None, :, :]).all(-1)   # [i,j]: j<=i
+        gt_any = (pts[:, None, :] > pts[None, :, :]).any(-1)    # [i,j]: j<i
+        dominated = (ge_all & gt_any).any(axis=1)
+        return ~dominated
+
+    def pareto(self) -> np.ndarray:
+        """Indices of the Pareto-frontier designs, sorted by energy."""
+        idx = np.flatnonzero(self.pareto_mask())
+        return idx[np.argsort(self.energy_fj[idx], kind="stable")]
+
+    def network_result(self, d: int) -> NetworkResult:
+        """Rebuild design ``d``'s full :class:`NetworkResult` through the
+        scalar oracle, from the stored winning mappings (no re-search)."""
+        macro = self.designs.macro_at(d)
+        mem = self._mem or MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+        shape_results: dict[int, LayerResult] = {}
+        results = []
+        for name, si in zip(self.layer_names, self._layer_shape):
+            if si not in shape_results:
+                layer, grid, best_idx = self._shapes[si]
+                sm = grid.cand.mapping_at(int(best_idx[d]))
+                cost = evaluate(layer, macro, sm, alpha=self._alpha)
+                shape_results[si] = LayerResult(
+                    layer=layer, cost=cost,
+                    memory_energy_fj=mem.traffic_energy_fj(
+                        cost, _layer_resident_bytes(layer)))
+            r = shape_results[si]
+            results.append(r if r.layer.name == name
+                           else dataclasses.replace(
+                               r, layer=dataclasses.replace(r.layer,
+                                                            name=name)))
+        return NetworkResult(network=self.network, macro_name=macro.name,
+                             layers=tuple(results))
+
+
+def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
+          objective: str = "energy", alpha: float | None = None,
+          mem: MemoryModel | None = None) -> SweepResult:
+    """Price a whole macro grid against a workload in one batched pass.
+
+    For every design in ``designs`` (a ``designs.MacroBatch``) and every
+    IMC-eligible layer, the full legal-mapping lattice is evaluated
+    through the jitted grid engine and the per-layer argmin under
+    ``objective`` is kept — the same candidate, bitwise, that
+    ``best_mapping`` would pick on that design (the grid's masked
+    candidate axis preserves the scalar enumeration order, so even ties
+    break identically).  Repeated layer shapes are priced once, like
+    the layer-result cache.
+
+    ``mem=None`` (default) gives each design its own
+    ``MemoryModel(tech_nm, vdd)``, matching ``map_network``; passing an
+    explicit model prices every design against that one memory system.
+    """
+    from .mapping import candidate_grid, evaluate_grid
+    from .memory import (DRAM_FJ_PER_BIT, sram_fj_per_bit_grid,
+                         traffic_energy_grid)
+
+    if objective not in OBJECTIVES:
+        raise KeyError(objective)
+    eligible = [l for l in layers if l.imc_eligible]
+    if not eligible:
+        raise ValueError(f"{network}: no IMC-eligible layers")
+    n_designs = len(designs)
+    if mem is None:
+        per_bit = sram_fj_per_bit_grid(designs.tech_nm, designs.vdd)
+        buffer_bytes, dram = MemoryModel.buffer_bytes, DRAM_FJ_PER_BIT
+    else:
+        per_bit = mem.sram_fj_per_bit()
+        buffer_bytes, dram = mem.buffer_bytes, mem.dram_fj_per_bit
+
+    shapes: list[tuple] = []
+    shape_index: dict[tuple, int] = {}
+    layer_shape: list[int] = []
+    for layer in eligible:
+        key = (tuple(sorted(layer.dims.items())), layer.w_prec,
+               layer.i_prec, layer.psum_prec)
+        if key not in shape_index:
+            grid = candidate_grid(layer, designs)
+            costs = evaluate_grid(layer, designs, grid, alpha=alpha)
+            mem_fj = traffic_energy_grid(
+                per_bit, costs, _layer_resident_bytes(layer),
+                buffer_bytes=buffer_bytes, dram_fj_per_bit=dram)
+            # scalar association: ((w + i) + o) + p, then macro + mem
+            mem_total = ((mem_fj["weights"] + mem_fj["inputs"])
+                         + mem_fj["outputs"]) + mem_fj["psums"]
+            total = costs.macro_energy.total_fj + mem_total
+            if objective == "energy":
+                col = np.where(grid.legal, total, np.inf)
+            elif objective == "latency":
+                col = np.where(grid.legal, costs.cycles,
+                               np.iinfo(np.int64).max)
+            else:                                     # edp
+                col = np.where(grid.legal, total * costs.cycles, np.inf)
+            best_idx = np.argmin(col, axis=1)
+            take = lambda a: np.take_along_axis(
+                a, best_idx[:, None], axis=1)[:, 0]
+            shape_index[key] = len(shapes)
+            shapes.append((layer, grid, best_idx,
+                           take(total), take(costs.cycles)))
+        layer_shape.append(shape_index[key])
+
+    # network totals, accumulated in layer order like NetworkResult's sums
+    energy = np.zeros(n_designs, dtype=np.float64)
+    cycles = np.zeros(n_designs, dtype=np.int64)
+    for si in layer_shape:
+        energy = energy + shapes[si][3]
+        cycles = cycles + shapes[si][4]
+    return SweepResult(
+        network=network, objective=objective, designs=designs,
+        energy_fj=energy, cycles=cycles, area_mm2=designs.area_mm2(),
+        layer_names=tuple(l.name for l in eligible),
+        _shapes=tuple((s[0], s[1], s[2]) for s in shapes),
+        _layer_shape=tuple(layer_shape), _alpha=alpha, _mem=mem)
 
 
 def map_network(network: str, layers: Sequence[Layer], macro: IMCMacro,

@@ -385,6 +385,168 @@ def tile_energy_batch(macro: IMCMacro,
         e_weight_write=np.asarray(e_write, dtype=np.float64), macs=macs)
 
 
+# --------------------------------------------------------------------------- #
+# grid (design x candidate) evaluation, JAX-jitted                              #
+# --------------------------------------------------------------------------- #
+# The design axis (see ``designs.MacroBatch``) broadcasts against the
+# candidate axis: per-design constants enter as (D, 1) columns, per-tile
+# arguments as (1, C) rows (or full (D, C) grids), and one fused XLA pass
+# prices the whole lattice.
+#
+# Bitwise contract with the scalar oracle: the jitted kernel below is
+# deliberately *addition-free* in float — every float output is a pure
+# product/division/min/max/where chain, which XLA:CPU evaluates exactly
+# like NumPy.  (Float add-of-product expressions are NOT safe under XLA,
+# which contracts ``a*b + c`` into a fused multiply-add; the summations
+# of Eq. 1/7 therefore live in ``EnergyBreakdownBatch``'s properties,
+# evaluated on the returned NumPy arrays in the scalar association.)
+
+_GRID_KERNEL = None          # lazily-built jax.jit closure
+
+
+def _grid_kernel():
+    global _GRID_KERNEL
+    if _GRID_KERNEL is None:
+        import jax
+        import jax.numpy as jnp
+
+        def kernel(analog, mmux1, rows, d1, bw, m, cc_bs,
+                   e_wl_line, e_bl_word, p_logic, adc_e, denom_adc,
+                   cols_per_adc, f_tree_a, f_tree_d, p_tree, denom_occ,
+                   dac_e, p_write,
+                   n_inputs, rows_used, cols_used, weight_loads, alpha):
+            macs = n_inputs.astype(jnp.float64) * rows_used * cols_used
+            rows_drv = jnp.minimum(rows_used, rows)
+            words = jnp.minimum(cols_used, d1)
+            mux_rows = jnp.ceil(rows_drv / m)
+
+            # E_cell (Eq. 3-5): cc_prech and the wordline count are the
+            # only branch-dependent factors.
+            cc_prech = jnp.where(
+                analog, cc_bs * n_inputs,
+                jnp.where(mmux1, weight_loads, m * n_inputs))
+            wl_rows = jnp.where(analog | mmux1, rows_drv, mux_rows)
+            e_wl = e_wl_line * wl_rows * cc_prech * alpha
+            e_bl = e_bl_word * words * cc_prech * alpha
+
+            # E_logic (Eq. 6), DIMC only.
+            e_logic = jnp.where(analog, 0.0, p_logic * macs * alpha)
+
+            # E_ADC (Eq. 8), AIMC only.
+            conversions = bw * (macs / denom_adc)
+            e_adc = jnp.where(analog, adc_e * conversions / cols_per_adc, 0.0)
+
+            # E_adder_tree (Eq. 9-10).
+            cc_acc_a = cc_bs * n_inputs
+            e_tree_a = p_tree * words * f_tree_a * cc_acc_a * alpha
+            occupancy = jnp.minimum(1.0, rows_drv / denom_occ)
+            cc_acc_d = (cc_bs * m) * n_inputs
+            e_tree_d = (p_tree * words * f_tree_d * occupancy
+                        * cc_acc_d * alpha)
+            e_tree = jnp.where(analog, e_tree_a, e_tree_d)
+
+            # E_DAC (Eq. 11), AIMC only.
+            e_dac = jnp.where(analog,
+                              dac_e * rows_drv * (cc_bs * n_inputs), 0.0)
+
+            # weight (re)write extension
+            bits_written = weight_loads * rows_drv * words * bw
+            e_write = p_write * bits_written
+            return e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, macs
+
+        _GRID_KERNEL = jax.jit(kernel)
+    return _GRID_KERNEL
+
+
+def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
+                     weight_loads: np.ndarray | int = 1,
+                     alpha: float = DEFAULT_ALPHA) -> EnergyBreakdownBatch:
+    """Vectorized :func:`tile_energy` over a (design x tile) lattice.
+
+    ``designs`` is a :class:`repro.core.designs.MacroBatch` of D macro
+    design points; the tile arguments are integer arrays broadcastable
+    to a common (..., C) shape, which is crossed with the design axis
+    into (D, C) outputs.  One fused ``jax.jit`` pass (on whatever
+    backend JAX finds; float64 via ``jax.experimental.enable_x64``)
+    prices the lattice; the result is bitwise identical to running the
+    scalar oracle at every (design, tile) pair — the same contract
+    ``tile_energy_batch`` honours per macro, extended over designs.
+    """
+    from jax.experimental import enable_x64
+
+    n_inputs = np.atleast_1d(np.asarray(n_inputs, dtype=np.int64))
+    rows_used = np.atleast_1d(np.asarray(rows_used, dtype=np.int64))
+    cols_used = np.atleast_1d(np.asarray(cols_used, dtype=np.int64))
+    weight_loads = np.broadcast_to(
+        np.asarray(weight_loads, dtype=np.int64), n_inputs.shape)
+
+    cst = _design_constants(designs)
+    col = lambda a: a[:, None]                     # (D,) -> (D, 1)
+    with enable_x64():
+        parts = _grid_kernel()(
+            col(cst["analog"]), col(cst["mmux1"]), col(cst["rows"]),
+            col(cst["d1"]), col(cst["bw"]), col(cst["m"]), col(cst["cc_bs"]),
+            col(cst["e_wl_line"]), col(cst["e_bl_word"]), col(cst["p_logic"]),
+            col(cst["adc_e"]), col(cst["denom_adc"]), col(cst["cols_per_adc"]),
+            col(cst["f_tree_a"]), col(cst["f_tree_d"]), col(cst["p_tree"]),
+            col(cst["denom_occ"]), col(cst["dac_e"]), col(cst["p_write"]),
+            n_inputs, rows_used, cols_used, weight_loads, alpha)
+        parts = tuple(np.asarray(p, dtype=np.float64) for p in parts)
+    # design-independent fields (e.g. macs) come back (C,); give every
+    # field the full (D, C) face so indexing is uniform.
+    shape = np.broadcast_shapes(*(p.shape for p in parts))
+    return EnergyBreakdownBatch(*(np.broadcast_to(p, shape) for p in parts))
+
+
+def _design_constants(designs) -> dict[str, np.ndarray]:
+    """Per-design scalar prefactors of Eq. 1-11, shape (D,).
+
+    Computed in NumPy float64 with exactly the scalar oracle's
+    left-to-right association, so the jitted kernel only ever sees the
+    same floats :func:`tile_energy` works with.
+    """
+    tech = np.asarray(designs.tech_nm, dtype=np.float64)
+    vdd = np.asarray(designs.vdd, dtype=np.float64)
+    v2 = vdd * vdd
+    c_inv = _tech.CINV_SLOPE_FF_PER_NM * tech + _tech.CINV_OFFSET_FF
+    c_gate = _tech.GATE_CAP_FACTOR * c_inv
+    bw = designs.bw
+    d1, d2, m = designs.d1, designs.d2, designs.m_mux
+    cc_bs = designs.cc_bs
+
+    e_wl_line = c_inv * v2 * bw * d1
+    e_bl_word = c_inv * v2 * bw * d2 * m
+    # p_logic * macs * alpha == v2 * c_gate * g_mul * macs * alpha: the
+    # scalar path's ((v2 * c_gate) * g_mul) prefix is design-constant.
+    g_mul = bw.astype(np.float64) * cc_bs / designs.bi
+    p_logic = v2 * c_gate * g_mul
+    adc_e = (_tech.K1_ADC_FJ * designs.adc_res
+             + _tech.K2_ADC_FJ * 4.0 ** designs.adc_res) * vdd * vdd
+    dac_e = _tech.K3_DAC_FJ * designs.dac_res * vdd * vdd
+    f_tree_a = _adder_tree_fa_arr(np.maximum(2, bw), designs.adc_res)
+    f_tree_d = _adder_tree_fa_arr(d2, bw)
+    p_tree = c_gate * _tech.G_FA * v2
+    p_write = WRITE_CINV_FACTOR * c_inv * v2
+    return dict(
+        analog=np.asarray(designs.analog, dtype=bool),
+        mmux1=np.asarray(m == 1, dtype=bool),
+        rows=designs.rows, d1=d1, bw=bw, m=m, cc_bs=cc_bs,
+        e_wl_line=e_wl_line, e_bl_word=e_bl_word, p_logic=p_logic,
+        adc_e=adc_e, denom_adc=np.maximum(d2, 1),
+        cols_per_adc=designs.cols_per_adc,
+        f_tree_a=f_tree_a, f_tree_d=f_tree_d, p_tree=p_tree,
+        denom_occ=np.maximum(d2 * m, 1), dac_e=dac_e, p_write=p_write)
+
+
+def _adder_tree_fa_arr(n_inputs: np.ndarray, b_in: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`repro.core.tech.adder_tree_full_adders`."""
+    n = n_inputs.astype(np.float64)
+    b = b_in.astype(np.float64)
+    with np.errstate(divide="ignore"):
+        f = b * n + n - b - np.log2(n) - 1.0
+    return np.where(n_inputs <= 1, 0.0, f)
+
+
 def peak_energy(macro: IMCMacro, alpha: float = DEFAULT_ALPHA,
                 n_inputs: int = 4096) -> EnergyBreakdown:
     """Peak-efficiency protocol: full array, weights loaded once, long

@@ -371,6 +371,246 @@ def candidate_batch(layer: Layer, macro: IMCMacro,
         n_spatial_temporal=nst)
 
 
+# --------------------------------------------------------------------------- #
+# grid (design x candidate) evaluation                                          #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MappingGrid:
+    """The union candidate lattice of one layer over D macro designs.
+
+    Different designs have different legal-mapping lattices (the unroll
+    caps depend on ``d1`` / ``rows`` / ``n_macros``), so the grid holds
+    the *union* lattice as one flat :class:`MappingBatch` of C
+    candidates plus a (D, C) ``legal`` mask.  The union is ordered
+    exactly like ``enumerate_mappings`` orders candidates (k_col outer,
+    row triple middle, macro option inner, each axis ascending), and a
+    design's legal subsequence *is* its own enumeration order — so a
+    masked argmin over the candidate axis tie-breaks identically to the
+    scalar oracle's first-wins loop, per design.
+    """
+
+    cand: MappingBatch        # union lattice, flat candidate axis (C,)
+    legal: np.ndarray         # (D, C) bool: candidate j legal on design i
+
+    @property
+    def n_designs(self) -> int:
+        return self.legal.shape[0]
+
+    def __len__(self) -> int:
+        return len(self.cand)
+
+    def mappings_for(self, d: int) -> tuple[SpatialMapping, ...]:
+        """Design ``d``'s legal candidates, in its enumeration order."""
+        return tuple(self.cand.mapping_at(int(j))
+                     for j in np.flatnonzero(self.legal[d]))
+
+
+def _pow2_member(u: np.ndarray, dim: int | np.ndarray,
+                 cap: np.ndarray) -> np.ndarray:
+    """Vectorized membership in ``_unroll_candidates(dim, cap)``.
+
+    The generator emits {1} | {powers of two < cap'} | {cap'} | {dim if
+    dim <= cap'} with cap' = max(1, min(dim, cap)); this predicate
+    reproduces that set exactly for any broadcastable (u, dim, cap).
+    """
+    u = np.asarray(u, dtype=np.int64)
+    cap2 = np.maximum(1, np.minimum(dim, cap))
+    is_pow2 = (u & (u - 1)) == 0            # u >= 1 everywhere in the lattice
+    return ((u == 1) | (u == cap2) | (is_pow2 & (u < cap2))
+            | ((u == dim) & (dim <= cap2)))
+
+
+def candidate_grid(layer: Layer, designs,
+                   max_candidates: int = 4096) -> MappingGrid:
+    """Build the union mapping lattice of ``layer`` over a
+    :class:`repro.core.designs.MacroBatch`, with per-design legality.
+
+    Union axes are assembled from the *distinct* knob values in the
+    batch (never per design), so construction cost scales with the knob
+    ranges, not with D.  Per-design legality is the vectorized
+    membership test of every lattice component against that design's
+    caps — by construction the masked rows reproduce
+    ``enumerate_mappings(layer, designs.macro_at(d))`` element for
+    element (property-tested in ``tests/core/test_grid_parity.py``),
+    including the ``max_candidates`` truncation, applied per design in
+    enumeration order via a cumulative count.
+    """
+    k = layer.dim("K")
+    d1s = sorted(set(int(v) for v in designs.d1))
+    rows_vals = sorted(set(int(v) for v in designs.rows))
+    nm_vals = sorted(set(int(v) for v in designs.n_macros))
+
+    kcs = sorted({u for d1 in d1s for u in _unroll_candidates(k, d1)})
+
+    triples: set[tuple[int, int, int]] = set()
+    for rows in rows_vals:
+        for c_un in _unroll_candidates(layer.dim("C"), rows):
+            rem = rows // c_un
+            for fx_un in _unroll_candidates(layer.dim("FX"), rem):
+                rem2 = rem // fx_un
+                for fy_un in _unroll_candidates(layer.dim("FY"), rem2):
+                    triples.add((c_un, fx_un, fy_un))
+    row_triples = sorted(triples)
+
+    spatial_total = math.prod(layer.dim(d) for d in MACRO_DUP_DIMS)
+    dup_opts: set[tuple[int, int]] = set()
+    for nm in nm_vals:
+        if nm <= 1:
+            continue
+        for d in MACRO_DUP_DIMS:
+            for u in _unroll_candidates(layer.dim(d), nm):
+                if u > 1:
+                    dup_opts.add((_MAC_CODES[d], u))
+
+    kc_l, c_l, fx_l, fy_l, mc_l, mu_l = [], [], [], [], [], []
+    for k_col in kcs:
+        mac_opts = [(_MAC_NONE, 1)] + sorted(dup_opts)
+        ksplit_dim = max(1, k // k_col)
+        ks: set[int] = set()
+        for nm in nm_vals:
+            if nm > 1:
+                ks.update(u for u in _unroll_candidates(ksplit_dim, nm)
+                          if u > 1)
+        mac_opts += [(_MAC_K, u) for u in sorted(ks)]
+        for (c_un, fx_un, fy_un) in row_triples:
+            for code, u in mac_opts:
+                kc_l.append(k_col)
+                c_l.append(c_un)
+                fx_l.append(fx_un)
+                fy_l.append(fy_un)
+                mc_l.append(code)
+                mu_l.append(u)
+
+    arr = lambda x: np.asarray(x, dtype=np.int64)
+    k_cols, c_un, fx_un, fy_un = arr(kc_l), arr(c_l), arr(fx_l), arr(fy_l)
+    mac_dim, mac_un = arr(mc_l), arr(mu_l)
+    is_k = mac_dim == _MAC_K
+    is_dup = (mac_dim != _MAC_NONE) & ~is_k
+    dup_dim_size = np.ones(len(mac_dim), dtype=np.int64)
+    nst = np.full(len(mac_dim), spatial_total, dtype=np.int64)
+    for code, name in _MAC_NAMES.items():
+        sel = mac_dim == code
+        if not sel.any():
+            continue
+        dim_sz = layer.dim(name)
+        dup_dim_size[sel] = dim_sz
+        nst[sel] = (-(-dim_sz // mac_un[sel])) * (spatial_total // dim_sz)
+    cand = MappingBatch(
+        k_cols=k_cols, k_macros=np.where(is_k, mac_un, 1),
+        c_un=c_un, fx_un=fx_un, fy_un=fy_un,
+        row_un=c_un * fx_un * fy_un,
+        mac_dim=mac_dim, mac_un=mac_un,
+        dup_macros=np.where(is_dup, mac_un, 1),
+        n_spatial_temporal=nst)
+
+    # --- per-design legality: membership of every component ------------------
+    d1_d = designs.d1[:, None]
+    rows_d = designs.rows[:, None]
+    nm_d = designs.n_macros[:, None]
+    legal = _pow2_member(k_cols, k, d1_d)
+    legal &= _pow2_member(c_un, layer.dim("C"), rows_d)
+    cap_fx = rows_d // c_un
+    legal &= _pow2_member(fx_un, layer.dim("FX"), cap_fx)
+    legal &= _pow2_member(fy_un, layer.dim("FY"), cap_fx // fx_un)
+    ksplit_dim = np.maximum(1, k // k_cols)
+    mac_ok = np.where(
+        mac_dim == _MAC_NONE, True,
+        np.where(is_k, _pow2_member(mac_un, ksplit_dim, nm_d),
+                 _pow2_member(mac_un, dup_dim_size, nm_d)))
+    legal &= mac_ok
+    legal &= np.cumsum(legal, axis=1) <= max_candidates
+    return MappingGrid(cand=cand, legal=legal)
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingCostGrid:
+    """Struct-of-arrays mapping costs over a (design x candidate) grid.
+
+    Energy fields are (D, C); the tiling counts and outer-memory traffic
+    are properties of (layer, candidate) alone — independent of the
+    design — and stay (C,) row vectors that broadcast against the design
+    axis.  Illegal (design, candidate) pairs hold well-defined garbage;
+    consumers must mask with ``grid.legal`` before reducing.
+    """
+
+    grid: MappingGrid
+    macro_energy: EnergyBreakdownBatch   # (D, C), scaled to all tiles/macros
+    weight_tiles: np.ndarray             # (C,) int64
+    inputs_per_tile: np.ndarray          # (C,) int64
+    cycles: np.ndarray                   # (D, C) int64
+    spatial_utilization: np.ndarray      # (D, C) float64
+    weight_bits: np.ndarray              # (C,) int64
+    input_bits: np.ndarray               # (C,) int64
+    output_bits: np.ndarray              # (C,) int64
+    psum_bits: np.ndarray                # (C,) int64
+
+    def __len__(self) -> int:
+        return len(self.grid)
+
+    @property
+    def total_traffic_bits(self) -> np.ndarray:
+        return self.weight_bits + self.input_bits + self.output_bits \
+            + self.psum_bits
+
+
+def evaluate_grid(layer: Layer, designs, grid: MappingGrid,
+                  alpha: float | None = None) -> MappingCostGrid:
+    """Vectorized :func:`evaluate` over the full (design x candidate)
+    lattice: ``energy.tile_energy_grid`` prices the tile energies in one
+    fused JAX pass, the (cheap, candidate-only) tiling counts and
+    traffic stay in NumPy.  Per the grid docstrings, every legal entry
+    is bitwise identical to the scalar oracle / per-design batch path.
+    """
+    from .energy import DEFAULT_ALPHA, tile_energy_grid
+    alpha = DEFAULT_ALPHA if alpha is None else alpha
+    batch = grid.cand
+
+    k_dim = layer.dim("K")
+    acc_depth = layer.accumulation_depth
+    b_dim = layer.dim("B")
+
+    n_k_tiles = np.ceil(k_dim / (batch.k_cols * batch.k_macros)
+                        ).astype(np.int64)
+    n_acc_tiles = np.ceil(acc_depth / batch.row_un).astype(np.int64)
+    weight_tiles = n_k_tiles * n_acc_tiles
+    inputs_per_tile = b_dim * batch.n_spatial_temporal
+
+    rows_used = np.minimum(batch.row_un, acc_depth)
+    cols_used = np.minimum(batch.k_cols, k_dim)
+    active_macros = batch.k_macros * batch.dup_macros
+    e_tile = tile_energy_grid(designs, n_inputs=inputs_per_tile,
+                              rows_used=rows_used, cols_used=cols_used,
+                              weight_loads=np.ones_like(weight_tiles),
+                              alpha=alpha)
+    macro_energy = e_tile.scaled(active_macros).scaled(weight_tiles)
+
+    occupied = (rows_used * cols_used
+                * designs.bw.astype(np.float64)[:, None]
+                * active_macros * weight_tiles * inputs_per_tile)
+    capacity = ((designs.rows * designs.cols
+                 * designs.n_macros).astype(np.float64)[:, None]
+                * weight_tiles * inputs_per_tile)
+    spatial_utilization = occupied / capacity
+
+    cc_per_input = np.where(designs.analog, designs.cc_bs * designs.adc_share,
+                            designs.cc_bs * designs.m_mux)
+    write_cycles = rows_used * weight_tiles
+    cycles = (weight_tiles * inputs_per_tile * cc_per_input[:, None]
+              + write_cycles)
+
+    weight_bits = layer.weight_elems * layer.w_prec * batch.dup_macros
+    input_bits = layer.input_elems * layer.i_prec * n_k_tiles
+    output_bits = np.full(len(batch), layer.output_elems * layer.psum_prec,
+                          dtype=np.int64)
+    psum_bits = (layer.output_elems * layer.psum_prec
+                 * 2 * np.maximum(0, n_acc_tiles - 1))
+    return MappingCostGrid(
+        grid=grid, macro_energy=macro_energy, weight_tiles=weight_tiles,
+        inputs_per_tile=inputs_per_tile, cycles=cycles,
+        spatial_utilization=spatial_utilization, weight_bits=weight_bits,
+        input_bits=input_bits, output_bits=output_bits, psum_bits=psum_bits)
+
+
 @dataclasses.dataclass(frozen=True)
 class MappingCostBatch:
     """Struct-of-arrays :class:`MappingCost` over N candidates."""

@@ -16,8 +16,10 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from . import tech as _tech
-from .mapping import MappingCost, MappingCostBatch
+from .mapping import MappingCost, MappingCostBatch, MappingCostGrid
 
 #: Global-buffer read/write energy per bit, in units of C_inv * V^2.
 #: A ~256 KB SRAM access at 28 nm/0.8 V costs a few fJ/bit; 20x C_inv V^2
@@ -81,3 +83,45 @@ class MemoryModel:
             "outputs": costs.output_bits * per_bit,
             "psums": costs.psum_bits * per_bit,
         }
+
+
+# --------------------------------------------------------------------------- #
+# design-axis broadcasting                                                     #
+# --------------------------------------------------------------------------- #
+def sram_fj_per_bit_grid(tech_nm: np.ndarray, vdd: np.ndarray) -> np.ndarray:
+    """Vectorized :meth:`MemoryModel.sram_fj_per_bit` over design arrays.
+
+    Same float association as the scalar method (``20 * C_inv * V * V``
+    left to right), so a per-design entry is bitwise what a per-design
+    :class:`MemoryModel` would return.
+    """
+    tech_nm = np.asarray(tech_nm, dtype=np.float64)
+    vdd = np.asarray(vdd, dtype=np.float64)
+    c_inv = _tech.CINV_SLOPE_FF_PER_NM * tech_nm + _tech.CINV_OFFSET_FF
+    return SRAM_CINV_FACTOR * c_inv * vdd * vdd
+
+
+def traffic_energy_grid(per_bit: np.ndarray | float, costs: MappingCostGrid,
+                        resident_bytes: int = 0,
+                        buffer_bytes: int = 1 << 20,
+                        dram_fj_per_bit: float = DRAM_FJ_PER_BIT) -> dict:
+    """Traffic pricing over a (design x candidate) grid.
+
+    ``per_bit`` is either one scalar (a shared memory system) or a (D,)
+    array of per-design SRAM costs (:func:`sram_fj_per_bit_grid`); each
+    returned entry is (D, C) and bitwise equals the per-design scalar
+    path.  The off-chip spill decision is a property of the layer's
+    working set, shared by every design, exactly as in the scalar model.
+    """
+    per_bit = np.atleast_1d(np.asarray(per_bit, dtype=np.float64))[:, None]
+    off_chip = resident_bytes > buffer_bytes
+    if off_chip:
+        per_bit_w = per_bit + dram_fj_per_bit
+    else:
+        per_bit_w = per_bit
+    return {
+        "weights": costs.weight_bits * per_bit_w,
+        "inputs": costs.input_bits * per_bit,
+        "outputs": costs.output_bits * per_bit,
+        "psums": costs.psum_bits * per_bit,
+    }

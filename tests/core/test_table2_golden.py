@@ -1,0 +1,41 @@
+"""Golden regression: Table II peak metrics.
+
+The four same-node / same-precision designs the paper compares on
+tinyMLPerf (Sec. VI) anchor every case-study figure; an energy-model
+refactor that shifts their peak TOP/s/W, TOP/s, or TOP/s/mm2 would
+silently re-baseline the whole reproduction.  Values below were frozen
+from the validated model (tests/core/test_validation.py ties it to the
+paper's reported numbers) and must only change with a deliberate,
+documented recalibration.
+"""
+
+import pytest
+
+from repro.core import designs, energy
+
+#: (name, peak TOP/s/W @ DEFAULT_ALPHA, peak TOP/s, peak TOP/s/mm2)
+GOLDEN_TABLE2 = [
+    ("T2-A-aimc-1152x256", 499.9258118427322, 7.372800000000001,
+     69.09755711344955),
+    ("T2-B-aimc-64x32x8", 64.11551716321807, 7.372800000000001,
+     21.377227907971037),
+    ("T2-C-dimc-256x256x4", 89.00083152408882, 2.483809207709505,
+     66.66524471560338),
+    ("T2-D-dimc-48x4x192", 91.2812318683556, 36.864000000000004,
+     108.06602541642958),
+]
+
+
+def test_table2_covers_all_designs():
+    assert [m.name for m in designs.table2_designs()] \
+        == [row[0] for row in GOLDEN_TABLE2]
+
+
+@pytest.mark.parametrize("name,tops_w,tops,tops_mm2", GOLDEN_TABLE2)
+def test_table2_peak_metrics_pinned(name, tops_w, tops, tops_mm2):
+    macro = next(m for m in designs.table2_designs() if m.name == name)
+    assert energy.peak_tops_per_watt(macro) == pytest.approx(tops_w,
+                                                             rel=1e-12)
+    assert energy.peak_tops(macro) == pytest.approx(tops, rel=1e-12)
+    assert energy.peak_tops_per_mm2(macro) == pytest.approx(tops_mm2,
+                                                            rel=1e-12)
