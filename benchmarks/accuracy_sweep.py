@@ -1,0 +1,207 @@
+"""Joint accuracy x cost design-space sweep (the paper's three-way
+AIMC/DIMC trade made quantitative: accuracy vs energy vs latency, the
+co-evaluation arXiv 2405.14978 / AnalogNAS argue makes IMC design-space
+results actionable).
+
+One ``fidelity.evaluate_grid`` call measures per-design accuracy under
+nonidealities over the same ``designs.macro_grid`` that ``dse.sweep``
+prices for energy/latency, and ``dse.joint_frontier`` fuses both into a
+3-axis Pareto frontier — per workload: one tinyMLPerf network and one
+LM Dense workload in full mode, a small dense net in smoke mode.
+
+A committed small-grid artifact (``experiments/accuracy_sweep/``) lets
+the table render deterministically in fresh containers:
+
+Run:  PYTHONPATH=src python -m benchmarks.accuracy_sweep [--smoke]
+      PYTHONPATH=src python -m benchmarks.accuracy_sweep --render-artifact
+      PYTHONPATH=src python -m benchmarks.accuracy_sweep --regen-artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import timed
+
+ARTIFACT_DIR = Path(__file__).resolve().parent.parent / "experiments" \
+    / "accuracy_sweep"
+ARTIFACT = ARTIFACT_DIR / "smoke_joint.json"
+ARTIFACT_NOISE = dict(read_noise_lsb=0.25, weight_var=0.02)
+DAE_WIDTHS = (64, 32, 8, 32, 64)
+
+
+def make_grid(smoke: bool = False):
+    """Swept knob ranges: >= 64 designs in full mode (the acceptance
+    lattice), a dozen in smoke/artifact mode so CI stays fast."""
+    from repro.core import designs
+    if smoke:
+        return designs.macro_grid(
+            rows=(64, 256), cols=(256,), adc_bits=(4, 6, 8), dac_bits=(4,),
+            m_mux=(1, 16), tech_nm=(22,), vdd=(0.8,))
+    return designs.macro_grid(
+        rows=(64, 128, 256, 512), cols=(128, 256),
+        adc_bits=(3, 4, 5, 6, 7, 8), dac_bits=(2,), m_mux=(1, 4, 16),
+        tech_nm=(28,), vdd=(0.8,))
+
+
+def _dae_small(batch: int = 8):
+    """Small dense autoencoder: forward closure + cost-model layers."""
+    import jax
+    import jax.numpy as jnp
+    from repro import fidelity
+    from repro.core import workloads
+    from repro.models import tinyml
+
+    params = tinyml.init_dae(jax.random.PRNGKey(0), widths=DAE_WIDTHS)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(batch, DAE_WIDTHS[0])), jnp.float32)
+    forward = fidelity.network_forward(tinyml.dae_forward, params, x)
+    layers = [workloads.dense(f"fc{i}", batch, DAE_WIDTHS[i],
+                              DAE_WIDTHS[i + 1])
+              for i in range(len(DAE_WIDTHS) - 1)]
+    return forward, layers
+
+
+def _ds_cnn(batch: int = 2):
+    import jax
+    import jax.numpy as jnp
+    from repro import fidelity
+    from repro.core import workloads
+    from repro.models import tinyml
+
+    init, _, in_shape = tinyml.FORWARDS["ds_cnn"]
+    params = init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(batch,) + in_shape), jnp.float32)
+    return fidelity.tinyml_forward("ds_cnn", params, x), \
+        workloads.ds_cnn(batch)
+
+
+def _lm_dense(tokens: int = 8):
+    from repro import configs, fidelity
+    from repro.core import lm_bridge
+
+    cfg = configs.get_smoke("qwen1.5-0.5b")
+    spec = lm_bridge.lm_block_spec(cfg)
+    return fidelity.lm_dense_forward(spec, tokens=tokens), \
+        lm_bridge.lm_imc_workloads(cfg, tokens=tokens), cfg.name
+
+
+def _joint(net_name: str, forward, layers, grid, *, noise, n_seeds: int):
+    from repro import fidelity
+    from repro.core import dse
+
+    fid = fidelity.evaluate_grid(forward, grid, noise=noise,
+                                 n_seeds=n_seeds)
+    cost = dse.sweep(net_name, layers, grid)
+    return dse.joint_frontier(cost, fid), fid
+
+
+def _print_joint(net_name: str, grid, joint, fid) -> str:
+    front = joint.pareto()
+    aimc = np.flatnonzero(grid.analog)
+    dimc = np.flatnonzero(~grid.analog)
+    print(f"# {net_name}: {len(grid)} designs ({len(aimc)} AIMC / "
+          f"{len(dimc)} DIMC), {fid.n_jit_calls} fidelity jit calls, "
+          f"noise={fid.noise}")
+    print(f"# {'design':46s} {'acc':>6s} {'sqnr_db':>8s} {'fJ':>11s} "
+          f"{'Mcycles':>8s}")
+    for d in front[:8]:
+        print(f"#   pareto {grid.names[d]:42s} {joint.accuracy[d]:6.3f}"
+              f" {joint.sqnr_db[d]:8.1f} {joint.energy_fj[d]:11.3g}"
+              f" {joint.cycles[d] / 1e6:8.3f}")
+    floor = 0.95 * joint.accuracy.max()
+    b = joint.best(min_accuracy=floor)
+    print(f"#   best(acc>={floor:.3f}): {grid.names[b]} "
+          f"acc={joint.accuracy[b]:.3f} fJ={joint.energy_fj[b]:.3g}")
+    return f"designs={len(grid)} pareto={len(front)} " \
+           f"acc_max={joint.accuracy.max():.3f}"
+
+
+def run(smoke: bool = False) -> None:
+    from repro.fidelity import NoiseSpec
+
+    grid = make_grid(smoke)
+    noise = NoiseSpec(**ARTIFACT_NOISE)
+    nets = [("dae_small",) + _dae_small()]
+    if not smoke:
+        nets += [("ds_cnn",) + _ds_cnn()]
+        fw, layers, lm_name = _lm_dense()
+        nets += [(lm_name, fw, layers)]
+
+    for net_name, forward, layers in nets:
+        def sweep_net() -> str:
+            joint, fid = _joint(net_name, forward, layers, grid,
+                                noise=noise, n_seeds=1 if smoke else 2)
+            return _print_joint(net_name, grid, joint, fid)
+
+        timed(f"accuracy_sweep_{net_name}", sweep_net)
+
+
+# --------------------------------------------------------------------------- #
+# committed artifact: deterministic render in fresh containers                 #
+# --------------------------------------------------------------------------- #
+def regen_artifact(path: Path = ARTIFACT) -> dict:
+    """Recompute the committed smoke-grid joint frontier and write it.
+
+    Deterministic for a given grid/seed (noise keys derive from grid
+    position only); regenerate after fidelity-model-visible changes."""
+    from repro.fidelity import NoiseSpec
+
+    grid = make_grid(smoke=True)
+    forward, layers = _dae_small()
+    joint, fid = _joint("dae_small", forward, layers, grid,
+                        noise=NoiseSpec(**ARTIFACT_NOISE), n_seeds=2)
+    doc = {
+        "network": "dae_small",
+        "noise": ARTIFACT_NOISE,
+        "n_seeds": fid.n_seeds,
+        "n_jit_calls": fid.n_jit_calls,
+        "objective": joint.sweep.objective,
+        "designs": joint.to_records(),
+        "regen": "PYTHONPATH=src python -m benchmarks.accuracy_sweep "
+                 "--regen-artifact",
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return doc
+
+
+def render_artifact(path: Path = ARTIFACT) -> str:
+    """Render the committed joint-frontier table (no jax needed)."""
+    doc = json.loads(path.read_text())
+    rows = doc["designs"]
+    front = [r for r in rows if r["pareto"]]
+    print(f"# accuracy_sweep artifact: {doc['network']}, "
+          f"{len(rows)} designs, noise={doc['noise']}")
+    print(f"# {'design':46s} {'acc':>6s} {'sqnr_db':>8s} {'fJ':>11s} "
+          f"{'Mcycles':>8s} {'pareto':>6s}")
+    for r in sorted(rows, key=lambda r: -r["accuracy"]):
+        print(f"#   {r['name']:46s} {r['accuracy']:6.3f}"
+              f" {r['sqnr_db']:8.1f} {r['energy_fj']:11.3g}"
+              f" {r['cycles'] / 1e6:8.3f} {'*' if r['pareto'] else '':>6s}")
+    return f"designs={len(rows)} pareto={len(front)}"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid + dense net so CI exercises the "
+                         "joint accuracy x cost path in seconds")
+    ap.add_argument("--regen-artifact", action="store_true",
+                    help="recompute and overwrite the committed "
+                         "experiments/accuracy_sweep artifact")
+    ap.add_argument("--render-artifact", action="store_true",
+                    help="render the committed artifact (no compute)")
+    args = ap.parse_args()
+    if args.regen_artifact:
+        regen_artifact()
+        print(render_artifact())
+    elif args.render_artifact:
+        print(render_artifact())
+    else:
+        run(smoke=args.smoke)

@@ -5,9 +5,9 @@ CSV rows; `#`-prefixed lines are human-readable detail."""
 
 from __future__ import annotations
 
-from . import (common, design_sweep, fig4_survey, fig5_validation, fig6_tech,
-               fig7_casestudy, kernel_bench, lm_imc_casestudy,
-               roofline_table)
+from . import (accuracy_sweep, common, design_sweep, fig4_survey,
+               fig5_validation, fig6_tech, fig7_casestudy, kernel_bench,
+               lm_imc_casestudy, roofline_table)
 
 
 def main() -> None:
@@ -18,6 +18,7 @@ def main() -> None:
     fig7_casestudy.run()
     lm_imc_casestudy.run()
     design_sweep.run()
+    accuracy_sweep.run(smoke=True)     # full joint sweep is multi-minute
     roofline_table.run()
     kernel_bench.run()
     print(f"# total benchmarks: {len(common.ROWS)}")

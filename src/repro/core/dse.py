@@ -61,6 +61,14 @@ Typical use::
     res = dse.sweep("resnet8", workloads.resnet8(), grid)
     for d in res.pareto():
         print(res.designs.macro_at(d).name, res.energy_fj[d])
+
+Joint accuracy x cost frontier
+------------------------------
+:func:`joint_frontier` fuses a :class:`SweepResult` with per-design
+accuracy from ``repro.fidelity.evaluate_grid`` (computed on the same
+``MacroBatch``) into a :class:`JointFrontier` — the (accuracy, energy,
+latency) Pareto view of the paper's three-way AIMC/DIMC trade
+(``benchmarks/accuracy_sweep.py``).
 """
 
 from __future__ import annotations
@@ -326,14 +334,10 @@ class SweepResult:
 
     def pareto_mask(self) -> np.ndarray:
         """(D,) bool: design is non-dominated over (energy, latency,
-        area) — no other design is <= on all three axes and < on one.
-        O(D^2) pairwise scan; fine for grids of a few thousand points."""
-        pts = np.stack([self.energy_fj, self.cycles.astype(np.float64),
-                        self.area_mm2], axis=1)
-        ge_all = (pts[:, None, :] >= pts[None, :, :]).all(-1)   # [i,j]: j<=i
-        gt_any = (pts[:, None, :] > pts[None, :, :]).any(-1)    # [i,j]: j<i
-        dominated = (ge_all & gt_any).any(axis=1)
-        return ~dominated
+        area) — no other design is <= on all three axes and < on one."""
+        return _non_dominated(np.stack(
+            [self.energy_fj, self.cycles.astype(np.float64),
+             self.area_mm2], axis=1))
 
     def pareto(self) -> np.ndarray:
         """Indices of the Pareto-frontier designs, sorted by energy."""
@@ -443,6 +447,126 @@ def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
         layer_names=tuple(l.name for l in eligible),
         _shapes=tuple((s[0], s[1], s[2]) for s in shapes),
         _layer_shape=tuple(layer_shape), _alpha=alpha, _mem=mem)
+
+
+def _non_dominated(pts: np.ndarray) -> np.ndarray:
+    """(D,) bool mask of Pareto-optimal rows of a (D, n_axes) matrix,
+    all axes minimized: row i survives iff no row j is <= on every axis
+    and < on at least one.  O(D^2) pairwise scan; fine for grids of a
+    few thousand points."""
+    ge_all = (pts[:, None, :] >= pts[None, :, :]).all(-1)   # [i,j]: j<=i
+    gt_any = (pts[:, None, :] > pts[None, :, :]).any(-1)    # [i,j]: j<i
+    return ~(ge_all & gt_any).any(axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# joint accuracy x cost frontier                                               #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class JointFrontier:
+    """Per-design (accuracy, energy, latency[, area]) over one grid.
+
+    Joins a :class:`SweepResult` (cost axes, minimized) with a
+    per-design accuracy column (maximized) — typically
+    ``fidelity.evaluate_grid``'s output on the same ``MacroBatch``.
+    This is the paper's three-way AIMC/DIMC trade made explicit: the
+    designs surviving ``pareto_mask()`` are exactly those where more
+    accuracy costs energy or latency.
+    """
+
+    sweep: SweepResult
+    accuracy: np.ndarray                 # (D,) higher is better
+    sqnr_db: np.ndarray | None = None    # (D,) optional companion metric
+
+    def __len__(self) -> int:
+        return len(self.accuracy)
+
+    @property
+    def designs(self) -> MacroBatch:
+        return self.sweep.designs
+
+    @property
+    def energy_fj(self) -> np.ndarray:
+        return self.sweep.energy_fj
+
+    @property
+    def cycles(self) -> np.ndarray:
+        return self.sweep.cycles
+
+    @property
+    def area_mm2(self) -> np.ndarray:
+        return self.sweep.area_mm2
+
+    def pareto_mask(self, include_area: bool = False) -> np.ndarray:
+        """(D,) bool: non-dominated over (accuracy max, energy min,
+        latency min[, area min]) — the accuracy axis enters the shared
+        dominance scan negated."""
+        cols = [-self.accuracy, self.energy_fj,
+                self.cycles.astype(np.float64)]
+        if include_area:
+            cols.append(self.area_mm2)
+        return _non_dominated(np.stack(cols, axis=1))
+
+    def pareto(self, include_area: bool = False) -> np.ndarray:
+        """Frontier design indices, sorted accuracy-descending (ties by
+        ascending energy)."""
+        idx = np.flatnonzero(self.pareto_mask(include_area))
+        order = np.lexsort((self.energy_fj[idx], -self.accuracy[idx]))
+        return idx[order]
+
+    def best(self, min_accuracy: float = 0.0,
+             objective: str = "energy") -> int:
+        """Cheapest design under ``objective`` meeting the accuracy
+        floor; falls back to the most accurate design when nothing
+        clears the floor."""
+        col = {"energy": self.energy_fj, "latency": self.cycles,
+               "edp": self.sweep.edp}[objective]
+        ok = np.flatnonzero(self.accuracy >= min_accuracy)
+        if len(ok) == 0:
+            return int(np.argmax(self.accuracy))
+        return int(ok[np.argmin(col[ok])])
+
+    def to_records(self) -> list[dict]:
+        """One JSON-ready row per design (artifact / rendering format)."""
+        mask = self.pareto_mask()
+        return [{
+            "name": self.designs.names[d],
+            "analog": bool(self.designs.analog[d]),
+            "accuracy": float(self.accuracy[d]),
+            "sqnr_db": (None if self.sqnr_db is None
+                        else float(self.sqnr_db[d])),
+            "energy_fj": float(self.energy_fj[d]),
+            "cycles": int(self.cycles[d]),
+            "area_mm2": float(self.area_mm2[d]),
+            "pareto": bool(mask[d]),
+        } for d in range(len(self))]
+
+
+def joint_frontier(sweep_result: SweepResult, accuracy) -> JointFrontier:
+    """Join cost and accuracy axes computed on the same design grid.
+
+    ``accuracy`` is either a (D,) array or a ``fidelity.FidelityGrid``
+    (duck-typed: anything with ``accuracy`` / ``designs`` attributes —
+    ``core`` stays import-independent of ``fidelity``); design identity
+    is checked by name so mismatched grids fail loudly.
+    """
+    sqnr = None
+    acc = accuracy
+    if hasattr(accuracy, "accuracy"):
+        grid = getattr(accuracy, "designs", None)
+        if grid is not None and grid.names != sweep_result.designs.names:
+            raise ValueError(
+                "joint_frontier: accuracy grid and sweep were computed on "
+                "different designs")
+        sqnr = np.asarray(accuracy.sqnr_db) \
+            if getattr(accuracy, "sqnr_db", None) is not None else None
+        acc = accuracy.accuracy
+    acc = np.asarray(acc, dtype=np.float64)
+    if acc.shape != sweep_result.energy_fj.shape:
+        raise ValueError(
+            f"joint_frontier: accuracy shape {acc.shape} != designs "
+            f"{sweep_result.energy_fj.shape}")
+    return JointFrontier(sweep=sweep_result, accuracy=acc, sqnr_db=sqnr)
 
 
 def map_network(network: str, layers: Sequence[Layer], macro: IMCMacro,

@@ -1,0 +1,68 @@
+"""Fidelity subsystem: network accuracy under AIMC/DIMC nonidealities,
+joined with the cost sweep into 3-axis Pareto frontiers.
+
+The paper frames AIMC vs DIMC as a three-way trade between accuracy,
+efficiency and dataflow flexibility; ``repro.core`` models the cost
+side (energy / latency / area via ``dse.sweep``).  This package is the
+accuracy side: it runs real workloads through functional simulations of
+the IMC datapaths and measures how much task output survives, per
+design point, so ``dse.joint_frontier`` can fuse both axes.
+
+Layout:
+    noise.py      NoiseSpec / FidelityConfig + the nonideality models
+                  (registered in the kernels.ops MVM dispatch hook)
+    functional.py fidelity_linear + forward-pass swappers for the
+                  tinyMLPerf networks and the LM Dense workloads
+    evaluate.py   evaluate_grid — design-axis batched accuracy over a
+                  designs.MacroBatch (signature dedup + grouped jit)
+
+How the NoiseSpec / FidelityConfig knobs map to paper Table I columns:
+
+    ===============  ======================  ===========================
+    knob             Table I symbol          accuracy effect modeled
+    ===============  ======================  ===========================
+    rows             R (array depth)         bitline dynamic range per
+                                             ADC conversion: quant error
+                                             grows with R (Sec. II-B)
+    bi / bw          B_i / B_w               operand quantization grid
+    adc_res          ADC resolution          codes across the bitline
+                                             range; clip + round per
+                                             (tile, plane, phase)
+    dac_res          DAC resolution          input bits per conversion
+                                             phase; each phase's psum is
+                                             ADC-quantized separately
+                                             (CC_BS made visible on the
+                                             accuracy axis)
+    read_noise_lsb   --  (beyond cost model) Gaussian noise at the ADC
+                                             input, sigma in ADC LSBs
+    weight_var       --  (beyond cost model) per-cell conductance
+                                             variation, relative sigma
+    ===============  ======================  ===========================
+
+DIMC has no entries beyond bi/bw: its adder tree is bit-true, so the
+noise-free DIMC path is the exact int32 reference MVM (property-pinned
+in ``tests/fidelity/test_noise_models.py``).
+
+Typical use::
+
+    from repro import fidelity
+    from repro.core import designs, dse, workloads
+
+    grid = designs.macro_grid(rows=(256, 512), adc_bits=(4, 6, 8))
+    fwd = fidelity.tinyml_forward("ds_cnn", params, probe_x)
+    fid = fidelity.evaluate_grid(fwd, grid,
+                                 noise=fidelity.NoiseSpec(read_noise_lsb=0.3),
+                                 n_seeds=4)
+    cost = dse.sweep("ds_cnn", workloads.ds_cnn(), grid)
+    joint = dse.joint_frontier(cost, fid)
+    for d in joint.pareto():
+        print(grid.names[d], joint.accuracy[d], joint.energy_fj[d])
+"""
+
+from .noise import (FidelityConfig, NoiseSpec, aimc_mvm_functional,  # noqa: F401
+                    dimc_mvm_exact)
+from .functional import (IDEAL, exec_config, fidelity_linear,        # noqa: F401
+                         lm_dense_forward, network_forward, sqnr_db,
+                         tinyml_forward, top1_agreement)
+from .evaluate import (FidelityGrid, FidelityResult, evaluate_design,  # noqa: F401
+                       evaluate_grid)

@@ -1,0 +1,159 @@
+"""Forward-pass swapper: run real networks through the IMC datapaths.
+
+``fidelity_linear`` is the quantized linear layer of the fidelity
+subsystem: float operands are symmetrically quantized to the design's
+operand precisions (the same plumbing as ``kernels.ops.imc_linear_sim``)
+and the MVM is dispatched through the ``kernels.ops`` backend registry —
+``"dimc_exact"`` (bit-true adder tree), ``"aimc_functional"``
+(ADC/DAC/noise model, tiled at the design's ``rows``), or the float
+identity for the ideal reference.  Signed activations take the
+differential two-phase route real AIMC macros use (y = A(x+) - A(x-)
+with unsigned DAC levels per phase).
+
+On top of it sit the workload builders: :func:`tinyml_forward` lowers a
+tinyMLPerf network (``models/tinyml.py``) onto the fidelity datapath via
+the ``IMCExecConfig.linear_fn`` hook, and :func:`lm_dense_forward`
+lowers the ``core/lm_bridge.py`` Dense projection workloads of an LM
+superblock.  Both return a closure ``forward(cfg, key) -> outputs``
+that ``fidelity.evaluate`` vmaps over designs and noise seeds.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.workloads import LMBlockSpec
+from repro.kernels import ops
+from repro.models import tinyml
+
+from .noise import FidelityConfig
+
+ForwardFn = Callable[[FidelityConfig, jax.Array], jax.Array]
+
+IDEAL = FidelityConfig(mode="ideal")
+
+
+def fidelity_linear(x: jax.Array, w: jax.Array, cfg: FidelityConfig,
+                    key: jax.Array | None = None) -> jax.Array:
+    """Quantized linear y = x @ w through the configured IMC datapath."""
+    if cfg.mode in ("ideal", "float"):
+        return x @ w
+    xq, sx = ops.quantize_symmetric(x, cfg.bi)
+    wq, sw = ops.quantize_symmetric(w, cfg.bw)
+    xq32 = xq.astype(jnp.int32)
+    wq32 = wq.astype(jnp.int32)
+    if cfg.mode == "dimc":
+        y = ops.mvm_backend("dimc_exact")(
+            xq32, wq32, bi=cfg.bi, bw=cfg.bw).astype(jnp.float32)
+    elif cfg.mode == "aimc":
+        # differential signed-activation handling: unsigned bi-1 DAC
+        # levels per phase, like imc_linear_sim — the two phases read
+        # the SAME stored cells (one shared conductance-variation draw)
+        # through independent conversions (independent read noise)
+        mm = ops.mvm_backend("aimc_functional")
+        kp = kn = kc = None
+        if key is not None:
+            kp, kn, kc = jax.random.split(key, 3)
+        y_pos = mm(jnp.maximum(xq32, 0), wq32, bi=cfg.bi - 1, bw=cfg.bw,
+                   adc_res=cfg.adc_res, rows=cfg.rows, dac_res=cfg.dac_res,
+                   noise=cfg.noise, key=kp, cell_key=kc)
+        y_neg = mm(jnp.maximum(-xq32, 0), wq32, bi=cfg.bi - 1, bw=cfg.bw,
+                   adc_res=cfg.adc_res, rows=cfg.rows, dac_res=cfg.dac_res,
+                   noise=cfg.noise, key=kn, cell_key=kc)
+        y = y_pos - y_neg
+    else:
+        raise ValueError(f"fidelity_linear: unknown mode {cfg.mode!r}")
+    return y * sx * sw
+
+
+def exec_config(cfg: FidelityConfig, key: jax.Array) -> tinyml.IMCExecConfig:
+    """tinyml execution config routing every MVM through the fidelity
+    datapath; each linear call site folds a distinct trace-time counter
+    into the key so per-layer noise draws are independent (and stable
+    across jit/vmap retraces)."""
+    if cfg.mode in ("ideal", "float"):
+        return tinyml.IMCExecConfig("float")
+    counter = itertools.count()
+
+    def lin(x, w):
+        return fidelity_linear(x, w, cfg, jax.random.fold_in(
+            key, next(counter)))
+
+    return tinyml.IMCExecConfig(mode="fidelity", bi=cfg.bi, bw=cfg.bw,
+                                linear_fn=lin)
+
+
+def network_forward(fwd: Callable, params, x: jax.Array) -> ForwardFn:
+    """Close any tinyml-style forward ``fwd(params, x, exec_cfg)`` over
+    (params, probe batch) as a fidelity ``forward(cfg, key)``."""
+    def forward(cfg: FidelityConfig, key: jax.Array) -> jax.Array:
+        return fwd(params, x, exec_config(cfg, key))
+
+    return forward
+
+
+def tinyml_forward(name: str, params, x: jax.Array) -> ForwardFn:
+    """Close a tinyMLPerf network over (params, probe batch): the
+    returned ``forward(cfg, key)`` runs every MVM (dense, and conv via
+    im2col) through the fidelity datapath.  Depthwise convolutions stay
+    float, like the model's own IMC backends — their patch-dim einsum
+    has no K axis to put on bitlines."""
+    _, fwd, _ = tinyml.FORWARDS[name]
+    return network_forward(fwd, params, x)
+
+
+def lm_dense_forward(spec: LMBlockSpec, *, tokens: int = 16,
+                     seed: int = 0) -> ForwardFn:
+    """Lower one LM superblock's Dense projection workloads
+    (``core.lm_bridge.lm_block_spec``) onto the fidelity datapath.
+
+    Each projection gets Xavier-scale random weights and a shared
+    random token-activation probe (one input per distinct fan-in);
+    ``forward(cfg, key)`` returns {projection name: (tokens, fout)}.
+    """
+    wkey, xkey = jax.random.split(jax.random.PRNGKey(seed))
+    weights: dict[str, jax.Array] = {}
+    inputs: dict[int, jax.Array] = {}
+    for i, (pname, fin, fout, _calls) in enumerate(spec.projections):
+        weights[pname] = jax.random.normal(
+            jax.random.fold_in(wkey, i), (fin, fout)) / jnp.sqrt(float(fin))
+        if fin not in inputs:
+            inputs[fin] = jax.random.normal(
+                jax.random.fold_in(xkey, fin), (tokens, fin))
+
+    def forward(cfg: FidelityConfig, key: jax.Array) -> dict[str, jax.Array]:
+        out = {}
+        for i, (pname, fin, _fout, _calls) in enumerate(spec.projections):
+            out[pname] = fidelity_linear(inputs[fin], weights[pname], cfg,
+                                         jax.random.fold_in(key, i))
+        return out
+
+    return forward
+
+
+# --------------------------------------------------------------------------- #
+# fidelity metrics                                                             #
+# --------------------------------------------------------------------------- #
+def top1_agreement(y, y_ref) -> jax.Array:
+    """Fraction of samples whose argmax matches the reference — the
+    task-accuracy proxy (for a trained classifier, agreement with the
+    float model bounds the accuracy drop from nonidealities)."""
+    if isinstance(y, Mapping):
+        return jnp.mean(jnp.stack([top1_agreement(y[k], y_ref[k])
+                                   for k in sorted(y)]))
+    return jnp.mean((jnp.argmax(y, axis=-1)
+                     == jnp.argmax(y_ref, axis=-1)).astype(jnp.float32))
+
+
+def sqnr_db(y, y_ref) -> jax.Array:
+    """Signal-to-quantization-noise ratio [dB] vs the float reference."""
+    if isinstance(y, Mapping):
+        return jnp.mean(jnp.stack([sqnr_db(y[k], y_ref[k])
+                                   for k in sorted(y)]))
+    sig = jnp.sum(jnp.square(y_ref))
+    err = jnp.sum(jnp.square(y - y_ref))
+    return 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-30))

@@ -1,0 +1,220 @@
+"""Configurable AIMC/DIMC nonideality models (the accuracy axis).
+
+Two layers:
+
+* :class:`NoiseSpec` — the *stochastic* nonidealities of an analog
+  macro: additive bitline read noise at the ADC input and multiplicative
+  weight-conductance variation on the stored bit cells.  These are the
+  knobs the cost model cannot see; they only exist on the accuracy axis.
+* :class:`FidelityConfig` — one design point's *functional* datapath:
+  execution mode (ideal / dimc / aimc), operand precisions, array depth
+  (the ADC conversion boundary), ADC/DAC resolutions, plus a
+  :class:`NoiseSpec`.  Built from an :class:`~repro.core.hardware.IMCMacro`
+  with :func:`FidelityConfig.from_macro`, so the same design grid that
+  drives ``dse.sweep`` drives accuracy evaluation.
+
+The AIMC model (:func:`aimc_mvm_functional`) generalizes the
+``kernels.ref.aimc_mvm_ref`` oracle: per weight-bit-plane bitline sums
+over ``rows`` cells, ADC clip+quantization over the bitline dynamic
+range, shift-add recombination — and additionally (a) splits the input
+into DAC conversion phases when ``dac_res < bi`` (each phase's partial
+sum sees its own ADC conversion, paper Table I's CC_BS column made
+visible on the accuracy axis), (b) perturbs stored bit-plane cells with
+Gaussian conductance variation, and (c) adds Gaussian read noise in ADC
+LSBs to every conversion.  With ``dac_res >= bi`` and noise off it
+reduces exactly to the oracle's quantization grid
+(``tests/fidelity/test_noise_models.py``).
+
+The DIMC model (:func:`dimc_mvm_exact`) is the bit-true adder-tree
+identity — a plain int32 matmul, property-tested bit-identical to
+``kernels.ref.matmul_int_ref`` across random shapes/precisions.
+
+Everything here is pure jnp: jittable, vmappable over designs (the
+``adc_res`` knob may be a traced array) and over noise-seed PRNG keys.
+Both models register themselves as ``"dimc_exact"`` /
+``"aimc_functional"`` in the ``kernels.ops`` MVM dispatch hook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hardware import IMCMacro, IMCType
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSpec:
+    """Stochastic AIMC nonidealities (off by default).
+
+    ``read_noise_lsb`` — sigma of additive Gaussian noise on each
+    bitline partial sum at the ADC input, in ADC LSBs (thermal/kT/C
+    noise referred to the converter; an LSB-relative sigma keeps the
+    knob meaningful across ``adc_res`` values).
+
+    ``weight_var`` — relative sigma of multiplicative Gaussian variation
+    on each stored weight bit cell's conductance (local Vt mismatch).
+    Drawn once per cell per evaluation seed — the same physical device
+    is reused by every input vector, so the draw is shared across the
+    batch, phases and row tiles but fresh across seeds.
+    """
+
+    read_noise_lsb: float = 0.0
+    weight_var: float = 0.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.read_noise_lsb > 0.0 or self.weight_var > 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FidelityConfig:
+    """One design point's functional datapath for accuracy evaluation.
+
+    ``adc_res`` is allowed to be a traced jax scalar so a whole design
+    grid sharing the static knobs (mode, rows, bi, bw, dac_res) can be
+    evaluated in one vmapped jit call (``fidelity.evaluate_grid``).
+    """
+
+    mode: str = "dimc"            # ideal | dimc | aimc
+    bi: int = 8                   # activation precision (signed)
+    bw: int = 8                   # weight precision (signed)
+    rows: int = 256               # array depth = ADC conversion boundary
+    adc_res: int | jax.Array = 8  # AIMC only
+    dac_res: int = 8              # input bits converted per DAC phase
+    noise: NoiseSpec = NoiseSpec()
+
+    @staticmethod
+    def from_macro(macro: IMCMacro, *, bi: int | None = None,
+                   bw: int | None = None,
+                   noise: NoiseSpec = NoiseSpec()) -> "FidelityConfig":
+        """Lower a macro design point onto its fidelity datapath.
+
+        The macro's native precisions are its stored/streamed operand
+        widths; pass ``bi``/``bw`` to override (e.g. evaluate an 8b
+        workload on a 4b macro through bit-slicing — not modeled here,
+        so the default is the macro's own precision).
+        """
+        analog = macro.imc_type is IMCType.AIMC
+        return FidelityConfig(
+            mode="aimc" if analog else "dimc",
+            bi=bi if bi is not None else macro.bi,
+            bw=bw if bw is not None else macro.bw,
+            rows=macro.rows,
+            adc_res=macro.adc_res if analog else 0,
+            dac_res=macro.dac_res if analog else macro.bi,
+            noise=noise if analog else NoiseSpec())
+
+    def static_signature(self) -> tuple:
+        """Knobs that force a separate jit specialization (everything
+        except ``adc_res``, which may be traced).  The exact digital
+        paths never look at rows/dac_res, so those collapse for
+        non-AIMC modes — all DIMC designs at one (bi, bw) share one
+        signature regardless of array geometry."""
+        if self.mode != "aimc":
+            return (self.mode, self.bi, self.bw)
+        return (self.mode, self.bi, self.bw, self.rows, self.dac_res)
+
+
+# --------------------------------------------------------------------------- #
+# DIMC: bit-true digital path                                                  #
+# --------------------------------------------------------------------------- #
+def dimc_mvm_exact(x: jax.Array, w: jax.Array, *, bi: int = 8, bw: int = 8,
+                   **_unused) -> jax.Array:
+    """Exact adder-tree MVM (int32) — the noise-free DIMC reference path.
+
+    BPBS bit-plane recombination is the identity on two's-complement
+    operands, so the digital macro computes a plain integer matmul;
+    ``tests/fidelity/test_noise_models.py`` pins bit-identity against
+    ``kernels.ref.matmul_int_ref`` across random shapes/precisions.
+    """
+    return (x.astype(jnp.int32) @ w.astype(jnp.int32)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# AIMC: functional charge-domain path with nonidealities                       #
+# --------------------------------------------------------------------------- #
+def _dac_phases(bi: int, dac_res: int) -> list[tuple[int, int]]:
+    """(bit_shift, bits_this_phase) per DAC conversion phase, LSB first."""
+    dac_res = max(1, min(dac_res, bi))
+    return [(s, min(dac_res, bi - s)) for s in range(0, bi, dac_res)]
+
+
+def aimc_mvm_functional(x: jax.Array, w: jax.Array, *, bi: int = 4,
+                        bw: int = 4, adc_res: int | jax.Array = 6,
+                        rows: int = 256, dac_res: int | None = None,
+                        noise: NoiseSpec = NoiseSpec(),
+                        key: jax.Array | None = None,
+                        cell_key: jax.Array | None = None,
+                        **_unused) -> jax.Array:
+    """AIMC charge-domain MVM with configurable nonidealities.
+
+    x (M, K): unsigned DAC levels in [0, 2^bi - 1]; w (K, N): signed
+    ints in [-2^(bw-1), 2^(bw-1) - 1] -> (M, N) float32.
+
+    K is processed in tiles of ``rows`` (zero-padded: unused rows leave
+    the bitline charge unchanged); inputs stream in ceil(bi / dac_res)
+    DAC phases; every (tile, weight-plane, phase) partial sum passes
+    through one ADC conversion — with read noise and conductance
+    variation applied per :class:`NoiseSpec` — before the digital
+    shift-add recombination over phases, planes and tiles.
+
+    ``adc_res`` may be a traced scalar (design-axis vmap); ``key`` is
+    required when ``noise.enabled``.  ``cell_key`` pins the conductance
+    draw separately from the read-noise stream, so callers that run the
+    same stored array twice (the differential signed-activation pair)
+    can reuse one physical variation pattern across independent
+    conversions.
+    """
+    if dac_res is None:
+        dac_res = bi
+    if noise.enabled and key is None:
+        raise ValueError("aimc_mvm_functional: noise enabled but no PRNG key")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    tiles = max(1, math.ceil(k / rows))
+    pad = tiles * rows - k
+    xf = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)))
+    uw = w.astype(jnp.int32) & ((1 << bw) - 1)
+    uw = jnp.pad(uw, ((0, pad), (0, 0)))
+
+    xt = xf.reshape(m, tiles, rows)
+    n_codes = jnp.asarray(2.0, jnp.float32) ** adc_res - 1.0
+
+    # conductance variation: one draw per stored bit cell, shared by all
+    # conversions that read the cell (same physical device)
+    if noise.weight_var > 0.0:
+        if cell_key is None:
+            cell_key, key = jax.random.split(key)
+        cell_eps = 1.0 + noise.weight_var * jax.random.normal(
+            cell_key, (bw, tiles * rows, n), jnp.float32)
+    else:
+        cell_eps = None
+
+    acc = jnp.zeros((m, tiles, n), jnp.float32)
+    for j in range(bw):                            # one bitline per weight bit
+        wp = ((uw >> j) & 1).astype(jnp.float32)
+        if cell_eps is not None:
+            wp = wp * cell_eps[j]
+        wpt = wp.reshape(tiles, rows, n)
+        sj = -(1 << j) if j == bw - 1 else (1 << j)
+        for shift, bits in _dac_phases(bi, dac_res):
+            xp = jnp.floor_divide(xt, float(1 << shift)) % float(1 << bits)
+            psum = jnp.einsum("mtr,trn->mtn", xp, wpt)
+            lsb = float(rows * ((1 << bits) - 1)) / n_codes
+            if noise.read_noise_lsb > 0.0:
+                key, sub = jax.random.split(key)
+                psum = psum + noise.read_noise_lsb * lsb * jax.random.normal(
+                    sub, psum.shape, jnp.float32)
+            code = jnp.clip(jnp.round(psum / lsb), 0.0, n_codes)   # ADC
+            acc = acc + (sj * float(1 << shift)) * (code * lsb)
+    return jnp.sum(acc, axis=1)
+
+
+ops.register_mvm_backend("dimc_exact", dimc_mvm_exact)
+ops.register_mvm_backend("aimc_functional", aimc_mvm_functional)

@@ -26,6 +26,40 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# --------------------------------------------------------------------------- #
+# MVM backend dispatch hook                                                    #
+# --------------------------------------------------------------------------- #
+# The execution-mode string ("dimc" / "aimc" / ...) resolves to a matmul
+# callable through this registry.  The exact Pallas kernels register
+# themselves below; ``repro.fidelity`` registers its functional
+# nonideality models ("dimc_exact" / "aimc_functional") on import, so
+# forward-pass swappers (models/tinyml.py, fidelity.functional) pick
+# their datapath through one dispatch point instead of hard-coded
+# branches.  Contract: ``fn(x, w, *, bi, bw, **mode_kwargs) -> (M, N)``.
+_MVM_BACKENDS: dict[str, object] = {}
+
+
+def register_mvm_backend(mode: str, fn, *, overwrite: bool = False) -> None:
+    """Register ``fn`` as the matmul implementation for ``mode``."""
+    if not overwrite and mode in _MVM_BACKENDS:
+        raise ValueError(f"mvm backend {mode!r} already registered")
+    _MVM_BACKENDS[mode] = fn
+
+
+def mvm_backend(mode: str):
+    """Resolve an execution mode to its registered matmul callable."""
+    try:
+        return _MVM_BACKENDS[mode]
+    except KeyError:
+        raise KeyError(
+            f"unknown mvm backend {mode!r}; registered: "
+            f"{sorted(_MVM_BACKENDS)}") from None
+
+
+def mvm_backends() -> tuple[str, ...]:
+    return tuple(sorted(_MVM_BACKENDS))
+
+
 def dimc_matmul(x: jax.Array, w: jax.Array, *, bi: int = 8, bw: int = 8,
                 signed_inputs: bool = True, interpret: bool | None = None,
                 **block_kw) -> jax.Array:
@@ -42,6 +76,10 @@ def aimc_matmul(x: jax.Array, w: jax.Array, *, bi: int = 4, bw: int = 4,
     interpret = _interpret_default() if interpret is None else interpret
     return aimc_mvm(x, w, bi=bi, bw=bw, adc_res=adc_res, rows=rows,
                     interpret=interpret, **block_kw)
+
+
+register_mvm_backend("dimc", dimc_matmul)
+register_mvm_backend("aimc", aimc_matmul)
 
 
 # --------------------------------------------------------------------------- #
@@ -79,8 +117,8 @@ def imc_linear_sim(x: jax.Array, w: jax.Array, mode: str = "dimc",
     xq, sx = quantize_symmetric(x, bi)
     wq, sw = quantize_symmetric(w, bw)
     if mode == "dimc":
-        y = dimc_matmul(xq.astype(jnp.int32), wq.astype(jnp.int32),
-                        bi=bi, bw=bw).astype(jnp.float32)
+        y = mvm_backend("dimc")(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                                bi=bi, bw=bw).astype(jnp.float32)
     elif mode == "aimc":
         # Differential (two-phase) signed-activation handling, as real
         # AIMC macros do: y = A(x+) - A(x-) with unsigned DAC levels in
@@ -89,10 +127,11 @@ def imc_linear_sim(x: jax.Array, w: jax.Array, mode: str = "dimc",
         rows = min(256, x.shape[-1])
         xq32 = xq.astype(jnp.int32)
         wq32 = wq.astype(jnp.int32)
-        y_pos = aimc_matmul(jnp.maximum(xq32, 0), wq32, bi=bi - 1, bw=bw,
-                            adc_res=adc_res, rows=rows)
-        y_neg = aimc_matmul(jnp.maximum(-xq32, 0), wq32, bi=bi - 1, bw=bw,
-                            adc_res=adc_res, rows=rows)
+        mm = mvm_backend("aimc")
+        y_pos = mm(jnp.maximum(xq32, 0), wq32, bi=bi - 1, bw=bw,
+                   adc_res=adc_res, rows=rows)
+        y_neg = mm(jnp.maximum(-xq32, 0), wq32, bi=bi - 1, bw=bw,
+                   adc_res=adc_res, rows=rows)
         y = y_pos - y_neg
     else:
         raise ValueError(mode)

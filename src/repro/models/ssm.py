@@ -235,15 +235,18 @@ def _ddlerp(p, x, x_prev):
     return outs
 
 
-def _rwkv_step(u):
-    """u: (H, hd) bonus. state: (B, H, hd, hd) f32 (k-major)."""
+def _rwkv_step(u, accum_dtype=jnp.float32):
+    """u: (H, hd) bonus. state: (B, H, hd, hd) in accum_dtype (k-major).
+
+    ``accum_dtype=jnp.float64`` gives a high-precision accumulation
+    reference (requires ``jax_enable_x64``; pass a float64 state)."""
     def step(s_state, xs):
         r_t, k_t, v_t, w_t = xs                      # (B, H, hd)
-        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
-                        v_t.astype(jnp.float32))
-        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(accum_dtype),
+                        v_t.astype(accum_dtype))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(accum_dtype),
                        s_state + u[None, :, :, None] * kv)
-        s_new = w_t.astype(jnp.float32)[..., None] * s_state + kv
+        s_new = w_t.astype(accum_dtype)[..., None] * s_state + kv
         return s_new, y.astype(r_t.dtype)
     return step
 
@@ -271,7 +274,8 @@ def _group_norm(y, gamma, n_heads):
     return (yf.reshape(b, s, d) * (1.0 + gamma)).astype(y.dtype)
 
 
-def _wkv_chunk_parallel(r, k, v, logw, u, state, chunk: int):
+def _wkv_chunk_parallel(r, k, v, logw, u, state, chunk: int,
+                        accum_dtype=jnp.float32):
     """Chunkwise-parallel WKV6 (GLA-style): within a chunk everything is
     batched einsums; chunks are scanned with the (B,H,K,V) state carry.
 
@@ -279,7 +283,13 @@ def _wkv_chunk_parallel(r, k, v, logw, u, state, chunk: int):
     causal mask is a *difference of cumulative log-decays* with
     c_{t-1} <= c_s for s < t, i.e. <= 0 (decays are < 1), so no overflow
     anywhere.  This removes the sequential S-step recurrence that made
-    rwkv6 train HBM-bound in the roofline (EXPERIMENTS.md §Perf)."""
+    rwkv6 train HBM-bound in the roofline (EXPERIMENTS.md §Perf).
+
+    ``accum_dtype=jnp.float64`` runs the whole chunk algebra (cumsums,
+    exponentials, state carry) in double precision — under extreme
+    decays (w -> exp(-100)) the two summation orders then agree to fp32
+    round-off instead of drifting ~1e-3 (requires ``jax_enable_x64``;
+    ``tests/models/test_wkv_chunked.py``)."""
     b, s, h, kd = r.shape
     vd = v.shape[-1]
     assert s % chunk == 0
@@ -289,9 +299,10 @@ def _wkv_chunk_parallel(r, k, v, logw, u, state, chunk: int):
         return t.reshape(b, n, chunk, h, t.shape[-1]).transpose(
             1, 0, 2, 3, 4)
 
-    rc, kc, vc, lwc = map(to_chunks, (r.astype(jnp.float32),
-                                      k.astype(jnp.float32),
-                                      v.astype(jnp.float32), logw))
+    rc, kc, vc, lwc = map(to_chunks, (r.astype(accum_dtype),
+                                      k.astype(accum_dtype),
+                                      v.astype(accum_dtype),
+                                      logw.astype(accum_dtype)))
 
     idx = jnp.arange(chunk)
     strict_lower = idx[:, None] > idx[None, :]
@@ -319,7 +330,8 @@ def _wkv_chunk_parallel(r, k, v, logw, u, state, chunk: int):
             + jnp.einsum("bshk,bshv->bhkv", k_dec, vt)
         return S_new, y
 
-    state, ys = jax.lax.scan(step, state, (rc, kc, vc, lwc))
+    state, ys = jax.lax.scan(step, state.astype(accum_dtype),
+                             (rc, kc, vc, lwc))
     y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, vd)
     return state, y.astype(r.dtype)
 

@@ -26,16 +26,22 @@ DAE_WIDTHS = (640, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640)
 
 @dataclasses.dataclass(frozen=True)
 class IMCExecConfig:
-    mode: str = "float"          # float | dimc | aimc
+    mode: str = "float"          # float | dimc | aimc | fidelity
     bi: int = 8
     bw: int = 8
     adc_res: int = 6
+    # mode="fidelity": every MVM routes through this callable (x, w) -> y
+    # instead of imc_linear_sim — the repro.fidelity forward-pass swapper
+    # injects its nonideality datapath here.
+    linear_fn: Callable | None = None
 
 
 def _linear(params, x, exec_cfg: IMCExecConfig):
     w, b = params["w"], params["b"]
     if exec_cfg.mode == "float":
         y = x @ w
+    elif exec_cfg.linear_fn is not None:
+        y = exec_cfg.linear_fn(x, w)
     else:
         y = imc_linear_sim(x, w, exec_cfg.mode, exec_cfg.bi, exec_cfg.bw,
                            exec_cfg.adc_res)

@@ -1,0 +1,65 @@
+"""The joint accuracy x cost table must render from committed artifacts.
+
+``benchmarks/accuracy_sweep.py --render-artifact`` reads the committed
+small-grid joint-frontier record under ``experiments/accuracy_sweep/``
+so fresh containers render the benchmark deterministically without a
+multi-minute fidelity evaluation.  These tests pin that the fixture
+stays loadable, schema-complete, and internally consistent (the stored
+pareto flags are exactly the non-dominated set of the stored columns).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parent.parent.parent
+sys.path.insert(0, str(REPO))          # benchmarks/ is a repo-root package
+
+from benchmarks import accuracy_sweep  # noqa: E402
+
+
+def _load():
+    assert accuracy_sweep.ARTIFACT.exists(), (
+        "committed fixture missing under experiments/accuracy_sweep/ — "
+        "regenerate with `PYTHONPATH=src python -m "
+        "benchmarks.accuracy_sweep --regen-artifact`")
+    return json.loads(accuracy_sweep.ARTIFACT.read_text())
+
+
+def test_committed_artifact_schema():
+    doc = _load()
+    for key in ("network", "noise", "n_seeds", "objective", "designs",
+                "regen"):
+        assert key in doc, key
+    rows = doc["designs"]
+    assert len(rows) >= 8
+    for r in rows:
+        for key in ("name", "analog", "accuracy", "sqnr_db", "energy_fj",
+                    "cycles", "area_mm2", "pareto"):
+            assert key in r, (r.get("name"), key)
+        assert 0.0 <= r["accuracy"] <= 1.0
+        assert r["energy_fj"] > 0 and r["cycles"] >= 0
+    assert any(r["analog"] for r in rows)
+    assert any(not r["analog"] for r in rows)
+
+
+def test_committed_artifact_pareto_flags_consistent():
+    rows = _load()["designs"]
+    pts = np.array([[-r["accuracy"], r["energy_fj"], float(r["cycles"])]
+                    for r in rows])
+    ge_all = (pts[:, None, :] >= pts[None, :, :]).all(-1)
+    gt_any = (pts[:, None, :] > pts[None, :, :]).any(-1)
+    mask = ~(ge_all & gt_any).any(axis=1)
+    stored = np.array([r["pareto"] for r in rows])
+    np.testing.assert_array_equal(stored, mask)
+    assert mask.any()
+
+
+def test_render_artifact(capsys):
+    summary = accuracy_sweep.render_artifact()
+    out = capsys.readouterr().out
+    assert "pareto=" in summary
+    assert int(summary.split("pareto=")[1]) >= 1
+    assert "accuracy_sweep artifact" in out

@@ -1,0 +1,108 @@
+"""Acceptance pin: ``fidelity.evaluate_grid`` + ``dse.joint_frontier``
+produce a joint (accuracy, energy, latency) Pareto frontier for a
+>= 64-design ``macro_grid`` on a tinyMLPerf network AND an LM Dense
+workload, with grid results matching the single-design scalar path."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs, fidelity
+from repro.core import designs, dse, lm_bridge, workloads
+from repro.models import tinyml
+
+WIDTHS = (64, 32, 8, 32, 64)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    g = designs.macro_grid(rows=(64, 128, 256, 512), cols=(128, 256),
+                           adc_bits=(3, 4, 5, 6, 7, 8), dac_bits=(2,),
+                           m_mux=(1, 4, 16), tech_nm=(28,), vdd=(0.8,))
+    assert len(g) >= 64
+    return g
+
+
+@pytest.fixture(scope="module")
+def dae_joint(grid):
+    params = tinyml.init_dae(jax.random.PRNGKey(0), widths=WIDTHS)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, WIDTHS[0])), jnp.float32)
+    forward = fidelity.network_forward(tinyml.dae_forward, params, x)
+    fid = fidelity.evaluate_grid(forward, grid)
+    layers = [workloads.dense(f"fc{i}", 8, WIDTHS[i], WIDTHS[i + 1])
+              for i in range(len(WIDTHS) - 1)]
+    cost = dse.sweep("dae_small", layers, grid)
+    return forward, fid, dse.joint_frontier(cost, fid)
+
+
+def test_tinyml_joint_frontier(grid, dae_joint):
+    _, fid, joint = dae_joint
+    assert len(joint) == len(grid)
+    assert np.all((fid.accuracy >= 0.0) & (fid.accuracy <= 1.0))
+    # exact digital designs all land on one accuracy; analog designs pay
+    # an adc_res-dependent price that vanishes at the high end
+    dimc = np.flatnonzero(~grid.analog)
+    aimc = np.flatnonzero(grid.analog)
+    assert len(np.unique(fid.accuracy[dimc])) == 1
+    assert fid.accuracy[aimc].min() < fid.accuracy[dimc][0]
+    # signature dedup actually compressed the evaluation
+    assert fid.n_jit_calls < len(grid) / 4
+
+    front = joint.pareto()
+    assert 1 <= len(front) <= len(grid)
+    mask = joint.pareto_mask()
+    pts = np.stack([-joint.accuracy, joint.energy_fj,
+                    joint.cycles.astype(np.float64)], axis=1)
+    for d in np.flatnonzero(~mask):        # every loser has a dominator
+        dom = (pts[front] <= pts[d]).all(axis=1) \
+            & (pts[front] < pts[d]).any(axis=1)
+        assert dom.any(), grid.names[d]
+    # accuracy floor selection stays inside the feasible set
+    floor = float(np.median(joint.accuracy))
+    b = joint.best(min_accuracy=floor)
+    assert joint.accuracy[b] >= floor
+    ok = np.flatnonzero(joint.accuracy >= floor)
+    assert joint.energy_fj[b] == joint.energy_fj[ok].min()
+
+
+def test_grid_matches_single_design_scalar_path(grid, dae_joint):
+    forward, fid, _ = dae_joint
+    for d in (0, len(grid) // 2, len(grid) - 1):
+        cfg = fidelity.FidelityConfig.from_macro(grid.macro_at(d))
+        r = fidelity.evaluate_design(forward, cfg)
+        assert r.accuracy == fid.accuracy[d], grid.names[d]
+        np.testing.assert_allclose(r.sqnr_db, fid.sqnr_db[d], rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_lm_dense_joint_frontier(grid):
+    cfg = configs.get_smoke("qwen1.5-0.5b")
+    spec = lm_bridge.lm_block_spec(cfg)
+    forward = fidelity.lm_dense_forward(spec, tokens=8)
+    fid = fidelity.evaluate_grid(forward, grid)
+    cost = dse.sweep(cfg.name, lm_bridge.lm_imc_workloads(cfg, tokens=8),
+                     grid)
+    joint = dse.joint_frontier(cost, fid)
+    assert len(joint) == len(grid) >= 64
+    front = joint.pareto()
+    assert len(front) >= 1
+    # the frontier must span the accuracy/energy trade: its most
+    # accurate member beats its cheapest member on accuracy, and the
+    # cheapest beats it on energy (unless one design wins both outright)
+    if len(front) > 1:
+        top, cheap = front[0], front[-1]
+        assert joint.accuracy[top] >= joint.accuracy[cheap]
+        assert joint.energy_fj[top] >= joint.energy_fj[cheap]
+
+
+def test_mismatched_grids_fail_loudly(grid, dae_joint):
+    _, fid, joint = dae_joint
+    other = designs.macro_grid(rows=(64,), adc_bits=(4,), dac_bits=(2,))
+    layers = [workloads.dense("fc0", 8, 64, 32)]
+    cost = dse.sweep("dae_small", layers, other)
+    with pytest.raises(ValueError):
+        dse.joint_frontier(cost, fid)
+    with pytest.raises(ValueError):
+        dse.joint_frontier(joint.sweep, np.zeros(3))

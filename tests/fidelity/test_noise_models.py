@@ -1,0 +1,159 @@
+"""Nonideality-model contracts: the DIMC fidelity path is bit-exact,
+the AIMC functional model reduces to the kernel oracle when noise is
+off, and each NoiseSpec knob degrades the output the way the physics
+says it must."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.testing.hypocompat import given, settings, st
+
+from repro import fidelity
+from repro.fidelity import FidelityConfig, NoiseSpec
+from repro.kernels import ops, ref
+
+
+def _int_data(m, k, n, bi, bw, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2 ** bi, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-(2 ** (bw - 1)), 2 ** (bw - 1), (k, n)),
+                    jnp.int32)
+    return x, w
+
+
+# --------------------------------------------------------------------------- #
+# bit-exactness guard: noise-free DIMC == int32 reference MVM                  #
+# --------------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 24), k=st.integers(1, 300), n=st.integers(1, 24),
+       bi=st.sampled_from([2, 4, 5, 8]), bw=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 10 ** 6))
+def test_dimc_fidelity_path_bit_exact(m, k, n, bi, bw, seed):
+    """The fidelity DIMC path (noise off) must be bit-identical to the
+    exact int32 reference MVM across random shapes and precisions."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-(2 ** (bi - 1)), 2 ** (bi - 1), (m, k)),
+                    jnp.int32)
+    w = jnp.asarray(rng.integers(-(2 ** (bw - 1)), 2 ** (bw - 1), (k, n)),
+                    jnp.int32)
+    y = fidelity.dimc_mvm_exact(x, w, bi=bi, bw=bw)
+    yr = ref.matmul_int_ref(x, w)
+    assert y.dtype == yr.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    # and through the dispatch hook the same object is reached
+    assert ops.mvm_backend("dimc_exact") is fidelity.dimc_mvm_exact
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([1, 3, 8]), k=st.sampled_from([32, 100, 200]),
+       n=st.sampled_from([4, 16]), seed=st.integers(0, 10 ** 6))
+def test_dimc_fidelity_linear_matches_quantized_reference(m, k, n, seed):
+    """fidelity_linear in DIMC mode == quantize -> exact int MVM ->
+    rescale, composed by hand from the same ops plumbing."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    cfg = FidelityConfig(mode="dimc", bi=8, bw=8)
+    y = fidelity.fidelity_linear(x, w, cfg)
+    xq, sx = ops.quantize_symmetric(x, 8)
+    wq, sw = ops.quantize_symmetric(w, 8)
+    yr = ref.matmul_int_ref(xq, wq).astype(jnp.float32) * sx * sw
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+# --------------------------------------------------------------------------- #
+# AIMC functional model vs the kernel oracle                                   #
+# --------------------------------------------------------------------------- #
+@settings(max_examples=12, deadline=None)
+@given(m=st.sampled_from([1, 8, 16]), k=st.sampled_from([40, 200, 600]),
+       n=st.sampled_from([8, 16]),
+       adc_res=st.sampled_from([3, 5, 6, 8]),
+       rows=st.sampled_from([64, 256]),
+       seed=st.integers(0, 10 ** 6))
+def test_aimc_functional_noise_off_matches_oracle(m, k, n, adc_res, rows,
+                                                  seed):
+    """With dac_res >= bi and noise off, the functional AIMC model sits
+    on exactly the oracle's ADC quantization grid."""
+    x, w = _int_data(m, k, n, 4, 4, seed)
+    y = fidelity.aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=adc_res,
+                                     rows=rows, dac_res=4)
+    yr = ref.aimc_mvm_ref(x, w, 4, 4, adc_res, rows)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5,
+                               atol=1e-2)
+
+
+def test_dac_phase_split_recombines_exactly_at_high_adc():
+    """Splitting inputs into DAC phases is a pure recombination identity
+    once the ADC stops quantizing (huge adc_res): every dac_res must
+    recover the exact integer product."""
+    x, w = _int_data(8, 200, 8, 4, 4, seed=3)
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    for dac in (1, 2, 3, 4):
+        y = fidelity.aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=24,
+                                         rows=128, dac_res=dac)
+        np.testing.assert_allclose(np.asarray(y), exact, rtol=1e-6,
+                                   atol=0.5)
+
+
+def test_read_noise_degrades_and_is_seed_reproducible():
+    x, w = _int_data(16, 256, 16, 4, 4, seed=5)
+    clean = fidelity.aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=8,
+                                         rows=256, dac_res=4)
+    noisy = lambda lsb, s: fidelity.aimc_mvm_functional(
+        x, w, bi=4, bw=4, adc_res=8, rows=256, dac_res=4,
+        noise=NoiseSpec(read_noise_lsb=lsb), key=jax.random.PRNGKey(s))
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    err = lambda y: np.abs(np.asarray(y) - exact).mean()
+    assert err(noisy(0.5, 0)) > err(clean)
+    assert err(noisy(2.0, 0)) > err(noisy(0.5, 0))
+    np.testing.assert_array_equal(np.asarray(noisy(0.5, 0)),
+                                  np.asarray(noisy(0.5, 0)))
+    assert not np.array_equal(np.asarray(noisy(0.5, 0)),
+                              np.asarray(noisy(0.5, 1)))
+
+
+def test_weight_variation_degrades_and_is_seed_reproducible():
+    x, w = _int_data(16, 256, 16, 4, 4, seed=7)
+    clean = fidelity.aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=10,
+                                         rows=256, dac_res=4)
+    noisy = lambda sig, s: fidelity.aimc_mvm_functional(
+        x, w, bi=4, bw=4, adc_res=10, rows=256, dac_res=4,
+        noise=NoiseSpec(weight_var=sig), key=jax.random.PRNGKey(s))
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    err = lambda y: np.abs(np.asarray(y) - exact).mean()
+    assert err(noisy(0.05, 0)) > err(clean)
+    assert err(noisy(0.2, 0)) > err(noisy(0.05, 0))
+    np.testing.assert_array_equal(np.asarray(noisy(0.05, 2)),
+                                  np.asarray(noisy(0.05, 2)))
+    assert not np.array_equal(np.asarray(noisy(0.05, 2)),
+                              np.asarray(noisy(0.05, 3)))
+
+
+def test_differential_phases_share_conductance_pattern():
+    """The x+ and x- phases of a signed-activation MVM read the SAME
+    stored cells: with weight variation only (read noise off), negating
+    the input must exactly negate the output — the two phases just swap
+    roles on one fixed perturbed array.  (Independent per-phase draws
+    would break this antisymmetry.)"""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(6, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 8)), jnp.float32)
+    cfg = FidelityConfig(mode="aimc", bi=8, bw=8, rows=128, adc_res=10,
+                         dac_res=8, noise=NoiseSpec(weight_var=0.1))
+    key = jax.random.PRNGKey(4)
+    y = fidelity.fidelity_linear(x, w, cfg, key)
+    y_neg = fidelity.fidelity_linear(-x, w, cfg, key)
+    np.testing.assert_array_equal(np.asarray(y_neg), -np.asarray(y))
+
+
+def test_from_macro_lowers_design_knobs():
+    from repro.core.designs import by_name
+    a = by_name("papistas21-4b4b")          # AIMC, adc=5, dac=4, rows=2304
+    cfg = FidelityConfig.from_macro(a.macro, noise=NoiseSpec(0.3, 0.01))
+    assert (cfg.mode, cfg.rows, cfg.adc_res, cfg.dac_res) == \
+        ("aimc", 2304, 5, 4)
+    assert cfg.noise.enabled
+    d = by_name("chih21-4b4b")              # DIMC: exact, noise stripped
+    cfg_d = FidelityConfig.from_macro(d.macro, noise=NoiseSpec(0.3, 0.01))
+    assert cfg_d.mode == "dimc" and not cfg_d.noise.enabled
