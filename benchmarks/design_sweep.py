@@ -7,9 +7,12 @@ One ``dse.sweep`` call prices every (design x mapping-candidate) pair
 of each tinyMLPerf workload through the jitted grid engine and reports,
 per IMC type, the best design under energy / latency / EDP plus the
 (energy, latency, area) Pareto frontier — the macro-level answer to
-"which IMC style wins where".
+"which IMC style wins where".  With ``--dataflows`` the sweep also
+searches the temporal schedule axis (weight- vs output-stationary) per
+layer and reports how often each dataflow wins — the flexibility axis
+of the paper's three-way AIMC/DIMC trade.
 
-Run:  PYTHONPATH=src python -m benchmarks.design_sweep [--smoke]
+Run:  PYTHONPATH=src python -m benchmarks.design_sweep [--smoke] [--dataflows]
 """
 
 from __future__ import annotations
@@ -36,15 +39,16 @@ def make_grid(smoke: bool = False) -> designs.MacroBatch:
         tech_nm=(5, 22, 28), vdd=(0.7, 0.8))
 
 
-def run(smoke: bool = False) -> None:
+def run(smoke: bool = False, dataflows: bool = False) -> None:
     grid = make_grid(smoke)
+    schedules = ("ws", "os") if dataflows else None
     nets = (("deep_autoencoder", workloads.deep_autoencoder()),)
     if not smoke:
         nets += (("resnet8", workloads.resnet8()),)
 
     for net_name, layers in nets:
         def sweep_net() -> str:
-            res = dse.sweep(net_name, layers, grid)
+            res = dse.sweep(net_name, layers, grid, schedules=schedules)
             aimc = np.flatnonzero(grid.analog)
             dimc = np.flatnonzero(~grid.analog)
             total_macs = sum(l.macs for l in layers if l.imc_eligible)
@@ -54,15 +58,21 @@ def run(smoke: bool = False) -> None:
 
             print(f"# {net_name}: {len(grid)} designs "
                   f"({len(aimc)} AIMC / {len(dimc)} DIMC), "
-                  f"objective={res.objective}")
+                  f"objective={res.objective}, "
+                  f"dataflows={'+'.join(res.schedules)}")
             print(f"# {'design':44s} {'fJ/MAC':>8s} {'Mcycles':>9s} "
                   f"{'mm2':>7s}")
             for tag, d in (("best AIMC", best_of(aimc)),
                            ("best DIMC", best_of(dimc))):
-                print(f"# {tag}: {grid.names[d]:42s}"
-                      f" {res.energy_fj[d] / total_macs:8.2f}"
-                      f" {res.cycles[d] / 1e6:9.2f}"
-                      f" {res.area_mm2[d]:7.3f}")
+                line = (f"# {tag}: {grid.names[d]:42s}"
+                        f" {res.energy_fj[d] / total_macs:8.2f}"
+                        f" {res.cycles[d] / 1e6:9.2f}"
+                        f" {res.area_mm2[d]:7.3f}")
+                if dataflows:
+                    counts = res.dataflow_counts(d)
+                    line += " " + ",".join(f"{k}:{v}" for k, v
+                                           in sorted(counts.items()))
+                print(line)
             front = res.pareto()
             for d in front[:5]:
                 print(f"#   pareto {grid.names[d]:42s}"
@@ -70,8 +80,15 @@ def run(smoke: bool = False) -> None:
                       f" {res.cycles[d] / 1e6:9.2f}"
                       f" {res.area_mm2[d]:7.3f}")
             winner = "AIMC" if bool(grid.analog[res.best()]) else "DIMC"
-            return (f"designs={len(grid)} pareto={len(front)} "
-                    f"energy_winner={winner}")
+            derived = (f"designs={len(grid)} pareto={len(front)} "
+                       f"energy_winner={winner}")
+            if dataflows:
+                # how many designs map at least one layer output-stationary
+                os_designs = sum(
+                    1 for d in range(len(grid))
+                    if res.dataflow_counts(d).get("os", 0) > 0)
+                derived += f" os_designs={os_designs}"
+            return derived
 
         timed(f"design_sweep_{net_name}", sweep_net)
 
@@ -81,5 +98,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="small grid + single network so CI can exercise "
                          "the full grid path in seconds")
+    ap.add_argument("--dataflows", action="store_true",
+                    help="search the temporal dataflow axis (ws+os) per "
+                         "layer instead of weight-stationary only")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, dataflows=args.dataflows)

@@ -1,26 +1,65 @@
 """Benchmark harness: one entry per paper table/figure (+ the
 beyond-paper LM case study, the roofline table from dry-run artifacts,
 and the Pallas kernel checks).  Prints ``name,us_per_call,derived``
-CSV rows; `#`-prefixed lines are human-readable detail."""
+CSV rows; `#`-prefixed lines are human-readable detail.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--list] [name ...]
+
+``--list`` prints the registered benchmark names; positional names run
+a subset (default: all, in registry order).
+"""
 
 from __future__ import annotations
+
+import argparse
 
 from . import (accuracy_sweep, common, design_sweep, fig4_survey,
                fig5_validation, fig6_tech, fig7_casestudy, kernel_bench,
                lm_imc_casestudy, roofline_table)
 
+#: registered benchmarks, in the order the full harness runs them.
+#: Variant entries (e.g. the dataflow-axis sweep CI smokes) share a
+#: module but pin different flags.
+BENCHMARKS: dict[str, object] = {
+    "fig4_survey": fig4_survey.run,
+    "fig5_validation": fig5_validation.run,
+    "fig6_tech": fig6_tech.run,
+    "fig7_casestudy": fig7_casestudy.run,
+    "lm_imc_casestudy": lm_imc_casestudy.run,
+    "design_sweep": design_sweep.run,
+    "design_sweep_dataflows": lambda: design_sweep.run(smoke=True,
+                                                       dataflows=True),
+    "accuracy_sweep": lambda: accuracy_sweep.run(smoke=True),
+    "roofline_table": roofline_table.run,
+    "kernel_bench": kernel_bench.run,
+}
 
-def main() -> None:
+#: the default full run skips variants that duplicate a base benchmark
+#: on a smaller grid (they exist for `--list`/CI selection).
+DEFAULT_RUN = tuple(n for n in BENCHMARKS if n != "design_sweep_dataflows")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true", dest="list_names",
+                    help="print the registered benchmark names and exit")
+    ap.add_argument("names", nargs="*", metavar="name",
+                    help="benchmarks to run (default: the full suite)")
+    args = ap.parse_args(argv)
+
+    if args.list_names:
+        for name in BENCHMARKS:
+            print(name)
+        return
+
+    names = args.names or list(DEFAULT_RUN)
+    unknown = [n for n in names if n not in BENCHMARKS]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; see --list")
+
     common.header()
-    fig4_survey.run()
-    fig5_validation.run()
-    fig6_tech.run()
-    fig7_casestudy.run()
-    lm_imc_casestudy.run()
-    design_sweep.run()
-    accuracy_sweep.run(smoke=True)     # full joint sweep is multi-minute
-    roofline_table.run()
-    kernel_bench.run()
+    for name in names:
+        BENCHMARKS[name]()
     print(f"# total benchmarks: {len(common.ROWS)}")
 
 

@@ -7,6 +7,7 @@ Layout:
     designs.py    published design-point dataset (Fig. 4 survey)
     validate.py   model-vs-silicon validation (Fig. 5)
     workloads.py  8-nested-loop DNN layer representation (Fig. 1)
+    schedule.py   temporal dataflow schedules (WS/OS), the third DSE axis
     mapping.py    spatial/temporal mapping + utilization (Fig. 2)
     memory.py     outer memory hierarchy traffic/energy
     dse.py        ZigZag-lite mapping search (Sec. VI)
@@ -16,10 +17,16 @@ The hot path is batched: ``energy.tile_energy_batch`` /
 ``mapping.evaluate_batch`` price whole candidate lattices as
 struct-of-arrays and ``dse.best_mapping`` argmins over them, with the
 scalar functions kept as bitwise reference oracles (see the module
-docstrings for the contract).
+docstrings for the contract).  The lattice has three axes — macro
+design (``designs.MacroBatch``), spatial mapping, and temporal
+dataflow (``schedule.Schedule``: weight- vs output-stationary) — and
+``dse.sweep`` argmins over all of them in one fused jit pass.
 """
 
 from .hardware import IMCMacro, IMCType                              # noqa: F401
+from .schedule import (                                              # noqa: F401
+    OUTPUT_STATIONARY, SCHEDULES, Schedule, WEIGHT_STATIONARY,
+)
 from .energy import (                                                # noqa: F401
     EnergyBreakdown, EnergyBreakdownBatch, MacroTile, peak_energy,
     peak_tops, peak_tops_per_watt, peak_tops_per_mm2, tile_energy,

@@ -211,10 +211,11 @@ class MacroBatch:
     """D macro design points flattened to struct-of-arrays knob columns.
 
     This is the *design axis* of the batched DSE: where
-    ``mapping.MappingBatch`` vectorizes over candidate mappings of one
-    macro, a ``MacroBatch`` vectorizes over macro designs, so the grid
-    engine (``energy.tile_energy_grid`` / ``mapping.evaluate_grid``)
-    can price a (design x mapping-candidate) lattice in one pass.
+    ``mapping.MappingBatch`` vectorizes over (mapping, dataflow)
+    candidates of one macro, a ``MacroBatch`` vectorizes over macro
+    designs, so the grid engine (``energy.tile_energy_grid`` /
+    ``mapping.evaluate_grid``) can price the full
+    (design x mapping x dataflow) lattice in one pass.
 
     Every array has shape (D,).  ``macro_at(i)`` returns the scalar
     :class:`~repro.core.hardware.IMCMacro` the row was built from, so

@@ -1,11 +1,13 @@
 """ZigZag-lite design-space exploration (paper Sec. VI).
 
 For each layer of a workload, enumerate legal spatial mappings
-(``mapping.enumerate_mappings``), price each with the unified energy
-model + the outer-memory traffic model, and keep the best under the
-chosen objective (energy, latency, or EDP).  This reproduces the role
-ZigZag plays in the paper: "find the optimal spatial and temporal
-mapping for each architecture and each network layer".
+(``mapping.enumerate_mappings``) crossed with the enabled temporal
+dataflows (``schedule.SCHEDULES``; weight-stationary only by default),
+price each with the unified energy model + the outer-memory traffic
+model, and keep the best under the chosen objective (energy, latency,
+or EDP).  This reproduces the role ZigZag plays in the paper: "find
+the optimal spatial and temporal mapping for each architecture and
+each network layer" — with the temporal half now an explicit DSE axis.
 
 Engines
 -------
@@ -73,6 +75,7 @@ latency) Pareto view of the paper's three-way AIMC/DIMC trade
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Callable, Sequence
@@ -85,6 +88,7 @@ from .hardware import IMCMacro
 from .mapping import (MappingCost, candidate_batch, enumerate_mappings,
                       evaluate, evaluate_batch)
 from .memory import MemoryModel
+from .schedule import normalize as _normalize_schedules
 from .workloads import Layer
 
 
@@ -183,22 +187,27 @@ def _layer_resident_bytes(layer: Layer) -> int:
 
 def best_mapping_scalar(layer: Layer, macro: IMCMacro, mem: MemoryModel,
                         objective: str = "energy",
-                        alpha: float | None = None) -> LayerResult:
+                        alpha: float | None = None,
+                        schedules=None) -> LayerResult:
     """Reference oracle: the original per-candidate Python loop.
 
-    Never cached, never vectorized — the batched engine is validated
-    against this function, so keep it boring.
+    Candidates are (mapping, schedule) pairs, mapping outer / schedule
+    inner (``schedules=None`` keeps the historical weight-stationary-only
+    search).  Never cached, never vectorized — the batched engine is
+    validated against this function, so keep it boring.
     """
     obj = OBJECTIVES[objective]
+    scheds = _normalize_schedules(schedules)
     best: LayerResult | None = None
     resident = _layer_resident_bytes(layer)
     for sm in enumerate_mappings(layer, macro):
-        cost = evaluate(layer, macro, sm, alpha=alpha)
-        res = LayerResult(
-            layer=layer, cost=cost,
-            memory_energy_fj=mem.traffic_energy_fj(cost, resident))
-        if best is None or obj(res) < obj(best):
-            best = res
+        for sched in scheds:
+            cost = evaluate(layer, macro, sm, alpha=alpha, schedule=sched)
+            res = LayerResult(
+                layer=layer, cost=cost,
+                memory_energy_fj=mem.traffic_energy_fj(cost, resident))
+            if best is None or obj(res) < obj(best):
+                best = res
     if best is None:
         raise ValueError(f"no legal mapping for {layer.name} on {macro.name}")
     return best
@@ -206,17 +215,19 @@ def best_mapping_scalar(layer: Layer, macro: IMCMacro, mem: MemoryModel,
 
 def best_mapping_batched(layer: Layer, macro: IMCMacro, mem: MemoryModel,
                          objective: str = "energy",
-                         alpha: float | None = None) -> LayerResult:
+                         alpha: float | None = None,
+                         schedules=None) -> LayerResult:
     """Vectorized search: one NumPy pass over all candidates + argmin.
 
     The objective columns replicate the scalar objective's float
     operation order, so ``argmin`` (first minimum wins) picks exactly
-    the candidate ``best_mapping_scalar`` keeps; the winner is then
-    re-priced through the scalar oracle so the returned object is
-    bitwise identical.
+    the candidate ``best_mapping_scalar`` keeps — the flattened
+    (mapping, schedule) axis shares its enumeration order; the winner
+    is then re-priced through the scalar oracle so the returned object
+    is bitwise identical.
     """
     resident = _layer_resident_bytes(layer)
-    batch = candidate_batch(layer, macro)
+    batch = candidate_batch(layer, macro, schedules=schedules)
     if len(batch) == 0:
         raise ValueError(f"no legal mapping for {layer.name} on {macro.name}")
     costs = evaluate_batch(layer, macro, batch, alpha=alpha)
@@ -235,7 +246,8 @@ def best_mapping_batched(layer: Layer, macro: IMCMacro, mem: MemoryModel,
     else:
         raise KeyError(objective)
     i = int(np.argmin(col))
-    cost = evaluate(layer, macro, batch.mapping_at(i), alpha=alpha)
+    cost = evaluate(layer, macro, batch.mapping_at(i), alpha=alpha,
+                    schedule=batch.schedule_at(i))
     return LayerResult(layer=layer, cost=cost,
                        memory_energy_fj=mem.traffic_energy_fj(cost, resident))
 
@@ -248,10 +260,11 @@ _CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def _cache_key(layer: Layer, macro: IMCMacro, mem: MemoryModel,
-               objective: str, alpha: float | None) -> tuple:
+               objective: str, alpha: float | None, schedules) -> tuple:
     """Cost-relevant signature: everything but the layer *name*."""
     return (tuple(sorted(layer.dims.items())), layer.w_prec, layer.i_prec,
-            layer.psum_prec, macro, mem, objective, alpha)
+            layer.psum_prec, macro, mem, objective, alpha,
+            tuple(s.name for s in schedules))
 
 
 def cache_clear() -> None:
@@ -266,19 +279,25 @@ def cache_info() -> dict[str, int]:
 def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
                  objective: str = "energy",
                  alpha: float | None = None,
-                 engine: str = "batch") -> LayerResult:
-    """Search the mapping space of one layer; return the argmin.
+                 engine: str = "batch",
+                 schedules=None) -> LayerResult:
+    """Search the (mapping x dataflow) space of one layer; return the
+    argmin.
 
     ``engine="batch"`` (default) evaluates all candidates in one
     vectorized pass and memoizes per layer signature; ``"scalar"`` runs
     the uncached reference loop.  Both return bitwise-identical results.
+    ``schedules`` selects the temporal dataflows searched
+    (``repro.core.schedule.normalize`` forms; default weight-stationary
+    only).
     """
+    scheds = _normalize_schedules(schedules)
     if engine == "scalar":
         return best_mapping_scalar(layer, macro, mem, objective=objective,
-                                   alpha=alpha)
+                                   alpha=alpha, schedules=scheds)
     if engine not in _ENGINES:
         raise KeyError(engine)
-    key = _cache_key(layer, macro, mem, objective, alpha)
+    key = _cache_key(layer, macro, mem, objective, alpha, scheds)
     hit = _CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
@@ -286,7 +305,7 @@ def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
             else dataclasses.replace(hit, layer=layer)
     _CACHE_STATS["misses"] += 1
     res = _ENGINES[engine](layer, macro, mem, objective=objective,
-                           alpha=alpha)
+                           alpha=alpha, schedules=scheds)
     _CACHE[key] = res
     return res
 
@@ -311,6 +330,7 @@ class SweepResult:
     cycles: np.ndarray                   # (D,) total network latency
     area_mm2: np.ndarray                 # (D,) macro area
     layer_names: tuple[str, ...]         # IMC-eligible layers, network order
+    schedules: tuple[str, ...] = ("ws",)  # dataflow axis searched (names)
     # per distinct layer shape: (layer, grid, best_idx (D,)) — enough to
     # rebuild any design's full scalar-oracle result without re-searching.
     _shapes: tuple = dataclasses.field(repr=False, default=())
@@ -344,9 +364,23 @@ class SweepResult:
         idx = np.flatnonzero(self.pareto_mask())
         return idx[np.argsort(self.energy_fj[idx], kind="stable")]
 
+    def dataflows(self, d: int) -> tuple[str, ...]:
+        """Per-layer chosen dataflow names for design ``d``, in
+        ``layer_names`` order (the winning ``Schedule.name`` of each
+        layer's (mapping x dataflow) argmin)."""
+        return tuple(
+            self._shapes[si][1].cand.schedule_at(
+                int(self._shapes[si][2][d])).name
+            for si in self._layer_shape)
+
+    def dataflow_counts(self, d: int) -> dict[str, int]:
+        """Histogram of :meth:`dataflows` for design ``d``."""
+        return dict(collections.Counter(self.dataflows(d)))
+
     def network_result(self, d: int) -> NetworkResult:
         """Rebuild design ``d``'s full :class:`NetworkResult` through the
-        scalar oracle, from the stored winning mappings (no re-search)."""
+        scalar oracle, from the stored winning (mapping, dataflow) pairs
+        (no re-search)."""
         macro = self.designs.macro_at(d)
         mem = self._mem or MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
         shape_results: dict[int, LayerResult] = {}
@@ -355,7 +389,9 @@ class SweepResult:
             if si not in shape_results:
                 layer, grid, best_idx = self._shapes[si]
                 sm = grid.cand.mapping_at(int(best_idx[d]))
-                cost = evaluate(layer, macro, sm, alpha=self._alpha)
+                cost = evaluate(layer, macro, sm, alpha=self._alpha,
+                                schedule=grid.cand.schedule_at(
+                                    int(best_idx[d])))
                 shape_results[si] = LayerResult(
                     layer=layer, cost=cost,
                     memory_energy_fj=mem.traffic_energy_fj(
@@ -371,21 +407,25 @@ class SweepResult:
 
 def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
           objective: str = "energy", alpha: float | None = None,
-          mem: MemoryModel | None = None) -> SweepResult:
+          mem: MemoryModel | None = None,
+          schedules=None) -> SweepResult:
     """Price a whole macro grid against a workload in one batched pass.
 
     For every design in ``designs`` (a ``designs.MacroBatch``) and every
-    IMC-eligible layer, the full legal-mapping lattice is evaluated
-    through the jitted grid engine and the per-layer argmin under
-    ``objective`` is kept — the same candidate, bitwise, that
+    IMC-eligible layer, the full legal (mapping x dataflow) lattice is
+    evaluated through the jitted grid engine and the per-layer argmin
+    under ``objective`` is kept — the same candidate, bitwise, that
     ``best_mapping`` would pick on that design (the grid's masked
-    candidate axis preserves the scalar enumeration order, so even ties
-    break identically).  Repeated layer shapes are priced once, like
-    the layer-result cache.
+    candidate axis preserves the scalar enumeration order, schedule
+    inner, so even ties break identically).  Repeated layer shapes are
+    priced once, like the layer-result cache.
 
     ``mem=None`` (default) gives each design its own
     ``MemoryModel(tech_nm, vdd)``, matching ``map_network``; passing an
     explicit model prices every design against that one memory system.
+    ``schedules`` enables the dataflow axis (default: weight-stationary
+    only); the chosen-per-layer dataflow is surfaced via
+    :meth:`SweepResult.dataflows`.
     """
     from .mapping import candidate_grid, evaluate_grid
     from .memory import (DRAM_FJ_PER_BIT, sram_fj_per_bit_grid,
@@ -393,6 +433,7 @@ def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
 
     if objective not in OBJECTIVES:
         raise KeyError(objective)
+    scheds = _normalize_schedules(schedules)
     eligible = [l for l in layers if l.imc_eligible]
     if not eligible:
         raise ValueError(f"{network}: no IMC-eligible layers")
@@ -411,7 +452,7 @@ def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
         key = (tuple(sorted(layer.dims.items())), layer.w_prec,
                layer.i_prec, layer.psum_prec)
         if key not in shape_index:
-            grid = candidate_grid(layer, designs)
+            grid = candidate_grid(layer, designs, schedules=scheds)
             costs = evaluate_grid(layer, designs, grid, alpha=alpha)
             mem_fj = traffic_energy_grid(
                 per_bit, costs, _layer_resident_bytes(layer),
@@ -445,6 +486,7 @@ def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
         network=network, objective=objective, designs=designs,
         energy_fj=energy, cycles=cycles, area_mm2=designs.area_mm2(),
         layer_names=tuple(l.name for l in eligible),
+        schedules=tuple(s.name for s in scheds),
         _shapes=tuple((s[0], s[1], s[2]) for s in shapes),
         _layer_shape=tuple(layer_shape), _alpha=alpha, _mem=mem)
 
@@ -573,11 +615,12 @@ def map_network(network: str, layers: Sequence[Layer], macro: IMCMacro,
                 objective: str = "energy",
                 mem: MemoryModel | None = None,
                 alpha: float | None = None,
-                engine: str = "batch") -> NetworkResult:
+                engine: str = "batch",
+                schedules=None) -> NetworkResult:
     mem = mem or MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
     results = tuple(
         best_mapping(l, macro, mem, objective=objective, alpha=alpha,
-                     engine=engine)
+                     engine=engine, schedules=schedules)
         for l in layers if l.imc_eligible)
     return NetworkResult(network=network, macro_name=macro.name,
                          layers=results)

@@ -28,6 +28,22 @@ protocol the paper uses for its comparisons (Sec. III).
 
 All energies are in femtojoules (fJ); see ``tech.py`` for units.
 
+Temporal schedules
+------------------
+The per-phase toggle counts are parameterized on a
+:class:`repro.core.schedule.Schedule`.  Most of the schedule dependence
+enters through ``MacroTile.weight_loads`` (the mapper computes it from
+the schedule: 1 for weight-stationary, one reload per temporal input
+iteration for output-stationary), which the model already prices — the
+weight-write term and the DIMC ``M = 1`` precharge count scale with it.
+The one term the tile arguments cannot carry is the **output-stationary
+AIMC pass-boundary conversion phase**: every weight reload drains the
+resident partials through the ADCs (one conversion per active weight
+word) and re-drives the inputs through the row DACs.  DIMC pays
+nothing there — its partials sit in digital accumulator registers and
+a reload is a plain SRAM write — which is exactly the dataflow
+flexibility asymmetry the paper argues for (Sec. III).
+
 Batched evaluation
 ------------------
 ``tile_energy`` prices ONE tile; the DSE prices thousands of candidate
@@ -57,6 +73,7 @@ import numpy as np
 
 from . import tech as _tech
 from .hardware import IMCMacro
+from .schedule import WEIGHT_STATIONARY, Schedule
 
 #: Activity factor at the paper's 50 % operand-sparsity protocol.  Not all
 #: nodes toggle rail-to-rail every cycle; calibrated once against the DIMC
@@ -146,8 +163,13 @@ class EnergyBreakdown:
 
 
 def tile_energy(macro: IMCMacro, tile: MacroTile,
-                alpha: float = DEFAULT_ALPHA) -> EnergyBreakdown:
-    """Evaluate Eq. 1-11 for one weight-resident tile execution."""
+                alpha: float = DEFAULT_ALPHA,
+                schedule: Schedule = WEIGHT_STATIONARY) -> EnergyBreakdown:
+    """Evaluate Eq. 1-11 for one tile execution under ``schedule``.
+
+    The schedule mostly acts through ``tile.weight_loads`` (the mapper
+    sets it); the only explicit branch here is the output-stationary
+    AIMC pass-boundary conversion phase (module docstring)."""
     tp = macro.tech_params()
     v2 = macro.vdd * macro.vdd
     c_wl = tp.c_inv_ff           # C_WL ~ C_inv (paper Sec. IV-B1)
@@ -226,6 +248,18 @@ def tile_energy(macro: IMCMacro, tile: MacroTile,
     else:
         e_dac = 0.0
 
+    # --- OS pass-boundary conversion phases (AIMC only) --------------------------
+    # Streaming a new weight tile into an analog array drains the resident
+    # partials through the ADCs (one conversion per active weight word) and
+    # re-drives the inputs through the row DACs, once per reload.  DIMC
+    # reloads are plain SRAM writes (already in e_weight_write).
+    if macro.analog and schedule.output_stationary:
+        reloads = tile.weight_loads
+        e_adc = e_adc + _tech.adc_energy_fj(macro.adc_res, macro.vdd) \
+            * words * reloads / macro.cols_per_adc
+        e_dac = e_dac + _tech.dac_energy_fj(macro.dac_res, macro.vdd) \
+            * rows_drv * reloads
+
     # --- weight (re)write extension --------------------------------------------
     bits_written = tile.weight_loads * rows_drv * words * bw
     e_write = WRITE_CINV_FACTOR * tp.c_inv_ff * v2 * bits_written
@@ -300,12 +334,16 @@ def tile_energy_batch(macro: IMCMacro,
                       rows_used: np.ndarray,
                       cols_used: np.ndarray,
                       weight_loads: np.ndarray | int = 1,
-                      alpha: float = DEFAULT_ALPHA) -> EnergyBreakdownBatch:
+                      alpha: float = DEFAULT_ALPHA,
+                      schedule_os: np.ndarray | bool = False
+                      ) -> EnergyBreakdownBatch:
     """Vectorized :func:`tile_energy` over N tiles on one macro.
 
     Arguments are integer arrays of shape (N,) (``weight_loads`` may be
-    a scalar).  Bitwise-identical to the scalar oracle per the module
-    docstring's scalar-reference contract.
+    a scalar).  ``schedule_os`` marks output-stationary tiles (bool,
+    broadcastable), which adds the AIMC pass-boundary conversion term.
+    Bitwise-identical to the scalar oracle per the module docstring's
+    scalar-reference contract.
     """
     n_inputs = np.asarray(n_inputs, dtype=np.int64)
     rows_used = np.asarray(rows_used, dtype=np.int64)
@@ -373,6 +411,20 @@ def tile_energy_batch(macro: IMCMacro,
     else:
         e_dac = np.zeros_like(macs)
 
+    # OS pass-boundary conversion phases (AIMC only; WS lanes add +0.0,
+    # which is a bitwise no-op on the non-negative energy columns).
+    if macro.analog and np.any(schedule_os):
+        os_mask = np.broadcast_to(
+            np.asarray(schedule_os, dtype=bool), n_inputs.shape)
+        e_adc = e_adc + np.where(
+            os_mask,
+            _tech.adc_energy_fj(macro.adc_res, macro.vdd)
+            * words * weight_loads / macro.cols_per_adc, 0.0)
+        e_dac = e_dac + np.where(
+            os_mask,
+            _tech.dac_energy_fj(macro.dac_res, macro.vdd)
+            * rows_drv * weight_loads, 0.0)
+
     bits_written = weight_loads * rows_drv * words * bw
     e_write = WRITE_CINV_FACTOR * tp.c_inv_ff * v2 * bits_written
 
@@ -414,7 +466,8 @@ def _grid_kernel():
                    e_wl_line, e_bl_word, p_logic, adc_e, denom_adc,
                    cols_per_adc, f_tree_a, f_tree_d, p_tree, denom_occ,
                    dac_e, p_write,
-                   n_inputs, rows_used, cols_used, weight_loads, alpha):
+                   n_inputs, rows_used, cols_used, weight_loads, sched_os,
+                   alpha):
             macs = n_inputs.astype(jnp.float64) * rows_used * cols_used
             rows_drv = jnp.minimum(rows_used, rows)
             words = jnp.minimum(cols_used, d1)
@@ -449,10 +502,21 @@ def _grid_kernel():
             e_dac = jnp.where(analog,
                               dac_e * rows_drv * (cc_bs * n_inputs), 0.0)
 
+            # OS pass-boundary conversion phases (AIMC only).  Returned
+            # as separate masked terms: the scalar association
+            # ``e_adc + extra`` is an addition, which must happen
+            # outside the kernel to stay safe from FMA contraction.
+            os_analog = analog & sched_os
+            x_adc = jnp.where(
+                os_analog, adc_e * words * weight_loads / cols_per_adc, 0.0)
+            x_dac = jnp.where(
+                os_analog, dac_e * rows_drv * weight_loads, 0.0)
+
             # weight (re)write extension
             bits_written = weight_loads * rows_drv * words * bw
             e_write = p_write * bits_written
-            return e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, macs
+            return (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write,
+                    macs, x_adc, x_dac)
 
         _GRID_KERNEL = jax.jit(kernel)
     return _GRID_KERNEL
@@ -460,17 +524,21 @@ def _grid_kernel():
 
 def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
                      weight_loads: np.ndarray | int = 1,
-                     alpha: float = DEFAULT_ALPHA) -> EnergyBreakdownBatch:
+                     alpha: float = DEFAULT_ALPHA,
+                     schedule_os: np.ndarray | bool = False
+                     ) -> EnergyBreakdownBatch:
     """Vectorized :func:`tile_energy` over a (design x tile) lattice.
 
     ``designs`` is a :class:`repro.core.designs.MacroBatch` of D macro
     design points; the tile arguments are integer arrays broadcastable
     to a common (..., C) shape, which is crossed with the design axis
-    into (D, C) outputs.  One fused ``jax.jit`` pass (on whatever
-    backend JAX finds; float64 via ``jax.experimental.enable_x64``)
-    prices the lattice; the result is bitwise identical to running the
-    scalar oracle at every (design, tile) pair — the same contract
-    ``tile_energy_batch`` honours per macro, extended over designs.
+    into (D, C) outputs.  ``schedule_os`` marks output-stationary tile
+    columns (bool, broadcastable against the tile axis).  One fused
+    ``jax.jit`` pass (on whatever backend JAX finds; float64 via
+    ``jax.experimental.enable_x64``) prices the lattice; the result is
+    bitwise identical to running the scalar oracle at every
+    (design, tile) pair — the same contract ``tile_energy_batch``
+    honours per macro, extended over designs.
     """
     from jax.experimental import enable_x64
 
@@ -479,6 +547,8 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
     cols_used = np.atleast_1d(np.asarray(cols_used, dtype=np.int64))
     weight_loads = np.broadcast_to(
         np.asarray(weight_loads, dtype=np.int64), n_inputs.shape)
+    sched_os = np.broadcast_to(
+        np.asarray(schedule_os, dtype=bool), n_inputs.shape)
 
     cst = _design_constants(designs)
     col = lambda a: a[:, None]                     # (D,) -> (D, 1)
@@ -490,8 +560,17 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
             col(cst["adc_e"]), col(cst["denom_adc"]), col(cst["cols_per_adc"]),
             col(cst["f_tree_a"]), col(cst["f_tree_d"]), col(cst["p_tree"]),
             col(cst["denom_occ"]), col(cst["dac_e"]), col(cst["p_write"]),
-            n_inputs, rows_used, cols_used, weight_loads, alpha)
+            n_inputs, rows_used, cols_used, weight_loads, sched_os, alpha)
         parts = tuple(np.asarray(p, dtype=np.float64) for p in parts)
+    (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, macs,
+     x_adc, x_dac) = parts
+    # OS conversion-phase terms fold in with the scalar association
+    # (``e_adc + extra``); WS/DIMC lanes carry masked +0.0 — a bitwise
+    # no-op on the non-negative energy columns.
+    if sched_os.any():
+        e_adc = e_adc + x_adc
+        e_dac = e_dac + x_dac
+    parts = (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, macs)
     # design-independent fields (e.g. macs) come back (C,); give every
     # field the full (D, C) face so indexing is uniform.
     shape = np.broadcast_shapes(*(p.shape for p in parts))

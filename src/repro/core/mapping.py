@@ -10,10 +10,15 @@ Spatial unrolling rules from the paper:
 * **macros**: OX / OY / G (weight duplication across macros) and K
   (weight split, no duplication) — paper Sec. II-A & VI.
 
-The temporal schedule is weight-stationary (the IMC-natural choice): a
-weight tile is written once and all B*OX*OY input vectors stream
-through it; partial sums spill to the outer memory when the
-accumulation depth C*FX*FY exceeds the rows.
+The temporal schedule is a pluggable :class:`repro.core.schedule.Schedule`
+— a third lattice axis next to the mapping candidates and the macro
+designs.  Weight-stationary (the IMC-natural choice) writes a weight
+tile once and streams all B*OX*OY input vectors through it, spilling
+partial sums to the outer memory when the accumulation depth C*FX*FY
+exceeds the rows; output-stationary keeps the partials resident and
+streams the weight tiles instead (see ``schedule.py`` for the cost
+asymmetry between AIMC and DIMC).  Every engine below defaults to
+weight-stationary only, preserving the historical behavior.
 
 Batched evaluation
 ------------------
@@ -44,6 +49,9 @@ import numpy as np
 from .energy import (EnergyBreakdown, EnergyBreakdownBatch, MacroTile,
                      tile_energy, tile_energy_batch)
 from .hardware import IMCMacro
+from .schedule import (OS_CODE, WEIGHT_STATIONARY, WS_CODE, Schedule,
+                       by_code as _schedule_by_code,
+                       normalize as _normalize_schedules)
 from .workloads import Layer
 
 COL_DIMS = ("K",)
@@ -97,7 +105,7 @@ def is_legal(layer: Layer, macro: IMCMacro, sm: SpatialMapping) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class MappingCost:
-    """Full cost of one layer under one spatial mapping."""
+    """Full cost of one layer under one (spatial mapping, schedule)."""
 
     mapping: SpatialMapping
     macro_energy: EnergyBreakdown        # datapath energy (Eq. 1-11)
@@ -110,6 +118,7 @@ class MappingCost:
     input_bits: float
     output_bits: float
     psum_bits: float
+    schedule: Schedule = WEIGHT_STATIONARY   # temporal dataflow priced
 
     @property
     def total_traffic_bits(self) -> float:
@@ -118,8 +127,9 @@ class MappingCost:
 
 
 def evaluate(layer: Layer, macro: IMCMacro, sm: SpatialMapping,
-             alpha: float | None = None) -> MappingCost:
-    """Cost one layer under one spatial mapping (weight-stationary)."""
+             alpha: float | None = None,
+             schedule: Schedule = WEIGHT_STATIONARY) -> MappingCost:
+    """Cost one layer under one spatial mapping and temporal schedule."""
     from .energy import DEFAULT_ALPHA
     alpha = DEFAULT_ALPHA if alpha is None else alpha
 
@@ -143,12 +153,16 @@ def evaluate(layer: Layer, macro: IMCMacro, sm: SpatialMapping,
     inputs_per_tile = layer.dim("B") * n_spatial_temporal
 
     # --- per-tile energy (all macros of the duplicated set together) ----------
+    # The schedule sets the reload count: WS writes the tile once, OS
+    # streams it back in on every temporal input iteration.
     rows_used = min(row_un, layer.accumulation_depth)
     cols_used = min(k_cols, layer.dim("K"))
+    weight_loads = schedule.weight_loads(inputs_per_tile)
     tile = MacroTile(n_inputs=inputs_per_tile, rows_used=rows_used,
-                     cols_used=cols_used, weight_loads=1)
+                     cols_used=cols_used, weight_loads=weight_loads)
     active_macros = k_macros * dup_macros
-    e_tile = tile_energy(macro, tile, alpha=alpha).scaled(active_macros)
+    e_tile = tile_energy(macro, tile, alpha=alpha,
+                         schedule=schedule).scaled(active_macros)
     macro_energy = e_tile.scaled(weight_tiles)
 
     # --- utilization -----------------------------------------------------------
@@ -162,25 +176,32 @@ def evaluate(layer: Layer, macro: IMCMacro, sm: SpatialMapping,
     # --- latency ---------------------------------------------------------------
     cc_per_input = (macro.cc_bs * macro.adc_share if macro.analog
                     else macro.cc_bs * macro.m_mux)
-    write_cycles = rows_used * weight_tiles           # one row write per cycle
+    # one row write per cycle, repeated per schedule-mandated reload
+    write_cycles = rows_used * weight_tiles * weight_loads
     cycles = weight_tiles * inputs_per_tile * cc_per_input + write_cycles
 
     # --- outer-memory traffic ----------------------------------------------------
-    # Weights: each element enters the macro once (weight-stationary),
-    # duplicated dup_macros times (paper: OX/OY/G duplication cost).
-    weight_bits = layer.weight_elems * layer.w_prec * dup_macros
-    # Inputs: refetched once per temporal K tile (columns already share).
-    input_bits = layer.input_elems * layer.i_prec * n_k_tiles
+    # Weights: each element enters the macro once under WS (refetched per
+    # input iteration under OS), duplicated dup_macros times (paper:
+    # OX/OY/G duplication cost).
+    weight_bits = (layer.weight_elems * layer.w_prec * dup_macros
+                   * schedule.weight_refetch(inputs_per_tile))
+    # Inputs: WS refetches once per temporal K tile (columns already
+    # share); OS fetches each input exactly once.
+    input_bits = (layer.input_elems * layer.i_prec
+                  * schedule.input_refetch(n_k_tiles))
     # Outputs written once...
     output_bits = layer.output_elems * layer.psum_prec
-    # ...plus partial-sum spill/refill when the accumulation is split.
+    # ...plus partial-sum spill/refill when the accumulation is split
+    # (WS only; OS keeps partials resident in the accumulators).
     psum_bits = (layer.output_elems * layer.psum_prec
-                 * 2 * max(0, n_acc_tiles - 1))
+                 * schedule.psum_transfers(n_acc_tiles))
     return MappingCost(
         mapping=sm, macro_energy=macro_energy, weight_tiles=weight_tiles,
         inputs_per_tile=inputs_per_tile, cycles=cycles,
         spatial_utilization=spatial_utilization, weight_bits=weight_bits,
-        input_bits=input_bits, output_bits=output_bits, psum_bits=psum_bits)
+        input_bits=input_bits, output_bits=output_bits, psum_bits=psum_bits,
+        schedule=schedule)
 
 
 # --------------------------------------------------------------------------- #
@@ -247,14 +268,17 @@ _MAC_NAMES = {v: k for k, v in _MAC_CODES.items()}
 
 @dataclasses.dataclass
 class MappingBatch:
-    """N spatial-mapping candidates for one layer, flattened to arrays.
+    """N (spatial mapping, schedule) candidates for one layer, flattened
+    to arrays.
 
-    Built directly as struct-of-arrays in *exact*
-    ``enumerate_mappings`` order — candidate ``i`` here is the ``i``-th
-    mapping the scalar generator yields, so an argmin index translates
-    straight to the oracle's pick.  ``mapping_at(i)`` materializes one
-    :class:`SpatialMapping` on demand (only the winner usually is);
-    ``mappings`` builds the whole tuple for tests/debugging.
+    Built directly as struct-of-arrays in *exact* scalar-oracle order —
+    ``enumerate_mappings`` order for the spatial axis, crossed
+    mapping-outer / schedule-inner when more than one schedule is
+    enabled — so an argmin index translates straight to the oracle's
+    pick.  ``mapping_at(i)`` / ``schedule_at(i)`` materialize one
+    candidate on demand (only the winner usually is); ``mappings``
+    builds the whole spatial tuple for tests/debugging (each mapping
+    appears once per enabled schedule).
     """
 
     k_cols: np.ndarray        # cols["K"] per candidate
@@ -267,9 +291,18 @@ class MappingBatch:
     mac_un: np.ndarray        # unroll of the chosen macro dim (1 if none)
     dup_macros: np.ndarray    # OX/OY/G macro unroll product (>= 1)
     n_spatial_temporal: np.ndarray  # prod_d ceil(dim_d / macro_unroll_d)
+    schedule: np.ndarray | None = None   # Schedule.code per candidate
+
+    def __post_init__(self) -> None:
+        if self.schedule is None:
+            self.schedule = np.full(len(self.k_cols), WS_CODE,
+                                    dtype=np.int64)
 
     def __len__(self) -> int:
         return len(self.k_cols)
+
+    def schedule_at(self, i: int) -> Schedule:
+        return _schedule_by_code(int(self.schedule[i]))
 
     def mapping_at(self, i: int) -> SpatialMapping:
         code = int(self.mac_dim[i])
@@ -290,18 +323,57 @@ class MappingBatch:
         return tuple(self.mapping_at(i) for i in range(len(self)))
 
 
+def _with_schedule_axis(batch: MappingBatch,
+                        schedules: Sequence[Schedule]) -> MappingBatch:
+    """Cross a spatial candidate batch with the schedule axis, mapping
+    outer / schedule inner — the scalar oracle's enumeration order, so
+    argmin tie-breaks stay bitwise-faithful to the per-candidate loop.
+
+    A single weight-stationary schedule (the default everywhere) is the
+    identity; the ``max_candidates`` truncation is always applied to the
+    *spatial* lattice before this expansion, matching the scalar
+    generator's cap on mappings (schedules multiply inside the cap).
+    """
+    for s in schedules:
+        if s.code not in (WS_CODE, OS_CODE):
+            # The np.where selections in evaluate_batch/_grid only know
+            # the builtin closed forms; pricing an unknown schedule as
+            # WS would silently break the scalar-parity contract.
+            raise NotImplementedError(
+                f"batched engines only vectorize the builtin schedules "
+                f"(ws/os); got {s.name!r} (code {s.code}) — use "
+                f"engine='scalar' or vectorize its factor hooks here")
+    if len(schedules) == 1 and schedules[0].code == WS_CODE:
+        return batch
+    codes = np.asarray([s.code for s in schedules], dtype=np.int64)
+    s = len(codes)
+    rep = lambda a: np.repeat(a, s)
+    return MappingBatch(
+        k_cols=rep(batch.k_cols), k_macros=rep(batch.k_macros),
+        c_un=rep(batch.c_un), fx_un=rep(batch.fx_un),
+        fy_un=rep(batch.fy_un), row_un=rep(batch.row_un),
+        mac_dim=rep(batch.mac_dim), mac_un=rep(batch.mac_un),
+        dup_macros=rep(batch.dup_macros),
+        n_spatial_temporal=rep(batch.n_spatial_temporal),
+        schedule=np.tile(codes, len(batch)))
+
+
 def candidate_batch(layer: Layer, macro: IMCMacro,
-                    max_candidates: int = 4096) -> MappingBatch:
+                    max_candidates: int = 4096,
+                    schedules=None) -> MappingBatch:
     """Flatten the legal-mapping lattice of ``layer`` on ``macro`` into a
     :class:`MappingBatch` without materializing per-candidate objects.
 
     Replicates the ``enumerate_mappings`` nesting (k_col outer, row
-    lattice middle, macro option inner) with ``np.repeat``/``np.tile``.
-    Every lattice point is legal by construction (all factor lists are
-    capped by both the loop bound and the physical axis), which
+    lattice middle, macro option inner) with ``np.repeat``/``np.tile``;
+    ``schedules`` (``schedule.normalize`` forms) crosses in the dataflow
+    axis, schedule-minor.  Every lattice point is legal by construction
+    (all factor lists are capped by both the loop bound and the physical
+    axis; legality is schedule-independent), which
     ``tests/core/test_batched_parity.py`` cross-checks against the
     generator.
     """
+    scheds = _normalize_schedules(schedules)
     k = layer.dim("K")
     kcs = _unroll_candidates(k, macro.d1)
 
@@ -361,14 +433,14 @@ def candidate_batch(layer: Layer, macro: IMCMacro,
         for parts in zip(*chunks))
     is_k = mac_dim_a == _MAC_K
     is_dup = (mac_dim_a != _MAC_NONE) & ~is_k
-    return MappingBatch(
+    return _with_schedule_axis(MappingBatch(
         k_cols=k_cols,
         k_macros=np.where(is_k, mac_un_a, 1),
         c_un=c_un, fx_un=fx_un, fy_un=fy_un,
         row_un=c_un * fx_un * fy_un,
         mac_dim=mac_dim_a, mac_un=mac_un_a,
         dup_macros=np.where(is_dup, mac_un_a, 1),
-        n_spatial_temporal=nst)
+        n_spatial_temporal=nst), scheds)
 
 
 # --------------------------------------------------------------------------- #
@@ -400,7 +472,9 @@ class MappingGrid:
         return len(self.cand)
 
     def mappings_for(self, d: int) -> tuple[SpatialMapping, ...]:
-        """Design ``d``'s legal candidates, in its enumeration order."""
+        """Design ``d``'s legal candidates, in its enumeration order.
+        With multiple schedules enabled each spatial mapping appears
+        once per schedule (legality is schedule-independent)."""
         return tuple(self.cand.mapping_at(int(j))
                      for j in np.flatnonzero(self.legal[d]))
 
@@ -421,7 +495,8 @@ def _pow2_member(u: np.ndarray, dim: int | np.ndarray,
 
 
 def candidate_grid(layer: Layer, designs,
-                   max_candidates: int = 4096) -> MappingGrid:
+                   max_candidates: int = 4096,
+                   schedules=None) -> MappingGrid:
     """Build the union mapping lattice of ``layer`` over a
     :class:`repro.core.designs.MacroBatch`, with per-design legality.
 
@@ -433,8 +508,12 @@ def candidate_grid(layer: Layer, designs,
     ``enumerate_mappings(layer, designs.macro_at(d))`` element for
     element (property-tested in ``tests/core/test_grid_parity.py``),
     including the ``max_candidates`` truncation, applied per design in
-    enumeration order via a cumulative count.
+    enumeration order via a cumulative count.  ``schedules`` crosses the
+    dataflow axis into the candidate axis (mapping outer, schedule
+    inner) after truncation; legality is schedule-independent, so the
+    mask rows simply repeat along the new inner axis.
     """
+    scheds = _normalize_schedules(schedules)
     k = layer.dim("K")
     d1s = sorted(set(int(v) for v in designs.d1))
     rows_vals = sorted(set(int(v) for v in designs.rows))
@@ -519,6 +598,9 @@ def candidate_grid(layer: Layer, designs,
                  _pow2_member(mac_un, dup_dim_size, nm_d)))
     legal &= mac_ok
     legal &= np.cumsum(legal, axis=1) <= max_candidates
+    cand = _with_schedule_axis(cand, scheds)
+    if len(cand) != legal.shape[1]:
+        legal = np.repeat(legal, len(scheds), axis=1)
     return MappingGrid(cand=cand, legal=legal)
 
 
@@ -575,13 +657,18 @@ def evaluate_grid(layer: Layer, designs, grid: MappingGrid,
     weight_tiles = n_k_tiles * n_acc_tiles
     inputs_per_tile = b_dim * batch.n_spatial_temporal
 
+    # schedule-dependent factors (exact integer np.where selections
+    # between the two Schedule closed forms — see schedule.py)
+    is_os = batch.schedule == OS_CODE
+    weight_loads = np.where(is_os, inputs_per_tile, np.int64(1))
+
     rows_used = np.minimum(batch.row_un, acc_depth)
     cols_used = np.minimum(batch.k_cols, k_dim)
     active_macros = batch.k_macros * batch.dup_macros
     e_tile = tile_energy_grid(designs, n_inputs=inputs_per_tile,
                               rows_used=rows_used, cols_used=cols_used,
-                              weight_loads=np.ones_like(weight_tiles),
-                              alpha=alpha)
+                              weight_loads=weight_loads,
+                              alpha=alpha, schedule_os=is_os)
     macro_energy = e_tile.scaled(active_macros).scaled(weight_tiles)
 
     occupied = (rows_used * cols_used
@@ -594,16 +681,21 @@ def evaluate_grid(layer: Layer, designs, grid: MappingGrid,
 
     cc_per_input = np.where(designs.analog, designs.cc_bs * designs.adc_share,
                             designs.cc_bs * designs.m_mux)
-    write_cycles = rows_used * weight_tiles
+    write_cycles = rows_used * weight_tiles * weight_loads
     cycles = (weight_tiles * inputs_per_tile * cc_per_input[:, None]
               + write_cycles)
 
-    weight_bits = layer.weight_elems * layer.w_prec * batch.dup_macros
-    input_bits = layer.input_elems * layer.i_prec * n_k_tiles
+    # OS restreams the weight tensor once per reload pass — the same
+    # closed form as weight_loads (schedule.weight_refetch == .weight_loads)
+    weight_bits = (layer.weight_elems * layer.w_prec * batch.dup_macros
+                   * weight_loads)
+    input_bits = (layer.input_elems * layer.i_prec
+                  * np.where(is_os, np.int64(1), n_k_tiles))
     output_bits = np.full(len(batch), layer.output_elems * layer.psum_prec,
                           dtype=np.int64)
     psum_bits = (layer.output_elems * layer.psum_prec
-                 * 2 * np.maximum(0, n_acc_tiles - 1))
+                 * np.where(is_os, np.int64(0),
+                            2 * np.maximum(0, n_acc_tiles - 1)))
     return MappingCostGrid(
         grid=grid, macro_energy=macro_energy, weight_tiles=weight_tiles,
         inputs_per_tile=inputs_per_tile, cycles=cycles,
@@ -638,7 +730,8 @@ class MappingCostBatch:
            alpha: float | None = None) -> MappingCost:
         """Rebuild candidate ``i`` through the scalar oracle — the DSE
         returns oracle-exact objects, the arrays only steer the argmin."""
-        return evaluate(layer, macro, self.batch.mapping_at(i), alpha=alpha)
+        return evaluate(layer, macro, self.batch.mapping_at(i), alpha=alpha,
+                        schedule=self.batch.schedule_at(i))
 
 
 def evaluate_batch(layer: Layer, macro: IMCMacro, batch: MappingBatch,
@@ -665,14 +758,18 @@ def evaluate_batch(layer: Layer, macro: IMCMacro, batch: MappingBatch,
     weight_tiles = n_k_tiles * n_acc_tiles
     inputs_per_tile = b_dim * batch.n_spatial_temporal
 
+    # schedule-dependent factors (exact integer np.where selections)
+    is_os = batch.schedule == OS_CODE
+    weight_loads = np.where(is_os, inputs_per_tile, np.int64(1))
+
     # --- per-tile energy, scaled as the scalar path does ----------------------
     rows_used = np.minimum(batch.row_un, acc_depth)
     cols_used = np.minimum(batch.k_cols, k_dim)
     active_macros = batch.k_macros * batch.dup_macros
     e_tile = tile_energy_batch(macro, n_inputs=inputs_per_tile,
                                rows_used=rows_used, cols_used=cols_used,
-                               weight_loads=np.ones_like(weight_tiles),
-                               alpha=alpha)
+                               weight_loads=weight_loads,
+                               alpha=alpha, schedule_os=is_os)
     macro_energy = e_tile.scaled(active_macros).scaled(weight_tiles)
 
     # --- utilization -----------------------------------------------------------
@@ -685,16 +782,21 @@ def evaluate_batch(layer: Layer, macro: IMCMacro, batch: MappingBatch,
     # --- latency (ints throughout, exact) --------------------------------------
     cc_per_input = (macro.cc_bs * macro.adc_share if macro.analog
                     else macro.cc_bs * macro.m_mux)
-    write_cycles = rows_used * weight_tiles
+    write_cycles = rows_used * weight_tiles * weight_loads
     cycles = weight_tiles * inputs_per_tile * cc_per_input + write_cycles
 
     # --- outer-memory traffic ----------------------------------------------------
-    weight_bits = layer.weight_elems * layer.w_prec * batch.dup_macros
-    input_bits = layer.input_elems * layer.i_prec * n_k_tiles
+    # OS restreams the weight tensor once per reload pass — the same
+    # closed form as weight_loads (schedule.weight_refetch == .weight_loads)
+    weight_bits = (layer.weight_elems * layer.w_prec * batch.dup_macros
+                   * weight_loads)
+    input_bits = (layer.input_elems * layer.i_prec
+                  * np.where(is_os, np.int64(1), n_k_tiles))
     output_bits = np.full(len(batch), layer.output_elems * layer.psum_prec,
                           dtype=np.int64)
     psum_bits = (layer.output_elems * layer.psum_prec
-                 * 2 * np.maximum(0, n_acc_tiles - 1))
+                 * np.where(is_os, np.int64(0),
+                            2 * np.maximum(0, n_acc_tiles - 1)))
     return MappingCostBatch(
         batch=batch, macro_energy=macro_energy, weight_tiles=weight_tiles,
         inputs_per_tile=inputs_per_tile, cycles=cycles,

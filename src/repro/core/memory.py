@@ -10,6 +10,14 @@ A two-level model above the macro:
 * **off-chip DRAM**: only crossed when a tensor exceeds the buffer —
   for the tinyMLPerf case studies everything fits on chip, matching
   the paper's setup, but the level exists for the LM case studies.
+
+The traffic *volumes* this module prices are schedule-parameterized
+upstream (``mapping.evaluate`` computes ``weight_bits`` /
+``input_bits`` / ``psum_bits`` from the active
+:class:`repro.core.schedule.Schedule`: weight-stationary refetches
+inputs per K tile and spills psums, output-stationary restreams
+weights and never spills) — the per-bit *pricing* here is
+schedule-agnostic, so every engine shares these functions unchanged.
 """
 
 from __future__ import annotations

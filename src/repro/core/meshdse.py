@@ -2,9 +2,11 @@
 (DESIGN.md §2 analogy table, made executable).
 
 Exactly like ``dse.best_mapping`` enumerates spatial unrollings of a
-layer over an IMC array and prices each with the analytical energy
-model, ``choose_plan`` enumerates parallelism plans (the pod's "spatial
-mappings") and prices each with the three-term roofline model:
+layer over an IMC array — crossed with temporal dataflow schedules
+since the dataflow axis landed (``repro.core.schedule``) — and prices
+each with the analytical energy model, ``choose_plan`` enumerates
+parallelism plans (the pod's "spatial mappings") and prices each with
+the three-term roofline model:
 
     t_step ~= max(t_compute, t_memory, t_collective)     s.t. state fits
 
@@ -167,7 +169,10 @@ def choose_plan_grid(cfg, shape,
     power-of-two data/model split) candidate, collect ``step_s`` and
     feasibility into flat arrays, and pick the winner with one masked
     argmin — exactly the struct-of-arrays selection
-    ``dse.best_mapping_batched`` performs over spatial mappings.
+    ``dse.best_mapping_batched`` performs over its
+    (mapping x dataflow) lattice; a ``SweepResult`` (including one
+    swept with the dataflow axis enabled) plugs in upstream unchanged,
+    since this chooser only consumes per-design totals.
 
     Infeasible candidates (state does not fit HBM) are masked to +inf;
     if nothing fits, the plain argmin picks the least-bad, matching

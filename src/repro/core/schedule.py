@@ -1,0 +1,142 @@
+"""Temporal dataflow schedules — the third DSE lattice axis.
+
+The paper positions AIMC and DIMC in a three-way trade of accuracy,
+efficiency and *dataflow flexibility*; the follow-up dense sweeps
+(arXiv 2405.14978) show the temporal schedule shifts where the
+AIMC/DIMC crossover lands.  Until this module the cost model hardcoded
+one schedule — weight-stationary — so that axis was invisible to the
+DSE.  A :class:`Schedule` now parameterizes every schedule-dependent
+cost term, and the engines (``mapping.candidate_batch`` /
+``candidate_grid`` / ``evaluate_batch`` / ``evaluate_grid``,
+``dse.best_mapping`` / ``dse.sweep``) price the full
+(design x mapping x dataflow) lattice in one pass.
+
+Two schedules are modeled:
+
+* **weight-stationary** (``ws``, the IMC-natural default): a weight
+  tile is written once and all ``B*OX*OY`` input vectors stream
+  through it.  Partial sums spill to the outer memory when the
+  accumulation depth exceeds the rows (2 transfers per extra
+  accumulation tile), and inputs are refetched once per temporal K
+  tile.
+
+* **output-stationary** (``os``): partial sums stay resident at the
+  macro-side accumulators while the weight tiles *stream through the
+  array* — one (re)write of every weight tile per temporal input
+  iteration.  Psum spill traffic disappears and inputs are fetched
+  exactly once, at the price of weight refetch/rewrite energy scaling
+  with the input-iteration count.  For AIMC each weight reload also
+  forces a pass-boundary conversion phase (the resident partials are
+  drained through the ADCs and the inputs re-driven through the row
+  DACs — paper Sec. III cost factors), which DIMC does not pay: its
+  partials sit in digital accumulator registers and a reload is a
+  plain SRAM write.  This is the paper's flexibility argument made
+  quantitative: streaming weights is cheap for DIMC, conversion-bound
+  for AIMC.
+
+The schedule-dependent factors are pure integer functions
+(:meth:`Schedule.weight_loads` etc.), so the batched engines reproduce
+the scalar oracle bitwise by selecting between the two closed forms
+with ``np.where`` on the :attr:`Schedule.code` column.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+#: lattice-axis codes (stored in ``MappingBatch.schedule``); the order
+#: WS < OS is also the scalar oracle's inner-loop enumeration order.
+WS_CODE = 0
+OS_CODE = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One temporal dataflow: how tiles, operands and partials move."""
+
+    name: str                 # short tag used in results/CLIs ("ws"/"os")
+    code: int                 # lattice axis code (WS_CODE / OS_CODE)
+    description: str = ""
+
+    @property
+    def output_stationary(self) -> bool:
+        return self.code == OS_CODE
+
+    # ---------------------------------------------------------------- factors
+    # All factors are exact integer forms; the batched/grid engines mirror
+    # them with np.where selections (see mapping.evaluate_batch/_grid).
+    def weight_loads(self, inputs_per_tile: int) -> int:
+        """Times each weight tile is (re)written into the array."""
+        return inputs_per_tile if self.output_stationary else 1
+
+    def weight_refetch(self, inputs_per_tile: int) -> int:
+        """Outer-memory refetches of the weight tensor (OS streams the
+        tiles back in on every temporal input iteration)."""
+        return inputs_per_tile if self.output_stationary else 1
+
+    def input_refetch(self, n_k_tiles: int) -> int:
+        """Outer-memory fetches of the input tensor.  WS re-reads the
+        inputs once per temporal K tile; OS holds the input of the
+        current iteration and broadcasts it to every streamed tile."""
+        return 1 if self.output_stationary else n_k_tiles
+
+    def psum_transfers(self, n_acc_tiles: int) -> int:
+        """Outer-memory spill+refill round trips per output element.  WS
+        spills whenever the accumulation is split across tiles; OS keeps
+        partials resident in the accumulators — never spilled."""
+        return 0 if self.output_stationary else 2 * max(0, n_acc_tiles - 1)
+
+
+WEIGHT_STATIONARY = Schedule(
+    "ws", WS_CODE,
+    "weight tile written once, inputs stream; psums spill on deep "
+    "accumulation")
+OUTPUT_STATIONARY = Schedule(
+    "os", OS_CODE,
+    "partials stay resident, weight tiles stream; AIMC pays "
+    "pass-boundary DAC/ADC conversion phases per reload")
+
+#: all known schedules, in lattice-axis (enumeration) order.
+SCHEDULES: tuple[Schedule, ...] = (WEIGHT_STATIONARY, OUTPUT_STATIONARY)
+
+#: the pre-dataflow-axis engine behavior: weight-stationary only.
+DEFAULT_SCHEDULES: tuple[Schedule, ...] = (WEIGHT_STATIONARY,)
+
+_BY_NAME = {s.name: s for s in SCHEDULES}
+_BY_CODE = {s.code: s for s in SCHEDULES}
+
+
+def by_name(name: str) -> Schedule:
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown schedule {name!r}; known: {sorted(_BY_NAME)}") from None
+
+
+def by_code(code: int) -> Schedule:
+    return _BY_CODE[int(code)]
+
+
+def normalize(schedules) -> tuple[Schedule, ...]:
+    """Coerce ``None`` / names / :class:`Schedule` objects to a tuple.
+
+    ``None`` means the historical single-dataflow behavior
+    (:data:`DEFAULT_SCHEDULES`); order is preserved — it defines the
+    scalar oracle's inner enumeration order and therefore argmin
+    tie-breaking in every engine.
+    """
+    if schedules is None:
+        return DEFAULT_SCHEDULES
+    if isinstance(schedules, (str, Schedule)):
+        schedules = (schedules,)
+    out = tuple(by_name(s) if isinstance(s, str) else s for s in schedules)
+    if not out:
+        raise ValueError("schedules must not be empty")
+    for s in out:
+        if not isinstance(s, Schedule):
+            raise TypeError(f"not a Schedule: {s!r}")
+    if len({s.code for s in out}) != len(out):
+        raise ValueError(f"duplicate schedules in {tuple(s.name for s in out)}")
+    return out

@@ -158,6 +158,31 @@ def test_best_mapping_engines_agree(analog, rows, d1, bw, bi, m, adc, dac,
     assert a == bres                     # bitwise: same mapping, same floats
 
 
+@given(**{**MACRO_STRAT, **LAYER_STRAT,
+          "dataflows": st.sampled_from([("ws",), ("os",), ("ws", "os"),
+                                        ("os", "ws")]),
+          "objective": st.sampled_from(["energy", "latency", "edp"])})
+@settings(max_examples=20, deadline=None)
+def test_best_mapping_engines_agree_with_dataflows(analog, rows, d1, bw, bi,
+                                                   m, adc, dac, n_macros,
+                                                   tech_nm, vdd, b, k, c, ox,
+                                                   oy, fx, fy, dataflows,
+                                                   objective):
+    """The (mapping x dataflow) flattened lattice shares the scalar
+    oracle's enumeration order (mapping outer, schedule inner, in the
+    requested schedule order), so the batched argmin picks the same
+    winner — including ties — for any dataflow subset/order."""
+    macro = _make_macro(analog, rows, d1, bw, bi, m, adc, dac, n_macros,
+                        tech_nm, vdd)
+    layer = _make_layer(b, k, c, ox, oy, fx, fy)
+    mem = MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+    a = dse.best_mapping_scalar(layer, macro, mem, objective=objective,
+                                schedules=dataflows)
+    bres = dse.best_mapping_batched(layer, macro, mem, objective=objective,
+                                    schedules=dataflows)
+    assert a == bres
+
+
 def test_fig7_layers_bit_identical():
     """Acceptance pin: every layer of the Fig. 7 case-study networks on
     every Table II design — batched winner == scalar winner, bitwise."""

@@ -1,0 +1,175 @@
+"""Temporal dataflow (schedule) axis: semantics + golden pins.
+
+The output-stationary schedule trades psum-spill and input-refetch
+traffic for weight restreaming (plus AIMC pass-boundary conversion
+phases), so its win region is exactly the paper's flexibility argument:
+deep-accumulation, low-reuse layers (the FC autoencoder) on digital
+macros.  The golden test pins that the new axis actually changes the
+winning mapping on the fig7/Table II workload set — guarding against
+the lattice silently collapsing back to weight-stationary everywhere —
+and that AIMC vs DIMC choose differently on the same layer.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import designs, dse, mapping, schedule, workloads
+from repro.core.memory import MemoryModel
+
+T2 = {m.name: m for m in designs.table2_designs()}
+DIMC_BIG = T2["T2-C-dimc-256x256x4"]      # 256x256, m=16
+AIMC_BIG = T2["T2-A-aimc-1152x256"]       # 1152x256 analog
+
+
+def _mem(macro) -> MemoryModel:
+    return MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+
+
+# --------------------------------------------------------------------------- #
+# schedule registry                                                            #
+# --------------------------------------------------------------------------- #
+def test_normalize_forms():
+    ws, os_ = schedule.WEIGHT_STATIONARY, schedule.OUTPUT_STATIONARY
+    assert schedule.normalize(None) == (ws,)
+    assert schedule.normalize("os") == (os_,)
+    assert schedule.normalize(("ws", "os")) == (ws, os_)
+    assert schedule.normalize((os_, "ws")) == (os_, ws)   # order preserved
+    assert schedule.by_code(ws.code) is ws
+    with pytest.raises(KeyError):
+        schedule.normalize("input-stationary")
+    with pytest.raises(ValueError):
+        schedule.normalize(())
+    with pytest.raises(ValueError):
+        schedule.normalize(("ws", "ws"))
+
+
+# --------------------------------------------------------------------------- #
+# OS cost semantics on one fixed (layer, mapping)                              #
+# --------------------------------------------------------------------------- #
+def test_os_keeps_psums_resident_and_fetches_inputs_once():
+    # K=128 on 64 columns -> 2 K tiles; C=512 on 256 rows -> 2 acc tiles
+    layer = workloads.dense("d", 1, 512, 128)
+    sm = mapping.SpatialMapping(cols={"K": 64}, rows={"C": 256}, macros={})
+    ws = mapping.evaluate(layer, DIMC_BIG, sm)
+    os_ = mapping.evaluate(layer, DIMC_BIG, sm,
+                           schedule=schedule.OUTPUT_STATIONARY)
+    assert ws.psum_bits > 0 and os_.psum_bits == 0
+    assert os_.input_bits == layer.input_elems * layer.i_prec
+    assert ws.input_bits == 2 * os_.input_bits          # n_k_tiles = 2
+    # B=1 dense: one temporal input iteration -> weight side identical
+    assert os_.weight_bits == ws.weight_bits
+    assert os_.cycles == ws.cycles
+    assert os_.schedule is schedule.OUTPUT_STATIONARY
+    assert ws.schedule is schedule.WEIGHT_STATIONARY
+
+
+def test_os_weight_streaming_scales_with_input_iterations():
+    layer = workloads.dense("d", 4, 512, 128)           # B=4 iterations
+    sm = mapping.SpatialMapping(cols={"K": 64}, rows={"C": 256}, macros={})
+    ws = mapping.evaluate(layer, DIMC_BIG, sm)
+    os_ = mapping.evaluate(layer, DIMC_BIG, sm,
+                           schedule=schedule.OUTPUT_STATIONARY)
+    assert os_.weight_bits == 4 * ws.weight_bits        # restream per pass
+    assert (os_.macro_energy.e_weight_write
+            == 4 * ws.macro_energy.e_weight_write)
+    assert os_.cycles > ws.cycles                       # rewrite latency
+
+
+def test_os_aimc_pays_conversion_phases_dimc_does_not():
+    layer = workloads.dense("d", 1, 512, 64)
+    sm = mapping.SpatialMapping(cols={"K": 64}, rows={"C": 256}, macros={})
+    a_ws = mapping.evaluate(layer, AIMC_BIG, sm)
+    a_os = mapping.evaluate(layer, AIMC_BIG, sm,
+                            schedule=schedule.OUTPUT_STATIONARY)
+    # pass-boundary partial drain (ADC) + input re-drive (DAC) per reload
+    assert a_os.macro_energy.e_adc > a_ws.macro_energy.e_adc
+    assert a_os.macro_energy.e_dac > a_ws.macro_energy.e_dac
+    d_ws = mapping.evaluate(layer, DIMC_BIG, sm)
+    d_os = mapping.evaluate(layer, DIMC_BIG, sm,
+                            schedule=schedule.OUTPUT_STATIONARY)
+    assert d_ws.macro_energy.e_adc == d_os.macro_energy.e_adc == 0.0
+    assert d_ws.macro_energy.e_dac == d_os.macro_energy.e_dac == 0.0
+
+
+def test_enabling_os_never_hurts_the_argmin():
+    """The (mapping x dataflow) argmin is over a superset of the WS-only
+    lattice, so the best objective can only improve."""
+    for macro in designs.table2_designs():
+        mem = _mem(macro)
+        for layer in workloads.deep_autoencoder():
+            both = dse.best_mapping_scalar(layer, macro, mem,
+                                           schedules=("ws", "os"))
+            ws_only = dse.best_mapping_scalar(layer, macro, mem)
+            assert both.total_energy_fj <= ws_only.total_energy_fj
+
+
+# --------------------------------------------------------------------------- #
+# golden pin: the axis changes real winners on the fig7/Table II set           #
+# --------------------------------------------------------------------------- #
+def test_golden_dataflow_changes_winners_on_table2_workloads():
+    dse.cache_clear()
+    chosen: dict[tuple[str, str, str], str] = {}
+    for macro in designs.table2_designs():
+        mem = _mem(macro)
+        for net, fn in workloads.TINYML_NETWORKS.items():
+            for layer in fn():
+                if not layer.imc_eligible:
+                    continue
+                r = dse.best_mapping(layer, macro, mem,
+                                     schedules=("ws", "os"))
+                chosen[(macro.name, net, layer.name)] = r.cost.schedule.name
+    os_picks = {k for k, v in chosen.items() if v == "os"}
+    ws_picks = {k for k, v in chosen.items() if v == "ws"}
+    # the axis is alive in both directions: neither schedule sweeps all
+    assert os_picks, "dataflow axis collapsed to weight-stationary"
+    assert ws_picks, "dataflow axis collapsed to output-stationary"
+    # pinned winners (frozen from the validated model): the big DIMC
+    # macro streams weights through the FC autoencoder stack...
+    key = ("T2-C-dimc-256x256x4", "deep_autoencoder", "fc1")
+    assert chosen[key] == "os", chosen[key]
+    # ...while the big AIMC macro stays weight-stationary on the same
+    # layer (conversion-phase penalty) — the AIMC/DIMC asymmetry.
+    key_a = ("T2-A-aimc-1152x256", "deep_autoencoder", "fc1")
+    assert chosen[key_a] == "ws", chosen[key_a]
+    # convolutions (high input reuse) always stay weight-stationary
+    conv_picks = {v for (m, net, l), v in chosen.items() if net == "resnet8"
+                  and not l.startswith("head")}
+    assert conv_picks == {"ws"}
+
+
+def test_golden_os_strictly_improves_dimc_autoencoder():
+    """Quantified flexibility win: the OS-enabled DSE prices the FC
+    autoencoder strictly cheaper on the big DIMC macro."""
+    mem = _mem(DIMC_BIG)
+    layers = workloads.deep_autoencoder()
+    both = dse.map_network("dae", layers, DIMC_BIG, mem=mem,
+                           schedules=("ws", "os"))
+    ws_only = dse.map_network("dae", layers, DIMC_BIG, mem=mem)
+    assert both.total_energy_fj < ws_only.total_energy_fj
+    assert any(r.cost.schedule.name == "os" for r in both.layers)
+
+
+# --------------------------------------------------------------------------- #
+# sweep surfaces the chosen dataflow                                           #
+# --------------------------------------------------------------------------- #
+def test_sweep_surfaces_per_layer_dataflow():
+    batch = designs.MacroBatch.from_macros(designs.table2_designs())
+    layers = workloads.deep_autoencoder()
+    res = dse.sweep("dae", layers, batch, schedules=("ws", "os"))
+    assert res.schedules == ("ws", "os")
+    for d in range(len(batch)):
+        flows = res.dataflows(d)
+        assert len(flows) == len(res.layer_names)
+        assert set(flows) <= {"ws", "os"}
+        # dataflows() mirrors the rebuilt scalar-oracle results
+        nr = res.network_result(d)
+        assert flows == tuple(r.cost.schedule.name for r in nr.layers)
+        counts = res.dataflow_counts(d)
+        assert sum(counts.values()) == len(flows)
+    # the big DIMC design maps part of the stack output-stationary
+    d_dimc = list(batch.names).index("T2-C-dimc-256x256x4")
+    assert res.dataflow_counts(d_dimc).get("os", 0) > 0
+    # WS-only sweeps report the single-axis default
+    res_ws = dse.sweep("dae", layers, batch)
+    assert res_ws.schedules == ("ws",)
+    assert set(res_ws.dataflows(0)) == {"ws"}

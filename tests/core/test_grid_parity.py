@@ -223,6 +223,86 @@ def test_sweep_matches_per_design_engines(rows, cols, bw, bi, adc_bits,
         assert nr.layers[0] == a
 
 
+# --------------------------------------------------------------------------- #
+# dataflow axis: grid <-> batch <-> scalar across (layer, macro, dataflow)      #
+# --------------------------------------------------------------------------- #
+@given(**{**GRID_STRAT, **LAYER_STRAT,
+          "dataflows": st.sampled_from([("ws",), ("os",), ("ws", "os")]),
+          "objective": st.sampled_from(["energy", "latency", "edp"])})
+@settings(max_examples=10, deadline=None)
+def test_sweep_dataflow_axis_matches_scalar_oracle(rows, cols, bw, bi,
+                                                   adc_bits, dac_bits, m_mux,
+                                                   n_macros, tech_nm, vdd,
+                                                   booth, cols_per_adc,
+                                                   adc_share, b, k, c, ox,
+                                                   oy, fx, fy, dataflows,
+                                                   objective):
+    """Random (layer, macro-grid, dataflow-set) triples: the fused
+    (design x mapping x dataflow) sweep reproduces the scalar oracle's
+    per-design winner — totals, full result, and the chosen (mapping,
+    dataflow) pair — bitwise, including argmin tie-breaks (the scalar
+    loop is first-wins over mappings outer / schedules inner)."""
+    grid = _make_grid(rows, cols, bw, bi, adc_bits, dac_bits, m_mux,
+                      n_macros, tech_nm, vdd, booth, cols_per_adc,
+                      adc_share)
+    layer = _make_layer(b, k, c, ox, oy, fx, fy)
+    res = dse.sweep("prop", [layer], grid, objective=objective,
+                    schedules=dataflows)
+    assert res.schedules == dataflows
+    rng = np.random.default_rng(k * 19 + c + len(dataflows))
+    for d in map(int, rng.integers(0, len(grid), min(4, len(grid)))):
+        macro = grid.macro_at(d)
+        mem = MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+        a = dse.best_mapping_scalar(layer, macro, mem, objective=objective,
+                                    schedules=dataflows)
+        bt = dse.best_mapping_batched(layer, macro, mem,
+                                      objective=objective,
+                                      schedules=dataflows)
+        assert a == bt
+        assert float(res.energy_fj[d]) == a.total_energy_fj
+        assert int(res.cycles[d]) == a.cost.cycles
+        nr = res.network_result(d)
+        assert nr.layers[0] == a
+        assert res.dataflows(d) == (a.cost.schedule.name,)
+
+
+@given(**{**GRID_STRAT, **LAYER_STRAT})
+@settings(max_examples=8, deadline=None)
+def test_evaluate_grid_dataflow_bitwise_vs_batch(rows, cols, bw, bi,
+                                                 adc_bits, dac_bits, m_mux,
+                                                 n_macros, tech_nm, vdd,
+                                                 booth, cols_per_adc,
+                                                 adc_share, b, k, c, ox, oy,
+                                                 fx, fy):
+    """With both schedules enabled, every legal (design, candidate)
+    entry of the grid engine stays bitwise-equal to the per-design
+    batch engine, and the candidate axis interleaves schedules
+    mapping-outer / schedule-inner."""
+    grid = _make_grid(rows, cols, bw, bi, adc_bits, dac_bits, m_mux,
+                      n_macros, tech_nm, vdd, booth, cols_per_adc,
+                      adc_share)
+    layer = _make_layer(b, k, c, ox, oy, fx, fy)
+    scheds = ("ws", "os")
+    mg = mapping.candidate_grid(layer, grid, schedules=scheds)
+    assert (mg.cand.schedule[0::2] == 0).all()         # ws lanes
+    assert (mg.cand.schedule[1::2] == 1).all()         # os lanes
+    costs = mapping.evaluate_grid(layer, grid, mg)
+    rng = np.random.default_rng(k * 23 + oy)
+    for d in map(int, rng.integers(0, len(grid), min(3, len(grid)))):
+        macro = grid.macro_at(d)
+        batch = mapping.candidate_batch(layer, macro, schedules=scheds)
+        ref = mapping.evaluate_batch(layer, macro, batch)
+        sel = np.flatnonzero(mg.legal[d])
+        assert len(sel) == len(batch)
+        assert (mg.cand.schedule[sel] == batch.schedule).all()
+        for f in _ENERGY_FIELDS:
+            assert (getattr(costs.macro_energy, f)[d, sel]
+                    == getattr(ref.macro_energy, f)).all()
+        assert (costs.cycles[d, sel] == ref.cycles).all()
+        for f in ("weight_bits", "input_bits", "output_bits", "psum_bits"):
+            assert (getattr(costs, f)[sel] == getattr(ref, f)).all()
+
+
 def test_sweep_acceptance_1000_point_grid():
     """Acceptance pin: a >= 1000-point macro grid, >= 50 sampled points
     bitwise-matching the scalar oracle (totals + full network result)."""
