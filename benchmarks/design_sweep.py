@@ -12,18 +12,28 @@ searches the temporal schedule axis (weight- vs output-stationary) per
 layer and reports how often each dataflow wins — the flexibility axis
 of the paper's three-way AIMC/DIMC trade.
 
-Run:  PYTHONPATH=src python -m benchmarks.design_sweep [--smoke] [--dataflows]
+With ``--networks`` the whole workload suite is priced in ONE
+workload-fused pass (``dse.sweep_networks``: every distinct layer
+shape of every network shares one padded lane lattice and one jit
+compile) and a ``BENCH_sweep.json`` timing artifact is written — cold
+and warm wall time, kernel dispatch/compile counters and lattice
+padding stats — seeding the perf trajectory CI tracks.
+
+Run:  PYTHONPATH=src python -m benchmarks.design_sweep \
+          [--smoke] [--dataflows] [--networks] [--out BENCH_sweep.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
 import numpy as np
 
-from repro.core import designs, dse, workloads
+from repro.core import designs, dse, energy, workloads
 
-from .common import timed
+from .common import emit, timed
 
 
 def make_grid(smoke: bool = False) -> designs.MacroBatch:
@@ -93,6 +103,86 @@ def run(smoke: bool = False, dataflows: bool = False) -> None:
         timed(f"design_sweep_{net_name}", sweep_net)
 
 
+def run_networks(smoke: bool = False, dataflows: bool = False,
+                 out: str = "BENCH_sweep.json") -> dict:
+    """Workload-fused multi-network sweep + ``BENCH_sweep.json`` artifact.
+
+    All networks are priced through ``dse.sweep_networks`` — one padded
+    lane lattice, typically one jit compile — measured cold (compiles
+    and lattice builds included) and warm (best of 3).  The artifact
+    records the wall times alongside the fused-kernel dispatch counters
+    (``energy.grid_kernel_info``: ``distinct_shapes`` is the XLA
+    compile-count proxy) and the lattice slot/padding stats
+    (``dse.cache_info``), so CI uploads a comparable timing point per
+    commit.
+    """
+    grid = make_grid(smoke)
+    schedules = ("ws", "os") if dataflows else None
+    nets = [("deep_autoencoder", workloads.deep_autoencoder()),
+            ("ds_cnn", workloads.ds_cnn())]
+    if not smoke:
+        nets += [("resnet8", workloads.resnet8()),
+                 ("mobilenet_v1_025", workloads.mobilenet_v1_025())]
+
+    dse.cache_clear()
+    energy.grid_kernel_reset()
+    t0 = time.perf_counter()
+    results = dse.sweep_networks(nets, grid, schedules=schedules)
+    t_cold = time.perf_counter() - t0
+    kernel_cold = energy.grid_kernel_info()
+    cache = dse.cache_info()
+
+    t_warm = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        dse.sweep_networks(nets, grid, schedules=schedules)
+        t_warm = min(t_warm, time.perf_counter() - t0)
+
+    per_network = {}
+    for res in results:
+        best = res.best()
+        per_network[res.network] = {
+            "layers": len(res.layer_names),
+            "distinct_shapes": res.n_shapes,
+            "best_design": grid.names[best],
+            "best_energy_fj": float(res.energy_fj[best]),
+            "pareto_designs": int(res.pareto_mask().sum()),
+        }
+        print(f"# {res.network}: best={grid.names[best]} "
+              f"energy={res.energy_fj[best]:.3e} fJ "
+              f"pareto={per_network[res.network]['pareto_designs']}")
+
+    artifact = {
+        "benchmark": "design_sweep_networks",
+        "smoke": smoke,
+        "designs": len(grid),
+        "networks": [n for n, _ in nets],
+        "schedules": list(results[0].schedules),
+        "cold_s": t_cold,
+        "warm_s": t_warm,
+        "kernel_calls_cold": kernel_cold["calls"],
+        "kernel_distinct_shapes_cold": kernel_cold["distinct_shapes"],
+        "lattice_slots": cache["lattice_slots"],
+        "lattice_layers": cache["lattice_layers"],
+        "padding_waste": cache["padding_waste"],
+        "per_network": per_network,
+    }
+    with open(out, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out}: cold={t_cold:.3f}s warm={t_warm:.3f}s "
+          f"compiles~{kernel_cold['distinct_shapes']} "
+          f"(dispatches={kernel_cold['calls']}) "
+          f"slots={cache['lattice_slots']} "
+          f"waste={cache['padding_waste']:.1%}")
+    emit("design_sweep_networks", t_cold * 1e6,
+         f"networks={len(nets)} designs={len(grid)} "
+         f"slots={cache['lattice_slots']} "
+         f"compiles={kernel_cold['distinct_shapes']} "
+         f"warm_us={t_warm * 1e6:.1f}")
+    return artifact
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -101,5 +191,16 @@ if __name__ == "__main__":
     ap.add_argument("--dataflows", action="store_true",
                     help="search the temporal dataflow axis (ws+os) per "
                          "layer instead of weight-stationary only")
+    ap.add_argument("--networks", action="store_true",
+                    help="price the whole workload suite in one "
+                         "workload-fused pass and write the timing "
+                         "artifact (see --out)")
+    ap.add_argument("--out", default="BENCH_sweep.json",
+                    help="artifact path for --networks "
+                         "(default: BENCH_sweep.json)")
     args = ap.parse_args()
-    run(smoke=args.smoke, dataflows=args.dataflows)
+    if args.networks:
+        run_networks(smoke=args.smoke, dataflows=args.dataflows,
+                     out=args.out)
+    else:
+        run(smoke=args.smoke, dataflows=args.dataflows)

@@ -29,6 +29,7 @@ BENCHMARKS: dict[str, object] = {
     "design_sweep": design_sweep.run,
     "design_sweep_dataflows": lambda: design_sweep.run(smoke=True,
                                                        dataflows=True),
+    "design_sweep_networks": lambda: design_sweep.run_networks(smoke=True),
     "accuracy_sweep": lambda: accuracy_sweep.run(smoke=True),
     "roofline_table": roofline_table.run,
     "kernel_bench": kernel_bench.run,
@@ -36,7 +37,9 @@ BENCHMARKS: dict[str, object] = {
 
 #: the default full run skips variants that duplicate a base benchmark
 #: on a smaller grid (they exist for `--list`/CI selection).
-DEFAULT_RUN = tuple(n for n in BENCHMARKS if n != "design_sweep_dataflows")
+DEFAULT_RUN = tuple(n for n in BENCHMARKS
+                    if n not in ("design_sweep_dataflows",
+                                 "design_sweep_networks"))
 
 
 def main(argv=None) -> None:

@@ -17,10 +17,14 @@ The hot path is batched: ``energy.tile_energy_batch`` /
 ``mapping.evaluate_batch`` price whole candidate lattices as
 struct-of-arrays and ``dse.best_mapping`` argmins over them, with the
 scalar functions kept as bitwise reference oracles (see the module
-docstrings for the contract).  The lattice has three axes — macro
-design (``designs.MacroBatch``), spatial mapping, and temporal
-dataflow (``schedule.Schedule``: weight- vs output-stationary) — and
-``dse.sweep`` argmins over all of them in one fused jit pass.
+docstrings for the contract).  The lattice has four axes — macro
+design (``designs.MacroBatch``), spatial mapping, temporal dataflow
+(``schedule.Schedule``: weight- vs output-stationary), and the
+workload layer axis (``mapping.network_grid``: every distinct layer
+shape of a network, or of several networks, concatenated into one
+padded lane lattice) — and ``dse.sweep`` / ``dse.sweep_networks``
+argmin over all of them in one fused jit pass, one XLA compile per
+lane bucket instead of one per layer shape.
 """
 
 from .hardware import IMCMacro, IMCType                              # noqa: F401

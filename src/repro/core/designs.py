@@ -22,6 +22,7 @@ Reference keys follow the paper's bibliography: e.g. ``jia21`` = [24],
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Iterable, Sequence
 
@@ -251,6 +252,31 @@ class MacroBatch:
 
     def macro_at(self, i: int) -> IMCMacro:
         return self.macros[i]
+
+    def signature(self) -> tuple:
+        """Cheap stable identity of the batch's design content.
+
+        Hashable digest over the design names and every knob column;
+        two batches with equal signatures price any layer identically,
+        which is what the DSE's lattice/jit caches key on (the digest
+        avoids holding the arrays themselves in cache keys).  Memoized
+        per instance — the knob columns are treated as immutable.
+        """
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            h = hashlib.sha1()
+            # every array column enters the digest (future knob columns
+            # included automatically); only the scalar-macro tuple is
+            # skipped — its cost-relevant content is the columns.
+            for f in dataclasses.fields(self):
+                if f.name == "macros":
+                    continue
+                h.update(f.name.encode())
+                h.update(np.ascontiguousarray(getattr(self, f.name))
+                         .tobytes())
+            sig = (len(self), self.names, h.hexdigest())
+            object.__setattr__(self, "_signature", sig)
+        return sig
 
     def area_mm2(self) -> np.ndarray:
         """Per-design macro area [mm^2] (scalar area model per row)."""

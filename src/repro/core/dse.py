@@ -41,12 +41,40 @@ Design-space sweeps
 :func:`sweep` adds the second batching axis: instead of one macro, it
 takes a whole ``designs.MacroBatch`` (typically from
 ``designs.macro_grid``) and prices every (design x mapping-candidate)
-pair of every layer in one fused pass (``mapping.candidate_grid`` /
-``mapping.evaluate_grid`` on top of the jitted
+pair of every layer in one fused pass (``mapping.network_grid`` /
+``mapping.evaluate_network_grid`` on top of the jitted
 ``energy.tile_energy_grid``).  Per design it keeps the per-layer
 argmin under the chosen objective — the same winner, bitwise, that
 running ``best_mapping`` per design would keep — and returns a
 :class:`SweepResult`:
+
+Workload-axis fusion (padding/bucketing invariants)
+---------------------------------------------------
+The layer axis is the fourth fused lattice dimension: instead of one
+jit dispatch (and one XLA compile per distinct lattice width) per
+layer shape, all distinct shapes of a sweep — or of *several* networks
+at once via :func:`sweep_networks` — are priced together.  The
+invariants the engine maintains:
+
+* **Slot dedup** — layers sharing ``_shape_key`` (loop bounds +
+  precisions, not the name) occupy one lattice slot, across networks;
+  ``cache_info()`` reports slot counts and padding waste.
+* **Flat lane axis** — per-shape union lattices are *concatenated*
+  (``mapping.NetworkGrid``), never padded to a rectangular
+  (L, C_max): each segment keeps its own scalar enumeration order, so
+  per-segment masked argmins tie-break exactly like the per-layer
+  scalar oracle, and fusing adds no per-layer waste.
+* **Quantum padding** — the lane axis is rounded up to a
+  ``mapping.PAD_QUANTUM`` multiple with benign all-ones filler lanes
+  (``valid``/``legal`` both False there), so unrelated sweeps land on
+  a small set of compiled kernel shapes.
+* **Finite sentinels** — illegal and padded lanes enter the argmin as
+  the largest finite value of the objective dtype, never as inf/NaN
+  arithmetic (every (layer, design) pair has at least one legal lane,
+  so sentinels can never win).
+* **Memory bucketing** — the lane axis splits into buckets only when
+  ``D * Ctot`` would exceed ``_BUCKET_ELEMS`` (shapes never split), so
+  peak array memory is bounded; each bucket is one jit dispatch.
 
 * ``energy_fj`` / ``cycles`` / ``edp`` / ``area_mm2`` — (D,) network
   totals per design, bitwise equal to ``map_network`` on that design;
@@ -88,7 +116,8 @@ from .hardware import IMCMacro
 from .mapping import (MappingCost, candidate_batch, enumerate_mappings,
                       evaluate, evaluate_batch)
 from .memory import MemoryModel
-from .schedule import normalize as _normalize_schedules
+from .schedule import (names as _schedule_names,
+                       normalize as _normalize_schedules)
 from .workloads import Layer
 
 
@@ -258,22 +287,57 @@ _ENGINES = {"batch": best_mapping_batched, "scalar": best_mapping_scalar}
 _CACHE: dict[tuple, LayerResult] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0}
 
+#: per-shape union-lattice memo: (shape, designs signature, schedules,
+#: max_candidates) -> mapping.MappingGrid.  Lattice construction is pure
+#: Python over the knob ranges, so repeated sweeps over the same design
+#: grid (the warm path of the fused engine) skip it entirely.  Bounded:
+#: grids carry (D, C) legality masks (MBs at D >= 1000), so beyond
+#: ``_LATTICE_CACHE_MAX`` entries the oldest are evicted FIFO — a
+#: long-lived process refining many different design grids stays flat.
+_LATTICE_CACHE: dict[tuple, object] = {}
+_LATTICE_CACHE_MAX = 512
+#: fused-lattice bookkeeping: distinct shape slots priced, eligible
+#: layers they covered, and the lane/padding-waste tally of every
+#: bucket dispatched (see ``cache_info``).
+_LATTICE_STATS = {"lattice_slots": 0, "lattice_layers": 0,
+                  "lattice_lanes": 0, "lattice_pad_lanes": 0}
+
+
+def _shape_key(layer: Layer) -> tuple:
+    """Cost-relevant layer signature: loop bounds + precisions, not the
+    name.  Layers sharing this key share one lattice slot in the fused
+    sweep and one entry in the layer-result cache."""
+    return (tuple(sorted(layer.dims.items())), layer.w_prec, layer.i_prec,
+            layer.psum_prec)
+
 
 def _cache_key(layer: Layer, macro: IMCMacro, mem: MemoryModel,
                objective: str, alpha: float | None, schedules) -> tuple:
     """Cost-relevant signature: everything but the layer *name*."""
-    return (tuple(sorted(layer.dims.items())), layer.w_prec, layer.i_prec,
-            layer.psum_prec, macro, mem, objective, alpha,
-            tuple(s.name for s in schedules))
+    return (*_shape_key(layer), macro, mem, objective, alpha,
+            _schedule_names(schedules))
 
 
 def cache_clear() -> None:
     _CACHE.clear()
+    _LATTICE_CACHE.clear()
     _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    for k in _LATTICE_STATS:
+        _LATTICE_STATS[k] = 0
 
 
-def cache_info() -> dict[str, int]:
-    return {"size": len(_CACHE), **_CACHE_STATS}
+def cache_info() -> dict[str, int | float]:
+    """Layer-result cache stats plus fused-lattice stats:
+    ``lattice_slots`` distinct shape slots priced by sweeps (repeated
+    shapes share a slot), ``lattice_layers`` eligible layers those
+    slots covered, and ``padding_waste`` — the fraction of dispatched
+    lanes that were quantum-padding filler."""
+    lanes = _LATTICE_STATS["lattice_lanes"]
+    waste = (_LATTICE_STATS["lattice_pad_lanes"] / lanes) if lanes else 0.0
+    return {"size": len(_CACHE), **_CACHE_STATS,
+            "lattice_slots": _LATTICE_STATS["lattice_slots"],
+            "lattice_layers": _LATTICE_STATS["lattice_layers"],
+            "padding_waste": waste}
 
 
 def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
@@ -342,6 +406,12 @@ class SweepResult:
         return len(self.energy_fj)
 
     @property
+    def n_shapes(self) -> int:
+        """Distinct layer shapes priced (repeated shapes share a
+        lattice slot; compare against ``len(layer_names)``)."""
+        return len(self._shapes)
+
+    @property
     def edp(self) -> np.ndarray:
         return self.energy_fj * self.cycles
 
@@ -405,6 +475,196 @@ class SweepResult:
                              layers=tuple(results))
 
 
+#: finite masked-lane sentinels for the fused argmin.  Illegal and
+#: padded lanes never carry inf/NaN: their well-defined finite garbage
+#: is replaced by the largest representable value of the objective
+#: dtype, which any real candidate cost undercuts — so the argmin stays
+#: FMA-safe (no 0*inf / inf-inf patterns for XLA or NumPy to mangle)
+#: and tie-breaks are untouched (every (layer, design) pair has at
+#: least one legal lane: the all-ones mapping is always legal).
+_SENTINEL_F64 = np.float64(np.finfo(np.float64).max)
+_SENTINEL_I64 = np.int64(np.iinfo(np.int64).max)
+
+#: lane-axis budget of one fused bucket: D * Ctot is capped at this many
+#: lattice points, bounding peak (D, Ctot) array memory (~32 MiB per
+#: float64 field at the default).  Shapes never split across buckets.
+_BUCKET_ELEMS = 1 << 22
+
+
+def _grid_for(layer: Layer, designs: MacroBatch, scheds,
+              max_candidates: int = 4096):
+    """Cached ``mapping.candidate_grid`` (see ``_LATTICE_CACHE``)."""
+    from .mapping import candidate_grid
+    key = (_shape_key(layer), designs.signature(), _schedule_names(scheds),
+           max_candidates)
+    grid = _LATTICE_CACHE.get(key)
+    if grid is None:
+        grid = candidate_grid(layer, designs, max_candidates=max_candidates,
+                              schedules=scheds)
+        while len(_LATTICE_CACHE) >= _LATTICE_CACHE_MAX:
+            _LATTICE_CACHE.pop(next(iter(_LATTICE_CACHE)))
+        _LATTICE_CACHE[key] = grid
+    return grid
+
+
+def _price_buckets(buckets, designs: MacroBatch, objective: str,
+                   alpha: float | None, per_bit, buffer_bytes: int,
+                   dram: float) -> list[tuple]:
+    """Price fused workload buckets; per shape slot return
+    ``(grid, best_idx (D,), total (D,), cycles (D,))``.
+
+    Each bucket is one ``mapping.evaluate_network_grid`` pass — a
+    single jit dispatch for every (layer, design, candidate) triple it
+    holds — followed by the masked per-segment argmin.  All float
+    reductions happen here in NumPy with the scalar association (see
+    the module docstring's bitwise contract); the masked lanes enter
+    the argmin as finite sentinels, never as inf/NaN arithmetic.
+    """
+    from .mapping import evaluate_network_grid
+    from .memory import traffic_energy_grid
+
+    out: list[tuple | None] = [None] * sum(
+        len(net.shape_indices) for net in buckets)
+    for net in buckets:
+        costs = evaluate_network_grid(net, designs, alpha=alpha)
+        resident = np.asarray(
+            [_layer_resident_bytes(l) for l in net.layers],
+            dtype=np.int64)[net.lane_layer]
+        mem_fj = traffic_energy_grid(per_bit, costs, resident,
+                                     buffer_bytes=buffer_bytes,
+                                     dram_fj_per_bit=dram)
+        # The scalar association, assembled with in-place adds to keep
+        # (D, Ctot) temporaries down: total_fj is
+        # (((e_wl + e_bl) + e_logic) + (e_adc + e_tree)) + e_dac + e_ww
+        # and the memory side is ((w + i) + o) + p, then macro + mem —
+        # each += performs the identical float add the property chain
+        # would, so every lane stays bitwise.
+        e = costs.macro_energy
+        total = e.e_wl + e.e_bl
+        total += e.e_logic
+        total += e.e_adc + e.e_adder_tree
+        total += e.e_dac
+        total += e.e_weight_write
+        mem_total = mem_fj["weights"]
+        mem_total += mem_fj["inputs"]
+        mem_total += mem_fj["outputs"]
+        mem_total += mem_fj["psums"]
+        total += mem_total
+        if objective == "energy":
+            col = np.where(net.legal, total, _SENTINEL_F64)
+        elif objective == "latency":
+            col = np.where(net.legal, costs.cycles, _SENTINEL_I64)
+        else:                                     # edp
+            col = np.where(net.legal, total * costs.cycles, _SENTINEL_F64)
+        for row, si in enumerate(net.shape_indices):
+            seg = net.segment(row)
+            best_idx = np.argmin(col[:, seg], axis=1)
+            take = lambda a: np.take_along_axis(
+                a[:, seg], best_idx[:, None], axis=1)[:, 0]
+            out[si] = (net.grids[row], best_idx,
+                       take(total), take(costs.cycles))
+        _LATTICE_STATS["lattice_lanes"] += len(net)
+        _LATTICE_STATS["lattice_pad_lanes"] += net.pad_lanes
+    return out
+
+
+def _price_shapes(shape_layers: Sequence[Layer], designs: MacroBatch,
+                  objective: str, alpha: float | None, per_bit,
+                  buffer_bytes: int, dram: float, scheds) -> list[tuple]:
+    """Build (cached) per-shape lattices, fuse them into buckets, and
+    price everything; one entry per distinct shape, input order."""
+    from .mapping import network_grid
+    grids = [_grid_for(l, designs, scheds) for l in shape_layers]
+    max_lanes = max((len(g) for g in grids),
+                    default=1)
+    max_lanes = max(max_lanes, _BUCKET_ELEMS // max(1, len(designs)))
+    buckets = network_grid(shape_layers, designs, schedules=scheds,
+                           grids=grids, max_lanes=max_lanes)
+    return _price_buckets(buckets, designs, objective, alpha, per_bit,
+                          buffer_bytes, dram)
+
+
+def _mem_pricing(designs: MacroBatch, mem: MemoryModel | None):
+    from .memory import DRAM_FJ_PER_BIT, sram_fj_per_bit_grid
+    if mem is None:
+        return (sram_fj_per_bit_grid(designs.tech_nm, designs.vdd),
+                MemoryModel.buffer_bytes, DRAM_FJ_PER_BIT)
+    return mem.sram_fj_per_bit(), mem.buffer_bytes, mem.dram_fj_per_bit
+
+
+def sweep_networks(networks: Sequence[tuple[str, Sequence[Layer]]],
+                   designs: MacroBatch, objective: str = "energy",
+                   alpha: float | None = None,
+                   mem: MemoryModel | None = None,
+                   schedules=None) -> tuple[SweepResult, ...]:
+    """Price *several* workloads against a macro grid in one fused pass.
+
+    Layer shapes are deduplicated globally (``_shape_key``) across all
+    networks, so e.g. the dense classifier heads the tinyMLPerf nets
+    share occupy one lattice slot; the union of distinct shapes is then
+    priced through as few fused jit dispatches as the lane budget
+    allows (usually one) and each network's :class:`SweepResult` is
+    assembled from the shared per-(shape, design) winners.  Every
+    returned result is bitwise what :func:`sweep` alone would return
+    for that network — same totals, same winners, same tie-breaks.
+    """
+    if objective not in OBJECTIVES:
+        raise KeyError(objective)
+    scheds = _normalize_schedules(schedules)
+    per_bit, buffer_bytes, dram = _mem_pricing(designs, mem)
+    n_designs = len(designs)
+
+    shape_layers: list[Layer] = []
+    shape_index: dict[tuple, int] = {}
+    nets: list[tuple[str, list[Layer], list[int]]] = []
+    for network, layers in networks:
+        eligible = [l for l in layers if l.imc_eligible]
+        if not eligible:
+            raise ValueError(f"{network}: no IMC-eligible layers")
+        layer_shape: list[int] = []
+        for layer in eligible:
+            key = _shape_key(layer)
+            if key not in shape_index:
+                shape_index[key] = len(shape_layers)
+                shape_layers.append(layer)
+            layer_shape.append(shape_index[key])
+        nets.append((network, eligible, layer_shape))
+
+    priced = _price_shapes(shape_layers, designs, objective, alpha,
+                           per_bit, buffer_bytes, dram, scheds)
+    _LATTICE_STATS["lattice_slots"] += len(shape_layers)
+    _LATTICE_STATS["lattice_layers"] += sum(len(n[2]) for n in nets)
+
+    area = designs.area_mm2()
+    results = []
+    for network, eligible, layer_shape in nets:
+        # per-network slot table in first-appearance order, so the
+        # stored shapes/_layer_shape match what sweep() alone builds
+        local: dict[int, int] = {}
+        shapes: list[tuple] = []
+        local_shape: list[int] = []
+        for layer, si in zip(eligible, layer_shape):
+            if si not in local:
+                local[si] = len(shapes)
+                grid, best_idx, total, cyc = priced[si]
+                shapes.append((layer, grid, best_idx, total, cyc))
+            local_shape.append(local[si])
+        # network totals, accumulated in layer order like NetworkResult
+        energy = np.zeros(n_designs, dtype=np.float64)
+        cycles = np.zeros(n_designs, dtype=np.int64)
+        for si in local_shape:
+            energy = energy + shapes[si][3]
+            cycles = cycles + shapes[si][4]
+        results.append(SweepResult(
+            network=network, objective=objective, designs=designs,
+            energy_fj=energy, cycles=cycles, area_mm2=area,
+            layer_names=tuple(l.name for l in eligible),
+            schedules=_schedule_names(scheds),
+            _shapes=tuple((s[0], s[1], s[2]) for s in shapes),
+            _layer_shape=tuple(local_shape), _alpha=alpha, _mem=mem))
+    return tuple(results)
+
+
 def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
           objective: str = "energy", alpha: float | None = None,
           mem: MemoryModel | None = None,
@@ -415,80 +675,25 @@ def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
     IMC-eligible layer, the full legal (mapping x dataflow) lattice is
     evaluated through the jitted grid engine and the per-layer argmin
     under ``objective`` is kept — the same candidate, bitwise, that
-    ``best_mapping`` would pick on that design (the grid's masked
-    candidate axis preserves the scalar enumeration order, schedule
-    inner, so even ties break identically).  Repeated layer shapes are
-    priced once, like the layer-result cache.
+    ``best_mapping`` would pick on that design (the fused lattice's
+    masked lane axis preserves the scalar enumeration order per layer
+    segment, schedule inner, so even ties break identically).  Repeated
+    layer shapes are deduplicated into one lattice slot, like the
+    layer-result cache, and *all* distinct shapes are priced together
+    through the workload-fused lane axis — one jit dispatch per lane
+    bucket (usually one per network) instead of one per layer shape.
 
     ``mem=None`` (default) gives each design its own
     ``MemoryModel(tech_nm, vdd)``, matching ``map_network``; passing an
     explicit model prices every design against that one memory system.
     ``schedules`` enables the dataflow axis (default: weight-stationary
     only); the chosen-per-layer dataflow is surfaced via
-    :meth:`SweepResult.dataflows`.
+    :meth:`SweepResult.dataflows`.  To amortize the fused dispatch over
+    several workloads at once, see :func:`sweep_networks`.
     """
-    from .mapping import candidate_grid, evaluate_grid
-    from .memory import (DRAM_FJ_PER_BIT, sram_fj_per_bit_grid,
-                         traffic_energy_grid)
-
-    if objective not in OBJECTIVES:
-        raise KeyError(objective)
-    scheds = _normalize_schedules(schedules)
-    eligible = [l for l in layers if l.imc_eligible]
-    if not eligible:
-        raise ValueError(f"{network}: no IMC-eligible layers")
-    n_designs = len(designs)
-    if mem is None:
-        per_bit = sram_fj_per_bit_grid(designs.tech_nm, designs.vdd)
-        buffer_bytes, dram = MemoryModel.buffer_bytes, DRAM_FJ_PER_BIT
-    else:
-        per_bit = mem.sram_fj_per_bit()
-        buffer_bytes, dram = mem.buffer_bytes, mem.dram_fj_per_bit
-
-    shapes: list[tuple] = []
-    shape_index: dict[tuple, int] = {}
-    layer_shape: list[int] = []
-    for layer in eligible:
-        key = (tuple(sorted(layer.dims.items())), layer.w_prec,
-               layer.i_prec, layer.psum_prec)
-        if key not in shape_index:
-            grid = candidate_grid(layer, designs, schedules=scheds)
-            costs = evaluate_grid(layer, designs, grid, alpha=alpha)
-            mem_fj = traffic_energy_grid(
-                per_bit, costs, _layer_resident_bytes(layer),
-                buffer_bytes=buffer_bytes, dram_fj_per_bit=dram)
-            # scalar association: ((w + i) + o) + p, then macro + mem
-            mem_total = ((mem_fj["weights"] + mem_fj["inputs"])
-                         + mem_fj["outputs"]) + mem_fj["psums"]
-            total = costs.macro_energy.total_fj + mem_total
-            if objective == "energy":
-                col = np.where(grid.legal, total, np.inf)
-            elif objective == "latency":
-                col = np.where(grid.legal, costs.cycles,
-                               np.iinfo(np.int64).max)
-            else:                                     # edp
-                col = np.where(grid.legal, total * costs.cycles, np.inf)
-            best_idx = np.argmin(col, axis=1)
-            take = lambda a: np.take_along_axis(
-                a, best_idx[:, None], axis=1)[:, 0]
-            shape_index[key] = len(shapes)
-            shapes.append((layer, grid, best_idx,
-                           take(total), take(costs.cycles)))
-        layer_shape.append(shape_index[key])
-
-    # network totals, accumulated in layer order like NetworkResult's sums
-    energy = np.zeros(n_designs, dtype=np.float64)
-    cycles = np.zeros(n_designs, dtype=np.int64)
-    for si in layer_shape:
-        energy = energy + shapes[si][3]
-        cycles = cycles + shapes[si][4]
-    return SweepResult(
-        network=network, objective=objective, designs=designs,
-        energy_fj=energy, cycles=cycles, area_mm2=designs.area_mm2(),
-        layer_names=tuple(l.name for l in eligible),
-        schedules=tuple(s.name for s in scheds),
-        _shapes=tuple((s[0], s[1], s[2]) for s in shapes),
-        _layer_shape=tuple(layer_shape), _alpha=alpha, _mem=mem)
+    return sweep_networks(((network, layers),), designs,
+                          objective=objective, alpha=alpha, mem=mem,
+                          schedules=schedules)[0]
 
 
 def _non_dominated(pts: np.ndarray) -> np.ndarray:
@@ -617,10 +822,62 @@ def map_network(network: str, layers: Sequence[Layer], macro: IMCMacro,
                 alpha: float | None = None,
                 engine: str = "batch",
                 schedules=None) -> NetworkResult:
+    """Map every IMC-eligible layer of a network onto one macro.
+
+    ``engine="batch"`` (default) runs the vectorized per-layer NumPy
+    search through the layer-result cache; ``"scalar"`` the uncached
+    reference loop; ``"grid"`` prices the whole network through the
+    workload-fused jit lattice (one dispatch for all distinct layer
+    shapes on a single-design batch — the fastest path when the same
+    macro is priced against many layers once, e.g. the benchmark case
+    studies).  All three return bitwise-identical results; ``"grid"``
+    shares the layer-result cache with ``"batch"``.
+    """
     mem = mem or MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+    if engine == "grid":
+        return _map_network_grid(network, layers, macro, mem,
+                                 objective=objective, alpha=alpha,
+                                 schedules=schedules)
     results = tuple(
         best_mapping(l, macro, mem, objective=objective, alpha=alpha,
                      engine=engine, schedules=schedules)
         for l in layers if l.imc_eligible)
     return NetworkResult(network=network, macro_name=macro.name,
                          layers=results)
+
+
+def _map_network_grid(network: str, layers: Sequence[Layer],
+                      macro: IMCMacro, mem: MemoryModel,
+                      objective: str = "energy",
+                      alpha: float | None = None,
+                      schedules=None) -> NetworkResult:
+    """Fused-lattice ``map_network``: consult the shared layer-result
+    cache, price every missing shape in one single-design
+    :func:`sweep`, and rebuild the winners through the scalar oracle
+    (so results stay bitwise equal to the other engines).  Cache
+    hit/miss accounting matches the per-layer ``best_mapping`` path:
+    the first occurrence of a shape is a miss, repeats are hits."""
+    scheds = _normalize_schedules(schedules)
+    eligible = [l for l in layers if l.imc_eligible]
+    pending: dict[tuple, Layer] = {}
+    for layer in eligible:
+        key = _cache_key(layer, macro, mem, objective, alpha, scheds)
+        if key in _CACHE or key in pending:
+            _CACHE_STATS["hits"] += 1
+        else:
+            _CACHE_STATS["misses"] += 1
+            pending[key] = layer
+    if pending:
+        res = sweep(network, list(pending.values()),
+                    MacroBatch.from_macros([macro]), objective=objective,
+                    alpha=alpha, mem=mem, schedules=scheds)
+        net0 = res.network_result(0)
+        for key, lr in zip(pending, net0.layers):
+            _CACHE[key] = lr
+    results = []
+    for layer in eligible:
+        hit = _CACHE[_cache_key(layer, macro, mem, objective, alpha, scheds)]
+        results.append(hit if hit.layer.name == layer.name
+                       else dataclasses.replace(hit, layer=layer))
+    return NetworkResult(network=network, macro_name=macro.name,
+                         layers=tuple(results))

@@ -455,6 +455,26 @@ def tile_energy_batch(macro: IMCMacro,
 
 _GRID_KERNEL = None          # lazily-built jax.jit closure
 
+#: dispatch/compile bookkeeping for the fused grid kernel.  jax caches
+#: compiled executables per argument-shape signature, so the number of
+#: distinct signatures seen is a faithful proxy for XLA compile count —
+#: the quantity the workload-axis fused sweep exists to minimize
+#: (``BENCH_sweep.json`` records both).
+_GRID_KERNEL_STATS = {"calls": 0}
+_GRID_KERNEL_SHAPES: set[tuple] = set()
+
+
+def grid_kernel_info() -> dict[str, int]:
+    """Fused-kernel dispatch stats: total ``calls`` and
+    ``distinct_shapes`` (compile-count proxy) since the last reset."""
+    return {"calls": _GRID_KERNEL_STATS["calls"],
+            "distinct_shapes": len(_GRID_KERNEL_SHAPES)}
+
+
+def grid_kernel_reset() -> None:
+    _GRID_KERNEL_STATS["calls"] = 0
+    _GRID_KERNEL_SHAPES.clear()
+
 
 def _grid_kernel():
     global _GRID_KERNEL
@@ -539,6 +559,15 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
     bitwise identical to running the scalar oracle at every
     (design, tile) pair — the same contract ``tile_energy_batch``
     honours per macro, extended over designs.
+
+    Leading layer axis: tile arguments may also be 2-D ``(L, C)``
+    stacks (one row per layer of a padded workload lattice), in which
+    case the design axis is inserted *between* the layer and candidate
+    axes and every output is ``(L, D, C)``.  The kernel is purely
+    elementwise, so each ``[l, d, c]`` entry is bitwise what the 1-D
+    call on layer ``l``'s row alone would produce — the workload-fused
+    sweep (``dse.sweep``/``sweep_networks``) relies on this to price a
+    whole network in one compile.
     """
     from jax.experimental import enable_x64
 
@@ -549,6 +578,13 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
         np.asarray(weight_loads, dtype=np.int64), n_inputs.shape)
     sched_os = np.broadcast_to(
         np.asarray(schedule_os, dtype=bool), n_inputs.shape)
+    # 1-D tile args broadcast straight against the (D, 1) design columns;
+    # layer-stacked (..., L, C) args get the design axis spliced in
+    # before the candidate axis.
+    tile = (lambda a: a) if n_inputs.ndim == 1 else (lambda a: a[..., None, :])
+
+    _GRID_KERNEL_STATS["calls"] += 1
+    _GRID_KERNEL_SHAPES.add((n_inputs.shape, len(designs.rows)))
 
     cst = _design_constants(designs)
     col = lambda a: a[:, None]                     # (D,) -> (D, 1)
@@ -560,7 +596,8 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
             col(cst["adc_e"]), col(cst["denom_adc"]), col(cst["cols_per_adc"]),
             col(cst["f_tree_a"]), col(cst["f_tree_d"]), col(cst["p_tree"]),
             col(cst["denom_occ"]), col(cst["dac_e"]), col(cst["p_write"]),
-            n_inputs, rows_used, cols_used, weight_loads, sched_os, alpha)
+            tile(n_inputs), tile(rows_used), tile(cols_used),
+            tile(weight_loads), tile(sched_os), alpha)
         parts = tuple(np.asarray(p, dtype=np.float64) for p in parts)
     (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, macs,
      x_adc, x_dac) = parts

@@ -703,6 +703,251 @@ def evaluate_grid(layer: Layer, designs, grid: MappingGrid,
         input_bits=input_bits, output_bits=output_bits, psum_bits=psum_bits)
 
 
+# --------------------------------------------------------------------------- #
+# network (layer x design x candidate) fused lattice                            #
+# --------------------------------------------------------------------------- #
+#: lane-axis quantum: padded lattices round their lane count up to a
+#: multiple of this, so sweeps over different workloads land on a small
+#: set of compiled kernel shapes instead of one per lattice width.
+PAD_QUANTUM = 64
+
+#: benign filler for padded lanes: a trivial all-ones weight-stationary
+#: candidate.  Every downstream formula stays finite on it (no NaN/inf
+#: arithmetic anywhere in the fused pass — the masked argmin relies on
+#: finite sentinel costs only), and the validity/legality masks keep it
+#: out of every reduction.
+_PAD_LANE = dict(k_cols=1, k_macros=1, c_un=1, fx_un=1, fy_un=1, row_un=1,
+                 mac_dim=_MAC_NONE, mac_un=1, dup_macros=1,
+                 n_spatial_temporal=1, schedule=WS_CODE)
+
+_CAND_FIELDS = tuple(_PAD_LANE)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkGrid:
+    """The fused candidate lattice of L layer shapes over D designs.
+
+    The workload axis is *ragged* — every layer shape has its own union
+    lattice width — so instead of a rectangular (L, C_max) pad, the
+    per-shape lattices are concatenated along one flat **lane axis** of
+    ``Ctot`` lanes (segment ``s`` spans ``starts[s]:starts[s+1]``, in
+    the shape's own enumeration order), then padded up to a
+    :data:`PAD_QUANTUM` multiple with benign :data:`_PAD_LANE` filler.
+    ``lane_layer`` maps each lane back to its segment so per-layer loop
+    bounds enter the vectorized cost formulas as gathered columns, and
+    one ``energy.tile_energy_grid`` call prices every
+    (layer, design, candidate) triple of the bucket in a single jit
+    dispatch.
+
+    Masks: ``valid`` (Ctot,) marks real (non-pad) lanes; ``legal``
+    (D, Ctot) is the per-design legality of each lane (all-False on pad
+    lanes).  A design's legal subsequence of a segment *is* that
+    layer's scalar enumeration order, so masked per-segment argmins
+    tie-break exactly like the per-layer scalar oracle.
+    """
+
+    layers: tuple[Layer, ...]          # one representative per segment
+    grids: tuple[MappingGrid, ...]     # per-shape unpadded grids
+    shape_indices: tuple[int, ...]     # caller's slot id per segment
+    starts: np.ndarray                 # (S+1,) int64 segment bounds
+    cand: MappingBatch                 # flat lane axis (Ctot,)
+    lane_layer: np.ndarray             # (Ctot,) int64 segment per lane
+    legal: np.ndarray                  # (D, Ctot) bool
+    valid: np.ndarray                  # (Ctot,) bool, False on pad lanes
+
+    def __len__(self) -> int:
+        return len(self.cand)
+
+    @property
+    def n_designs(self) -> int:
+        return self.legal.shape[0]
+
+    @property
+    def pad_lanes(self) -> int:
+        return len(self) - int(self.valid.sum())
+
+    def segment(self, s: int) -> slice:
+        """Lane range of segment ``s`` (its shape's real lanes only)."""
+        return slice(int(self.starts[s]), int(self.starts[s + 1]))
+
+
+def network_grid(layers: Sequence[Layer], designs,
+                 schedules=None, max_candidates: int = 4096,
+                 grids: Sequence[MappingGrid] | None = None,
+                 pad_quantum: int = PAD_QUANTUM,
+                 max_lanes: int | None = None) -> tuple[NetworkGrid, ...]:
+    """Fuse the union lattices of ``layers`` into flat
+    :class:`NetworkGrid` buckets over a ``designs.MacroBatch``.
+
+    ``grids`` supplies prebuilt per-shape :class:`MappingGrid` objects
+    (e.g. from the DSE's lattice cache); by default each shape's grid
+    is built fresh.  Buckets split the lane axis greedily in input
+    order whenever the running lane count would exceed ``max_lanes``
+    (``None`` = single bucket) — this bounds peak (D x Ctot) memory;
+    padding waste is bounded separately by ``pad_quantum`` (at most
+    ``pad_quantum - 1`` filler lanes per bucket), so fusing never
+    explodes the lattice the way a rectangular (L, C_max) pad would.
+    """
+    if grids is None:
+        grids = [candidate_grid(l, designs, max_candidates=max_candidates,
+                                schedules=schedules) for l in layers]
+    if len(grids) != len(layers):
+        raise ValueError(f"network_grid: {len(layers)} layers but "
+                         f"{len(grids)} grids")
+    if not layers:
+        raise ValueError("network_grid: no layers")
+
+    buckets: list[list[int]] = [[]]
+    lanes = 0
+    for s, g in enumerate(grids):
+        if buckets[-1] and max_lanes is not None and lanes + len(g) > max_lanes:
+            buckets.append([])
+            lanes = 0
+        buckets[-1].append(s)
+        lanes += len(g)
+
+    out = []
+    for members in buckets:
+        segs = [grids[s] for s in members]
+        widths = [len(g) for g in segs]
+        starts = np.concatenate([[0], np.cumsum(widths)]).astype(np.int64)
+        ctot = int(starts[-1])
+        padded = -(-max(ctot, 1) // pad_quantum) * pad_quantum
+        pad = padded - ctot
+
+        fields = {}
+        for f in _CAND_FIELDS:
+            parts = [getattr(g.cand, f) for g in segs]
+            if pad:
+                parts.append(np.full(pad, _PAD_LANE[f], dtype=np.int64))
+            fields[f] = np.concatenate(parts)
+        lane_layer = np.repeat(np.arange(len(segs), dtype=np.int64), widths)
+        if pad:
+            lane_layer = np.concatenate(
+                [lane_layer, np.zeros(pad, dtype=np.int64)])
+        legal = np.concatenate(
+            [g.legal for g in segs]
+            + ([np.zeros((segs[0].legal.shape[0], pad), dtype=bool)]
+               if pad else []), axis=1)
+        valid = np.zeros(padded, dtype=bool)
+        valid[:ctot] = True
+        out.append(NetworkGrid(
+            layers=tuple(layers[s] for s in members),
+            grids=tuple(segs),
+            shape_indices=tuple(members),
+            starts=starts, cand=MappingBatch(**fields),
+            lane_layer=lane_layer, legal=legal, valid=valid))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkCostGrid:
+    """Struct-of-arrays mapping costs over one fused
+    (layer x design x candidate) bucket.
+
+    Field semantics match :class:`MappingCostGrid` with the candidate
+    axis replaced by the bucket's flat lane axis: energy/cycles are
+    (D, Ctot), the candidate-only tiling counts and traffic are (Ctot,)
+    rows.  Pad and illegal lanes hold finite, well-defined garbage;
+    consumers must mask with ``net.legal`` before reducing.  The
+    reporting-only ``spatial_utilization`` column is deliberately
+    absent — the fused hot path never reads it; rebuild winners through
+    the scalar oracle (``dse.SweepResult.network_result``) or the
+    per-layer :func:`evaluate_grid` when it is needed.
+    """
+
+    net: NetworkGrid
+    macro_energy: EnergyBreakdownBatch   # (D, Ctot)
+    weight_tiles: np.ndarray             # (Ctot,) int64
+    inputs_per_tile: np.ndarray          # (Ctot,) int64
+    cycles: np.ndarray                   # (D, Ctot) int64
+    weight_bits: np.ndarray              # (Ctot,) int64
+    input_bits: np.ndarray               # (Ctot,) int64
+    output_bits: np.ndarray              # (Ctot,) int64
+    psum_bits: np.ndarray                # (Ctot,) int64
+
+    def __len__(self) -> int:
+        return len(self.net)
+
+
+def evaluate_network_grid(net: NetworkGrid, designs,
+                          alpha: float | None = None) -> NetworkCostGrid:
+    """Vectorized :func:`evaluate` over a fused workload bucket: one
+    ``energy.tile_energy_grid`` jit dispatch for every layer shape in
+    the bucket.  Per-layer loop bounds enter as columns gathered
+    through ``net.lane_layer``, so each lane's formulas see exactly the
+    scalars the per-layer :func:`evaluate_grid` path would — every
+    legal lane is bitwise identical to it (and hence to the scalar
+    oracle)."""
+    from .energy import DEFAULT_ALPHA, tile_energy_grid
+    alpha = DEFAULT_ALPHA if alpha is None else alpha
+    batch = net.cand
+    lay = net.lane_layer
+
+    per = lambda fn: np.asarray([fn(l) for l in net.layers],
+                                dtype=np.int64)[lay]
+    k_dim = per(lambda l: l.dim("K"))
+    acc_depth = per(lambda l: l.accumulation_depth)
+    b_dim = per(lambda l: l.dim("B"))
+    w_elems = per(lambda l: l.weight_elems)
+    i_elems = per(lambda l: l.input_elems)
+    o_elems = per(lambda l: l.output_elems)
+    w_prec = per(lambda l: l.w_prec)
+    i_prec = per(lambda l: l.i_prec)
+    p_prec = per(lambda l: l.psum_prec)
+
+    n_k_tiles = np.ceil(k_dim / (batch.k_cols * batch.k_macros)
+                        ).astype(np.int64)
+    n_acc_tiles = np.ceil(acc_depth / batch.row_un).astype(np.int64)
+    weight_tiles = n_k_tiles * n_acc_tiles
+    inputs_per_tile = b_dim * batch.n_spatial_temporal
+
+    # schedule-dependent factors (exact integer np.where selections)
+    is_os = batch.schedule == OS_CODE
+    weight_loads = np.where(is_os, inputs_per_tile, np.int64(1))
+
+    rows_used = np.minimum(batch.row_un, acc_depth)
+    cols_used = np.minimum(batch.k_cols, k_dim)
+    active_macros = batch.k_macros * batch.dup_macros
+    e_tile = tile_energy_grid(designs, n_inputs=inputs_per_tile,
+                              rows_used=rows_used, cols_used=cols_used,
+                              weight_loads=weight_loads,
+                              alpha=alpha, schedule_os=is_os)
+
+    # (f * active_macros) * weight_tiles with one temporary per field —
+    # the in-place second multiply performs the identical float op the
+    # chained ``.scaled().scaled()`` would, so lanes stay bitwise.
+    def _scale2(x: np.ndarray) -> np.ndarray:
+        y = x * active_macros
+        y *= weight_tiles
+        return y
+
+    macro_energy = EnergyBreakdownBatch(
+        *(_scale2(getattr(e_tile, f.name))
+          for f in dataclasses.fields(e_tile)))
+
+    cc_per_input = np.where(designs.analog, designs.cc_bs * designs.adc_share,
+                            designs.cc_bs * designs.m_mux)
+    write_cycles = rows_used * weight_tiles * weight_loads
+    cycles = (weight_tiles * inputs_per_tile * cc_per_input[:, None]
+              + write_cycles)
+
+    # OS restreams the weight tensor once per reload pass — the same
+    # closed form as weight_loads (schedule.weight_refetch == .weight_loads)
+    weight_bits = w_elems * w_prec * batch.dup_macros * weight_loads
+    input_bits = (i_elems * i_prec
+                  * np.where(is_os, np.int64(1), n_k_tiles))
+    output_bits = o_elems * p_prec
+    psum_bits = (o_elems * p_prec
+                 * np.where(is_os, np.int64(0),
+                            2 * np.maximum(0, n_acc_tiles - 1)))
+    return NetworkCostGrid(
+        net=net, macro_energy=macro_energy, weight_tiles=weight_tiles,
+        inputs_per_tile=inputs_per_tile, cycles=cycles,
+        weight_bits=weight_bits, input_bits=input_bits,
+        output_bits=output_bits, psum_bits=psum_bits)
+
+
 @dataclasses.dataclass(frozen=True)
 class MappingCostBatch:
     """Struct-of-arrays :class:`MappingCost` over N candidates."""

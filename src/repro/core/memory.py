@@ -27,7 +27,7 @@ import dataclasses
 import numpy as np
 
 from . import tech as _tech
-from .mapping import MappingCost, MappingCostBatch, MappingCostGrid
+from .mapping import MappingCost, MappingCostBatch
 
 #: Global-buffer read/write energy per bit, in units of C_inv * V^2.
 #: A ~256 KB SRAM access at 28 nm/0.8 V costs a few fJ/bit; 20x C_inv V^2
@@ -109,8 +109,8 @@ def sram_fj_per_bit_grid(tech_nm: np.ndarray, vdd: np.ndarray) -> np.ndarray:
     return SRAM_CINV_FACTOR * c_inv * vdd * vdd
 
 
-def traffic_energy_grid(per_bit: np.ndarray | float, costs: MappingCostGrid,
-                        resident_bytes: int = 0,
+def traffic_energy_grid(per_bit: np.ndarray | float, costs,
+                        resident_bytes: int | np.ndarray = 0,
                         buffer_bytes: int = 1 << 20,
                         dram_fj_per_bit: float = DRAM_FJ_PER_BIT) -> dict:
     """Traffic pricing over a (design x candidate) grid.
@@ -120,13 +120,23 @@ def traffic_energy_grid(per_bit: np.ndarray | float, costs: MappingCostGrid,
     returned entry is (D, C) and bitwise equals the per-design scalar
     path.  The off-chip spill decision is a property of the layer's
     working set, shared by every design, exactly as in the scalar model.
+
+    ``costs`` is any struct carrying ``weight_bits`` / ``input_bits`` /
+    ``output_bits`` / ``psum_bits`` candidate rows — a
+    :class:`~repro.core.mapping.MappingCostGrid` (one layer) or a
+    :class:`~repro.core.mapping.NetworkCostGrid` (fused workload
+    lattice).  For the fused case ``resident_bytes`` is a per-*lane*
+    array (each lane inherits its layer's working set), and the weight
+    rate becomes an elementwise selection between the same two
+    precomputed per-bit values the scalar branch chooses from — so
+    every lane still prices bitwise like its own per-layer call.
     """
     per_bit = np.atleast_1d(np.asarray(per_bit, dtype=np.float64))[:, None]
-    off_chip = resident_bytes > buffer_bytes
-    if off_chip:
-        per_bit_w = per_bit + dram_fj_per_bit
+    off_chip = np.asarray(resident_bytes) > buffer_bytes
+    if off_chip.ndim == 0:
+        per_bit_w = per_bit + dram_fj_per_bit if off_chip else per_bit
     else:
-        per_bit_w = per_bit
+        per_bit_w = np.where(off_chip, per_bit + dram_fj_per_bit, per_bit)
     return {
         "weights": costs.weight_bits * per_bit_w,
         "inputs": costs.input_bits * per_bit,

@@ -37,7 +37,10 @@ Two schedules are modeled:
 The schedule-dependent factors are pure integer functions
 (:meth:`Schedule.weight_loads` etc.), so the batched engines reproduce
 the scalar oracle bitwise by selecting between the two closed forms
-with ``np.where`` on the :attr:`Schedule.code` column.
+with ``np.where`` on the :attr:`Schedule.code` column.  The fused
+workload lattice (``mapping.network_grid``) carries that code column
+per lane, so the schedule axis rides the layer axis unchanged — padded
+filler lanes are marked :data:`WS_CODE` (benign, masked out).
 """
 
 from __future__ import annotations
@@ -117,6 +120,12 @@ def by_name(name: str) -> Schedule:
 
 def by_code(code: int) -> Schedule:
     return _BY_CODE[int(code)]
+
+
+def names(schedules: Sequence[Schedule]) -> tuple[str, ...]:
+    """Schedule name tuple, in the given (enumeration) order — the form
+    cache keys and :class:`~repro.core.dse.SweepResult` metadata use."""
+    return tuple(s.name for s in schedules)
 
 
 def normalize(schedules) -> tuple[Schedule, ...]:

@@ -183,6 +183,56 @@ def test_best_mapping_engines_agree_with_dataflows(analog, rows, d1, bw, bi,
     assert a == bres
 
 
+@given(**{**MACRO_STRAT, **LAYER_STRAT,
+          "dataflows": st.sampled_from([None, ("ws", "os")]),
+          "objective": st.sampled_from(["energy", "latency", "edp"])})
+@settings(max_examples=10, deadline=None)
+def test_map_network_grid_engine_matches_scalar(analog, rows, d1, bw, bi, m,
+                                                adc, dac, n_macros, tech_nm,
+                                                vdd, b, k, c, ox, oy, fx, fy,
+                                                dataflows, objective):
+    """Random multi-layer networks (mixed conv/dense/depthwise, with a
+    repeated shape): the workload-fused grid engine prices the whole
+    network in one jit dispatch and returns bitwise the scalar oracle's
+    per-layer winners — tie-breaks and dataflow choices included."""
+    macro = _make_macro(analog, rows, d1, bw, bi, m, adc, dac, n_macros,
+                        tech_nm, vdd)
+    conv = dict(B=b, K=k, C=c, OX=ox, OY=oy, FX=fx, FY=fy)
+    layers = [
+        workloads.Layer("c0", "conv2d", conv),
+        workloads.Layer("dw1", "depthwise",
+                        dict(B=b, G=max(2, k), OX=ox, OY=oy, FX=fx, FY=fy)),
+        workloads.dense("fc2", b, max(1, c), max(1, k)),
+        workloads.Layer("c3", "conv2d", conv),             # repeated shape
+    ]
+    dse.cache_clear()
+    got = dse.map_network("mixed", layers, macro, objective=objective,
+                          engine="grid", schedules=dataflows)
+    ref = dse.map_network("mixed", layers, macro, objective=objective,
+                          engine="scalar", schedules=dataflows)
+    assert got == ref
+
+
+def test_map_network_grid_engine_shares_cache():
+    """The grid engine keeps the per-layer result cache semantics of
+    the batch engine: first occurrence of a shape is a miss, repeats
+    are hits, and a later batch-engine call reuses the grid's entries."""
+    dse.cache_clear()
+    macro = designs.table2_designs()[0]
+    layers = workloads.deep_autoencoder()
+    net = dse.map_network("dae", layers, macro, engine="grid")
+    info = dse.cache_info()
+    assert info["misses"] == 5                   # distinct dense shapes
+    assert info["hits"] == len(layers) - 5
+    assert [r.layer.name for r in net.layers] == [l.name for l in layers]
+    # batch engine now runs fully out of the grid-primed cache...
+    net2 = dse.map_network("dae", layers, macro)
+    assert dse.cache_info()["misses"] == 5
+    assert net2 == net
+    # ...and both equal the uncached scalar engine end to end
+    assert net == dse.map_network("dae", layers, macro, engine="scalar")
+
+
 def test_fig7_layers_bit_identical():
     """Acceptance pin: every layer of the Fig. 7 case-study networks on
     every Table II design — batched winner == scalar winner, bitwise."""

@@ -380,6 +380,188 @@ def test_sweep_pareto_frontier_sound():
     assert mask[res.best()]
 
 
+# --------------------------------------------------------------------------- #
+# workload-axis fusion: fused network sweep vs per-layer oracles               #
+# --------------------------------------------------------------------------- #
+def _make_network(b, k, c, ox, oy, fx, fy) -> list[workloads.Layer]:
+    """A mixed conv/dense/depthwise network with a repeated conv shape
+    (same dims, different name) so the fused sweep exercises slot dedup
+    alongside the ragged lane axis."""
+    conv = dict(B=b, K=k, C=c, OX=ox, OY=oy, FX=fx, FY=fy)
+    return [
+        workloads.Layer("c0", "conv2d", conv),
+        workloads.Layer("dw1", "depthwise",
+                        dict(B=b, G=max(2, c), OX=ox, OY=oy, FX=fx, FY=fy)),
+        workloads.dense("fc2", b, max(1, c * fx), max(1, k // 2 + 1)),
+        workloads.Layer("c3", "conv2d", conv),            # repeated shape
+        workloads.dense("head", b, max(1, k), 10),
+    ]
+
+
+@given(**{**GRID_STRAT, **LAYER_STRAT,
+          "dataflows": st.sampled_from([None, ("ws", "os")]),
+          "objective": st.sampled_from(["energy", "latency", "edp"])})
+@settings(max_examples=8, deadline=None)
+def test_fused_network_sweep_matches_scalar_oracle(rows, cols, bw, bi,
+                                                   adc_bits, dac_bits, m_mux,
+                                                   n_macros, tech_nm, vdd,
+                                                   booth, cols_per_adc,
+                                                   adc_share, b, k, c, ox, oy,
+                                                   fx, fy, dataflows,
+                                                   objective):
+    """Random multi-layer networks (mixed conv/dense/depthwise shapes):
+    the workload-fused sweep — all shapes in one padded lane lattice,
+    one jit dispatch — reproduces the per-layer scalar oracle bitwise
+    on sampled designs: totals, full network result, and every winning
+    (mapping, dataflow) pair including argmin tie-breaks."""
+    grid = _make_grid(rows, cols, bw, bi, adc_bits, dac_bits, m_mux,
+                      n_macros, tech_nm, vdd, booth, cols_per_adc,
+                      adc_share)
+    layers = _make_network(b, k, c, ox, oy, fx, fy)
+    res = dse.sweep("mixed", layers, grid, objective=objective,
+                    schedules=dataflows)
+    assert len(res._shapes) < len(res.layer_names)        # dedup happened
+    rng = np.random.default_rng(k * 29 + ox + len(res))
+    for d in map(int, rng.integers(0, len(grid), min(3, len(grid)))):
+        ref = dse.map_network("mixed", layers, grid.macro_at(d),
+                              objective=objective, engine="scalar",
+                              schedules=dataflows)
+        assert float(res.energy_fj[d]) == ref.total_energy_fj
+        assert int(res.cycles[d]) == ref.total_cycles
+        assert res.network_result(d) == ref
+
+
+@given(**{**GRID_STRAT, **LAYER_STRAT})
+@settings(max_examples=6, deadline=None)
+def test_sweep_networks_matches_individual_sweeps(rows, cols, bw, bi,
+                                                  adc_bits, dac_bits, m_mux,
+                                                  n_macros, tech_nm, vdd,
+                                                  booth, cols_per_adc,
+                                                  adc_share, b, k, c, ox, oy,
+                                                  fx, fy):
+    """Several networks priced in ONE fused pass return exactly what
+    per-network ``sweep`` calls return, even though shapes shared
+    across networks occupy one lattice slot."""
+    grid = _make_grid(rows, cols, bw, bi, adc_bits, dac_bits, m_mux,
+                      n_macros, tech_nm, vdd, booth, cols_per_adc,
+                      adc_share)
+    layers = _make_network(b, k, c, ox, oy, fx, fy)
+    nets = [("net_a", layers[:3]), ("net_b", layers[2:])]   # share fc2's shape
+    fused = dse.sweep_networks(nets, grid)
+    for (name, ls), res in zip(nets, fused):
+        alone = dse.sweep(name, ls, grid)
+        assert res.network == alone.network == name
+        assert (res.energy_fj == alone.energy_fj).all()
+        assert (res.cycles == alone.cycles).all()
+        assert res.layer_names == alone.layer_names
+        assert res.network_result(0) == alone.network_result(0)
+
+
+@given(**{**GRID_STRAT, **LAYER_STRAT})
+@settings(max_examples=6, deadline=None)
+def test_evaluate_network_grid_bitwise_vs_per_layer(rows, cols, bw, bi,
+                                                    adc_bits, dac_bits,
+                                                    m_mux, n_macros, tech_nm,
+                                                    vdd, booth, cols_per_adc,
+                                                    adc_share, b, k, c, ox,
+                                                    oy, fx, fy):
+    """Every real lane segment of the fused lattice carries bitwise the
+    columns the per-layer grid engine computes for that shape."""
+    grid = _make_grid(rows, cols, bw, bi, adc_bits, dac_bits, m_mux,
+                      n_macros, tech_nm, vdd, booth, cols_per_adc,
+                      adc_share)
+    layers = [l for l in _make_network(b, k, c, ox, oy, fx, fy)[:3]]
+    (net,) = mapping.network_grid(layers, grid, schedules=("ws", "os"))
+    costs = mapping.evaluate_network_grid(net, grid)
+    assert net.legal[:, ~net.valid].sum() == 0             # pads never legal
+    for s, layer in enumerate(net.layers):
+        seg = net.segment(s)
+        mg = net.grids[s]
+        ref = mapping.evaluate_grid(layer, grid, mg, alpha=None)
+        assert (net.legal[:, seg] == mg.legal).all()
+        for f in _ENERGY_FIELDS:
+            assert (getattr(costs.macro_energy, f)[:, seg]
+                    == getattr(ref.macro_energy, f)).all()
+        assert (costs.cycles[:, seg] == ref.cycles).all()
+        for f in ("weight_tiles", "inputs_per_tile", "weight_bits",
+                  "input_bits", "output_bits", "psum_bits"):
+            assert (getattr(costs, f)[seg] == getattr(ref, f)).all()
+
+
+def test_tile_energy_grid_leading_layer_axis():
+    """(L, C) stacked tile arguments produce an (L, D, C) lattice whose
+    every row is bitwise the 1-D call on that row alone."""
+    grid = designs.macro_grid(rows=(64, 256), cols=(256,), adc_bits=(5,),
+                              dac_bits=(2,), m_mux=(1, 16), tech_nm=(22,))
+    rng = np.random.default_rng(7)
+    L, C = 3, 11
+    n_inputs = rng.integers(1, 4000, (L, C))
+    rows_used = rng.integers(1, 257, (L, C))
+    cols_used = rng.integers(1, 65, (L, C))
+    loads = rng.integers(1, 9, (L, C))
+    stacked = energy.tile_energy_grid(grid, n_inputs=n_inputs,
+                                      rows_used=rows_used,
+                                      cols_used=cols_used,
+                                      weight_loads=loads)
+    assert stacked.e_wl.shape == (L, len(grid), C)
+    for l in range(L):
+        row = energy.tile_energy_grid(grid, n_inputs=n_inputs[l],
+                                      rows_used=rows_used[l],
+                                      cols_used=cols_used[l],
+                                      weight_loads=loads[l])
+        for f in _ENERGY_FIELDS:
+            assert (getattr(stacked, f)[l] == getattr(row, f)).all()
+
+
+def test_padded_lanes_are_inert():
+    """Masked-lane immunity pin: quantum-padding filler lanes hold
+    benign finite values (no NaN/inf arithmetic anywhere in the fused
+    pass), and scribbling garbage into them changes nothing — the
+    finite sentinel masking keeps every winner and total bitwise."""
+    grid = designs.macro_grid(rows=(64, 256), cols=(256,), adc_bits=(4, 6),
+                              dac_bits=(2,), m_mux=(1, 16), tech_nm=(22,))
+    layers = [workloads.dense("a", 1, 130, 37), workloads.dense("b", 2, 9, 5)]
+    per_bit = np.full(len(grid), 1.5)
+
+    def price(poison: bool):
+        (net,) = mapping.network_grid(layers, grid, schedules=("ws", "os"))
+        assert net.pad_lanes > 0
+        if poison:
+            pad = ~net.valid
+            for f in ("k_cols", "k_macros", "c_un", "fx_un", "fy_un",
+                      "row_un", "mac_un", "dup_macros", "n_spatial_temporal"):
+                getattr(net.cand, f)[pad] = 997
+        priced = dse._price_buckets([net], grid, "energy", None, per_bit,
+                                    1 << 20, 4000.0)
+        costs = mapping.evaluate_network_grid(net, grid)
+        return priced, costs
+
+    clean, costs_clean = price(poison=False)
+    dirty, costs_dirty = price(poison=True)
+    # every fused column is finite even on (poisoned) pad lanes
+    for costs in (costs_clean, costs_dirty):
+        for f in _ENERGY_FIELDS:
+            assert np.isfinite(getattr(costs.macro_energy, f)).all()
+    for (g0, i0, t0, c0), (g1, i1, t1, c1) in zip(clean, dirty):
+        assert (i0 == i1).all()
+        assert (t0 == t1).all()
+        assert (c0 == c1).all()
+
+
+def test_cache_info_reports_lattice_stats():
+    grid = designs.macro_grid(rows=(64,), cols=(256,), adc_bits=(5,),
+                              dac_bits=(2,), m_mux=(1,), tech_nm=(22,))
+    dse.cache_clear()
+    layers = workloads.deep_autoencoder()
+    dse.sweep("dae", layers, grid)
+    info = dse.cache_info()
+    assert info["lattice_slots"] == 5            # 5 distinct dense shapes
+    assert info["lattice_layers"] == len(layers)
+    assert 0.0 <= info["padding_waste"] < 1.0
+    dse.cache_clear()
+    assert dse.cache_info()["lattice_slots"] == 0
+
+
 def test_sweep_matches_table2_designs():
     """from_macros path: sweeping the hand-built Table II designs equals
     map_network on each, bitwise (no macro_grid involved)."""
