@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import tempfile
 from pathlib import Path
 
 import numpy as np
@@ -167,7 +169,14 @@ def regen_artifact(path: Path = ARTIFACT) -> dict:
                  "--regen-artifact",
     }
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    # tmp + rename: a crash mid-regen can't truncate the committed file
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".acc-",
+                               suffix=".tmp")
+    with os.fdopen(fd, "w") as f:
+        f.write(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
     return doc
 
 

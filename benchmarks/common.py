@@ -1,12 +1,69 @@
 """Shared benchmark plumbing: CSV rows in the harness format
-``name,us_per_call,derived``."""
+``name,us_per_call,derived``, async-safe timing helpers, and atomic
+artifact writes."""
 
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
+import tempfile
 import time
 from typing import Callable
 
 ROWS: list[tuple[str, float, str]] = []
+
+
+def sync(x):
+    """Block until every jax array reachable from ``x`` has a value.
+
+    jax dispatch is asynchronous: stopping a ``perf_counter`` clock
+    without forcing the result under-reports wall time by whatever is
+    still in flight.  Walks containers and dataclasses; NumPy arrays
+    and scalars pass through untouched.  Returns ``x`` so it can wrap a
+    call expression inline.
+    """
+    seen: set[int] = set()
+
+    def walk(v) -> None:
+        if id(v) in seen:
+            return
+        seen.add(id(v))
+        ready = getattr(v, "block_until_ready", None)
+        if ready is not None:
+            ready()
+        elif dataclasses.is_dataclass(v) and not isinstance(v, type):
+            for f in dataclasses.fields(v):
+                walk(getattr(v, f.name))
+        elif isinstance(v, dict):
+            for item in v.values():
+                walk(item)
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                walk(item)
+
+    walk(x)
+    return x
+
+
+def write_json_atomic(path: str, obj) -> None:
+    """Write ``obj`` as JSON via tmp-file + rename, so an interrupted
+    benchmark can never leave a truncated artifact behind."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=2, sort_keys=True)
+            f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -18,7 +75,8 @@ def timed(name: str, fn: Callable[[], str], repeats: int = 1) -> None:
     t0 = time.perf_counter()
     derived = ""
     for _ in range(repeats):
-        derived = fn()
+        # force any in-flight jax work before the clock stops
+        derived = sync(fn())
     us = (time.perf_counter() - t0) / repeats * 1e6
     emit(name, us, derived)
 

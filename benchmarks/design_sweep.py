@@ -16,8 +16,29 @@ With ``--networks`` the whole workload suite is priced in ONE
 workload-fused pass (``dse.sweep_networks``: every distinct layer
 shape of every network shares one padded lane lattice and one jit
 compile) and a ``BENCH_sweep.json`` timing artifact is written — cold
-and warm wall time, kernel dispatch/compile counters and lattice
-padding stats — seeding the perf trajectory CI tracks.
+and warm wall time, vectorized lattice-build time, kernel
+dispatch/compile counters, compilation-cache state and lattice padding
+stats — one point of the committed ``BENCH_trajectory.json`` history
+(see ``benchmarks.trajectory``).  Timing sections block on the sweep
+result before stopping the clock, and the artifact is written
+atomically (tmp + rename).
+
+Env knobs
+---------
+``REPRO_XLA_CACHE_DIR``
+    Persistent XLA compilation-cache directory (default
+    ``~/.cache/repro/jax``; ``off``/``none``/``0``/empty disables).
+    With a warm cache, "cold" sweeps skip their XLA compiles entirely —
+    across benchmark runs and CI jobs.
+``REPRO_SWEEP_SHARDS``
+    Lane-axis shard count for the fused grid kernel (``auto`` = one
+    shard per jax device, an integer is clamped to the device count,
+    default 1).  The padded candidate-lane axis is partitioned over a
+    1-D device mesh via ``shard_map``; output is bitwise identical to
+    the single-device path.  E.g. on a multi-core host:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    ``REPRO_SWEEP_SHARDS=auto python -m benchmarks.design_sweep
+    --networks``.
 
 Run:  PYTHONPATH=src python -m benchmarks.design_sweep \
           [--smoke] [--dataflows] [--networks] [--out BENCH_sweep.json]
@@ -26,14 +47,14 @@ Run:  PYTHONPATH=src python -m benchmarks.design_sweep \
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
 
-from repro.core import designs, dse, energy, workloads
+from repro.core import designs, dse, energy, mapping, workloads
+from repro.core.compilecache import compilation_cache_info
 
-from .common import emit, timed
+from .common import emit, sync, timed, write_json_atomic
 
 
 def make_grid(smoke: bool = False) -> designs.MacroBatch:
@@ -127,7 +148,7 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
     dse.cache_clear()
     energy.grid_kernel_reset()
     t0 = time.perf_counter()
-    results = dse.sweep_networks(nets, grid, schedules=schedules)
+    results = sync(dse.sweep_networks(nets, grid, schedules=schedules))
     t_cold = time.perf_counter() - t0
     kernel_cold = energy.grid_kernel_info()
     cache = dse.cache_info()
@@ -135,8 +156,23 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
     t_warm = float("inf")
     for _ in range(3):
         t0 = time.perf_counter()
-        dse.sweep_networks(nets, grid, schedules=schedules)
+        sync(dse.sweep_networks(nets, grid, schedules=schedules))
         t_warm = min(t_warm, time.perf_counter() - t0)
+
+    # isolated lattice-build wall time (the vectorized candidate_grid
+    # path), rebuilt fresh per distinct shape — the component the cold
+    # time above amortizes through the lattice memo
+    shape_layers: list = []
+    seen: set = set()
+    for _, layers in nets:
+        for l in layers:
+            if l.imc_eligible and dse._shape_key(l) not in seen:
+                seen.add(dse._shape_key(l))
+                shape_layers.append(l)
+    t0 = time.perf_counter()
+    for l in shape_layers:
+        mapping.candidate_grid(l, grid, schedules=schedules)
+    t_lattice = time.perf_counter() - t0
 
     per_network = {}
     for res in results:
@@ -160,16 +196,18 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
         "schedules": list(results[0].schedules),
         "cold_s": t_cold,
         "warm_s": t_warm,
+        "lattice_build_s": t_lattice,
         "kernel_calls_cold": kernel_cold["calls"],
         "kernel_distinct_shapes_cold": kernel_cold["distinct_shapes"],
+        "kernel_sharded_calls_cold": kernel_cold["sharded_calls"],
+        "lane_shards": energy.lane_shards(),
+        "compilation_cache": compilation_cache_info(),
         "lattice_slots": cache["lattice_slots"],
         "lattice_layers": cache["lattice_layers"],
         "padding_waste": cache["padding_waste"],
         "per_network": per_network,
     }
-    with open(out, "w") as f:
-        json.dump(artifact, f, indent=2, sort_keys=True)
-        f.write("\n")
+    write_json_atomic(out, artifact)
     print(f"# wrote {out}: cold={t_cold:.3f}s warm={t_warm:.3f}s "
           f"compiles~{kernel_cold['distinct_shapes']} "
           f"(dispatches={kernel_cold['calls']}) "

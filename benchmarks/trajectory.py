@@ -1,0 +1,85 @@
+"""Tracked perf trajectory: fold ``BENCH_sweep.json`` points into the
+committed ``BENCH_trajectory.json`` history.
+
+Each entry is one commit's fused-sweep timing point (cold/warm wall,
+lattice-build time, compile-count proxy, padding waste, shard count),
+so perf regressions show up as a diff in review instead of vanishing
+with the CI artifact.  Appending is idempotent per commit: re-running
+on the same SHA replaces that entry in place.  The file is written
+atomically (tmp + rename).
+
+Run:  PYTHONPATH=src python -m benchmarks.trajectory \
+          [--artifact BENCH_sweep.json] [--traj BENCH_trajectory.json] \
+          [--commit SHA] [--date ISO8601]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+
+from .common import write_json_atomic
+
+#: artifact fields carried into the trajectory (per_network and other
+#: bulky detail stays in the per-commit artifact upload)
+_FIELDS = ("benchmark", "smoke", "designs", "networks", "schedules",
+           "cold_s", "warm_s", "lattice_build_s", "kernel_calls_cold",
+           "kernel_distinct_shapes_cold", "kernel_sharded_calls_cold",
+           "lane_shards", "lattice_slots", "padding_waste")
+
+
+def _head_commit() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=30)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def append(artifact_path: str = "BENCH_sweep.json",
+           traj_path: str = "BENCH_trajectory.json",
+           commit: str | None = None,
+           date: str | None = None) -> dict:
+    """Fold one artifact into the trajectory; return the new entry."""
+    with open(artifact_path) as f:
+        artifact = json.load(f)
+    entry = {"commit": commit or _head_commit()}
+    if date:
+        entry["date"] = date
+    entry.update({k: artifact[k] for k in _FIELDS if k in artifact})
+    cc = artifact.get("compilation_cache") or {}
+    entry["compile_cache_entries"] = cc.get("entries", 0)
+
+    history: list[dict] = []
+    if os.path.exists(traj_path):
+        with open(traj_path) as f:
+            history = json.load(f)["entries"]
+    history = [e for e in history if e.get("commit") != entry["commit"]]
+    history.append(entry)
+    write_json_atomic(traj_path, {
+        "doc": "fused design-sweep perf history, one entry per commit "
+               "(benchmarks/trajectory.py appends, CI keeps it current)",
+        "entries": history,
+    })
+    print(f"# trajectory: {len(history)} entries -> {traj_path} "
+          f"(latest {entry['commit'][:12]} cold={entry.get('cold_s', 0):.3f}s"
+          f" warm={entry.get('warm_s', 0):.3f}s)")
+    return entry
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifact", default="BENCH_sweep.json")
+    ap.add_argument("--traj", default="BENCH_trajectory.json")
+    ap.add_argument("--commit", default=None,
+                    help="commit SHA for the entry (default: git HEAD)")
+    ap.add_argument("--date", default=None,
+                    help="ISO8601 timestamp recorded with the entry")
+    args = ap.parse_args()
+    append(artifact_path=args.artifact, traj_path=args.traj,
+           commit=args.commit, date=args.date)

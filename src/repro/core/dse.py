@@ -283,19 +283,26 @@ def best_mapping_batched(layer: Layer, macro: IMCMacro, mem: MemoryModel,
 
 _ENGINES = {"batch": best_mapping_batched, "scalar": best_mapping_scalar}
 
-#: layer-result memo cache: (layer signature, macro, mem, objective, alpha)
-_CACHE: dict[tuple, LayerResult] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+#: layer-result memo cache: (layer signature, macro, mem, objective,
+#: alpha) -> LayerResult.  LRU-bounded: a long-running process sweeping
+#: many layers over many macros (the per-design loop engines) would
+#: otherwise grow this without limit.  Hits refresh recency.
+_CACHE: "collections.OrderedDict[tuple, LayerResult]" = \
+    collections.OrderedDict()
+_CACHE_MAX = 4096
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 #: per-shape union-lattice memo: (shape, designs signature, schedules,
-#: max_candidates) -> mapping.MappingGrid.  Lattice construction is pure
-#: Python over the knob ranges, so repeated sweeps over the same design
-#: grid (the warm path of the fused engine) skip it entirely.  Bounded:
-#: grids carry (D, C) legality masks (MBs at D >= 1000), so beyond
-#: ``_LATTICE_CACHE_MAX`` entries the oldest are evicted FIFO — a
-#: long-lived process refining many different design grids stays flat.
-_LATTICE_CACHE: dict[tuple, object] = {}
+#: max_candidates) -> mapping.MappingGrid.  Repeated sweeps over the
+#: same design grid (the warm path of the fused engine) skip lattice
+#: construction entirely.  Bounded LRU: grids carry (D, C) legality
+#: masks (MBs at D >= 1000), so beyond ``_LATTICE_CACHE_MAX`` entries
+#: the least-recently-used are evicted — a long-lived process refining
+#: many different design grids stays flat.
+_LATTICE_CACHE: "collections.OrderedDict[tuple, object]" = \
+    collections.OrderedDict()
 _LATTICE_CACHE_MAX = 512
+_LATTICE_CACHE_STATS = {"evictions": 0}
 #: fused-lattice bookkeeping: distinct shape slots priced, eligible
 #: layers they covered, and the lane/padding-waste tally of every
 #: bucket dispatched (see ``cache_info``).
@@ -322,6 +329,8 @@ def cache_clear() -> None:
     _CACHE.clear()
     _LATTICE_CACHE.clear()
     _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    _CACHE_STATS["evictions"] = 0
+    _LATTICE_CACHE_STATS["evictions"] = 0
     for k in _LATTICE_STATS:
         _LATTICE_STATS[k] = 0
 
@@ -330,11 +339,16 @@ def cache_info() -> dict[str, int | float]:
     """Layer-result cache stats plus fused-lattice stats:
     ``lattice_slots`` distinct shape slots priced by sweeps (repeated
     shapes share a slot), ``lattice_layers`` eligible layers those
-    slots covered, and ``padding_waste`` — the fraction of dispatched
-    lanes that were quantum-padding filler."""
+    slots covered, ``padding_waste`` — the fraction of dispatched
+    lanes that were quantum-padding filler — and the LRU bookkeeping of
+    both memo caches (``size``/``evictions`` for the layer-result
+    cache, ``lattice_size``/``lattice_evictions`` for the union-lattice
+    memo)."""
     lanes = _LATTICE_STATS["lattice_lanes"]
     waste = (_LATTICE_STATS["lattice_pad_lanes"] / lanes) if lanes else 0.0
     return {"size": len(_CACHE), **_CACHE_STATS,
+            "lattice_size": len(_LATTICE_CACHE),
+            "lattice_evictions": _LATTICE_CACHE_STATS["evictions"],
             "lattice_slots": _LATTICE_STATS["lattice_slots"],
             "lattice_layers": _LATTICE_STATS["lattice_layers"],
             "padding_waste": waste}
@@ -365,11 +379,15 @@ def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
     hit = _CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
+        _CACHE.move_to_end(key)
         return hit if hit.layer.name == layer.name \
             else dataclasses.replace(hit, layer=layer)
     _CACHE_STATS["misses"] += 1
     res = _ENGINES[engine](layer, macro, mem, objective=objective,
                            alpha=alpha, schedules=scheds)
+    while len(_CACHE) >= _CACHE_MAX:
+        _CACHE.popitem(last=False)
+        _CACHE_STATS["evictions"] += 1
     _CACHE[key] = res
     return res
 
@@ -502,8 +520,11 @@ def _grid_for(layer: Layer, designs: MacroBatch, scheds,
         grid = candidate_grid(layer, designs, max_candidates=max_candidates,
                               schedules=scheds)
         while len(_LATTICE_CACHE) >= _LATTICE_CACHE_MAX:
-            _LATTICE_CACHE.pop(next(iter(_LATTICE_CACHE)))
+            _LATTICE_CACHE.popitem(last=False)
+            _LATTICE_CACHE_STATS["evictions"] += 1
         _LATTICE_CACHE[key] = grid
+    else:
+        _LATTICE_CACHE.move_to_end(key)
     return grid
 
 
@@ -573,13 +594,20 @@ def _price_shapes(shape_layers: Sequence[Layer], designs: MacroBatch,
                   buffer_bytes: int, dram: float, scheds) -> list[tuple]:
     """Build (cached) per-shape lattices, fuse them into buckets, and
     price everything; one entry per distinct shape, input order."""
-    from .mapping import network_grid
+    from .energy import lane_shards
+    from .mapping import PAD_QUANTUM, network_grid
     grids = [_grid_for(l, designs, scheds) for l in shape_layers]
     max_lanes = max((len(g) for g in grids),
                     default=1)
     max_lanes = max(max_lanes, _BUCKET_ELEMS // max(1, len(designs)))
+    # with a sharded lane axis every bucket's padded width must divide
+    # over the mesh; lcm keeps the quantum a PAD_QUANTUM multiple so
+    # unsharded runs see the exact same bucket shapes as before
+    shards = lane_shards()
+    pad_q = PAD_QUANTUM if shards <= 1 else math.lcm(PAD_QUANTUM, shards)
     buckets = network_grid(shape_layers, designs, schedules=scheds,
-                           grids=grids, max_lanes=max_lanes)
+                           grids=grids, pad_quantum=pad_q,
+                           max_lanes=max_lanes)
     return _price_buckets(buckets, designs, objective, alpha, per_bit,
                           buffer_bytes, dram)
 
@@ -610,6 +638,10 @@ def sweep_networks(networks: Sequence[tuple[str, Sequence[Layer]]],
     """
     if objective not in OBJECTIVES:
         raise KeyError(objective)
+    # persist XLA executables across processes (no-op after first call;
+    # env knob REPRO_XLA_CACHE_DIR — see core.compilecache)
+    from .compilecache import enable_compilation_cache
+    enable_compilation_cache()
     scheds = _normalize_schedules(schedules)
     per_bit, buffer_bytes, dram = _mem_pricing(designs, mem)
     n_designs = len(designs)

@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 
 import numpy as np
 
@@ -454,32 +455,73 @@ def tile_energy_batch(macro: IMCMacro,
 # evaluated on the returned NumPy arrays in the scalar association.)
 
 _GRID_KERNEL = None          # lazily-built jax.jit closure
+_RAW_GRID_KERNEL = None      # the unjitted kernel fn (shared with shard_map)
+
+#: lane-axis shard count for the fused grid kernel.  ``None`` = not yet
+#: resolved; resolved lazily from ``REPRO_SWEEP_SHARDS`` ("auto" = all
+#: jax devices, an integer = min(n, devices), default/invalid = 1) so
+#: importing the module never touches the jax runtime.
+_LANE_SHARDS: dict = {"n": None}
+#: (shards, tile_rank) -> jitted shard_map closure
+_SHARDED_GRID_KERNELS: dict = {}
+
+
+def lane_shards() -> int:
+    """Active lane-axis shard count for :func:`tile_energy_grid`."""
+    n = _LANE_SHARDS["n"]
+    if n is None:
+        spec = os.environ.get("REPRO_SWEEP_SHARDS", "1").strip().lower()
+        import jax
+
+        avail = jax.device_count()
+        if spec == "auto":
+            n = avail
+        else:
+            try:
+                n = int(spec)
+            except ValueError:
+                n = 1
+            n = min(n, avail)
+        n = max(1, n)
+        _LANE_SHARDS["n"] = n
+    return n
+
+
+def set_lane_shards(n: int | None) -> None:
+    """Override the lane shard count (``None`` re-reads the env on the
+    next call).  Values above ``jax.device_count()`` are clamped lazily
+    by the sharded dispatch, invalid counts fall back to unsharded."""
+    _LANE_SHARDS["n"] = None if n is None else max(1, int(n))
 
 #: dispatch/compile bookkeeping for the fused grid kernel.  jax caches
 #: compiled executables per argument-shape signature, so the number of
 #: distinct signatures seen is a faithful proxy for XLA compile count —
 #: the quantity the workload-axis fused sweep exists to minimize
 #: (``BENCH_sweep.json`` records both).
-_GRID_KERNEL_STATS = {"calls": 0}
+_GRID_KERNEL_STATS = {"calls": 0, "sharded_calls": 0}
 _GRID_KERNEL_SHAPES: set[tuple] = set()
 
 
 def grid_kernel_info() -> dict[str, int]:
-    """Fused-kernel dispatch stats: total ``calls`` and
-    ``distinct_shapes`` (compile-count proxy) since the last reset."""
+    """Fused-kernel dispatch stats: total ``calls``,
+    ``distinct_shapes`` (compile-count proxy) and ``sharded_calls``
+    (dispatches that went through the shard_map path) since the last
+    reset."""
     return {"calls": _GRID_KERNEL_STATS["calls"],
-            "distinct_shapes": len(_GRID_KERNEL_SHAPES)}
+            "distinct_shapes": len(_GRID_KERNEL_SHAPES),
+            "sharded_calls": _GRID_KERNEL_STATS["sharded_calls"]}
 
 
 def grid_kernel_reset() -> None:
     _GRID_KERNEL_STATS["calls"] = 0
+    _GRID_KERNEL_STATS["sharded_calls"] = 0
     _GRID_KERNEL_SHAPES.clear()
 
 
-def _grid_kernel():
-    global _GRID_KERNEL
-    if _GRID_KERNEL is None:
-        import jax
+def _raw_grid_kernel():
+    """The pure elementwise kernel fn (built once, jit-agnostic)."""
+    global _RAW_GRID_KERNEL
+    if _RAW_GRID_KERNEL is None:
         import jax.numpy as jnp
 
         def kernel(analog, mmux1, rows, d1, bw, m, cc_bs,
@@ -538,8 +580,62 @@ def _grid_kernel():
             return (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write,
                     macs, x_adc, x_dac)
 
-        _GRID_KERNEL = jax.jit(kernel)
+        _RAW_GRID_KERNEL = kernel
+    return _RAW_GRID_KERNEL
+
+
+def _grid_kernel():
+    global _GRID_KERNEL
+    if _GRID_KERNEL is None:
+        import jax
+
+        from .compilecache import enable_compilation_cache
+        enable_compilation_cache()
+        _GRID_KERNEL = jax.jit(_raw_grid_kernel())
     return _GRID_KERNEL
+
+
+def _sharded_grid_kernel(shards: int, tile_rank: int):
+    """shard_map execution path: the lane (candidate) axis of the fused
+    grid kernel is partitioned over ``shards`` devices of a 1-D mesh,
+    design columns are replicated.  The kernel is purely elementwise,
+    so each device computes a disjoint lane slab with the identical
+    float ops the unsharded jit runs — the gathered result is bitwise
+    equal (pinned by ``tests/core/test_sharded_sweep.py``).
+
+    ``tile_rank`` is the rank the tile arguments reach the kernel with
+    (1 for (C,) candidate rows, 3 for (L, 1, C) layer stacks).  All ten
+    outputs are broadcast to the common face *inside* the mapped fn so
+    the out_specs stay uniform lane-last.
+    """
+    key = (shards, tile_rank)
+    fn = _SHARDED_GRID_KERNELS.get(key)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from .compilecache import enable_compilation_cache
+        enable_compilation_cache()
+        kernel = _raw_grid_kernel()
+
+        def wrapped(*args):
+            return tuple(jnp.broadcast_arrays(*kernel(*args)))
+
+        mesh = Mesh(np.asarray(jax.devices()[:shards]), ("lane",))
+        col_spec = P(None, None)                       # (D, 1) constants
+        if tile_rank == 1:
+            tile_spec, out_spec = P("lane"), P(None, "lane")
+        else:
+            tile_spec = P(None, None, "lane")
+            out_spec = P(None, None, "lane")
+        fn = jax.jit(shard_map(
+            wrapped, mesh=mesh,
+            in_specs=(col_spec,) * 19 + (tile_spec,) * 5 + (P(),),
+            out_specs=(out_spec,) * 10, check_rep=False))
+        _SHARDED_GRID_KERNELS[key] = fn
+    return fn
 
 
 def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
@@ -586,10 +682,28 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
     _GRID_KERNEL_STATS["calls"] += 1
     _GRID_KERNEL_SHAPES.add((n_inputs.shape, len(designs.rows)))
 
+    # lane-sharded path: only when the lane axis divides evenly over the
+    # mesh and every tile arg shares the full lane shape (the fused
+    # sweep always satisfies both via the shard-aware pad quantum);
+    # anything else falls back to the single-device jit.
+    shards = lane_shards()
+    kern = None
+    if shards > 1 and n_inputs.shape[-1] % shards == 0 \
+            and rows_used.shape == n_inputs.shape \
+            and cols_used.shape == n_inputs.shape:
+        import jax
+
+        if shards <= jax.device_count():
+            kern = _sharded_grid_kernel(
+                shards, 1 if n_inputs.ndim == 1 else 3)
+            _GRID_KERNEL_STATS["sharded_calls"] += 1
+    if kern is None:
+        kern = _grid_kernel()
+
     cst = _design_constants(designs)
     col = lambda a: a[:, None]                     # (D,) -> (D, 1)
     with enable_x64():
-        parts = _grid_kernel()(
+        parts = kern(
             col(cst["analog"]), col(cst["mmux1"]), col(cst["rows"]),
             col(cst["d1"]), col(cst["bw"]), col(cst["m"]), col(cst["cc_bs"]),
             col(cst["e_wl_line"]), col(cst["e_bl_word"]), col(cst["p_logic"]),

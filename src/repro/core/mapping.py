@@ -494,24 +494,18 @@ def _pow2_member(u: np.ndarray, dim: int | np.ndarray,
             | ((u == dim) & (dim <= cap2)))
 
 
-def candidate_grid(layer: Layer, designs,
-                   max_candidates: int = 4096,
-                   schedules=None) -> MappingGrid:
-    """Build the union mapping lattice of ``layer`` over a
-    :class:`repro.core.designs.MacroBatch`, with per-design legality.
+def candidate_grid_loop(layer: Layer, designs,
+                        max_candidates: int = 4096,
+                        schedules=None) -> MappingGrid:
+    """Reference (loop) builder for the union mapping lattice.
 
-    Union axes are assembled from the *distinct* knob values in the
-    batch (never per design), so construction cost scales with the knob
-    ranges, not with D.  Per-design legality is the vectorized
-    membership test of every lattice component against that design's
-    caps — by construction the masked rows reproduce
-    ``enumerate_mappings(layer, designs.macro_at(d))`` element for
-    element (property-tested in ``tests/core/test_grid_parity.py``),
-    including the ``max_candidates`` truncation, applied per design in
-    enumeration order via a cumulative count.  ``schedules`` crosses the
-    dataflow axis into the candidate axis (mapping outer, schedule
-    inner) after truncation; legality is schedule-independent, so the
-    mask rows simply repeat along the new inner axis.
+    The original Python-loop construction of :func:`candidate_grid`,
+    kept verbatim as the enumeration-order oracle: the vectorized
+    builder must reproduce its output bit-for-bit (every candidate
+    field, the legality mask, the ``max_candidates`` truncation, the
+    schedule crossing — property-tested in
+    ``tests/core/test_lattice_vectorized.py``).  Never called on the
+    hot path.
     """
     scheds = _normalize_schedules(schedules)
     k = layer.dim("K")
@@ -582,7 +576,9 @@ def candidate_grid(layer: Layer, designs,
         dup_macros=np.where(is_dup, mac_un, 1),
         n_spatial_temporal=nst)
 
-    # --- per-design legality: membership of every component ------------------
+    # per-design legality, original form: the full (D, C) membership
+    # test with no distinct-knob dedup (the vectorized builder dedups;
+    # the oracle keeps the verbatim original cost and shape)
     d1_d = designs.d1[:, None]
     rows_d = designs.rows[:, None]
     nm_d = designs.n_macros[:, None]
@@ -602,6 +598,227 @@ def candidate_grid(layer: Layer, designs,
     if len(cand) != legal.shape[1]:
         legal = np.repeat(legal, len(scheds), axis=1)
     return MappingGrid(cand=cand, legal=legal)
+
+
+def _assemble_grid(layer: Layer, designs, scheds, max_candidates: int,
+                   k_cols: np.ndarray, c_un: np.ndarray, fx_un: np.ndarray,
+                   fy_un: np.ndarray, mac_dim: np.ndarray,
+                   mac_un: np.ndarray) -> MappingGrid:
+    """Shared tail of the loop/vectorized lattice builders: derived
+    candidate columns, per-design legality (computed once per *distinct*
+    legality-relevant design triple, then gathered), ``max_candidates``
+    truncation, and the schedule crossing."""
+    k = layer.dim("K")
+    spatial_total = math.prod(layer.dim(d) for d in MACRO_DUP_DIMS)
+    is_k = mac_dim == _MAC_K
+    is_dup = (mac_dim != _MAC_NONE) & ~is_k
+    dup_dim_size = np.ones(len(mac_dim), dtype=np.int64)
+    nst = np.full(len(mac_dim), spatial_total, dtype=np.int64)
+    for code, name in _MAC_NAMES.items():
+        sel = mac_dim == code
+        if not sel.any():
+            continue
+        dim_sz = layer.dim(name)
+        dup_dim_size[sel] = dim_sz
+        nst[sel] = (-(-dim_sz // mac_un[sel])) * (spatial_total // dim_sz)
+    cand = MappingBatch(
+        k_cols=k_cols, k_macros=np.where(is_k, mac_un, 1),
+        c_un=c_un, fx_un=fx_un, fy_un=fy_un,
+        row_un=c_un * fx_un * fy_un,
+        mac_dim=mac_dim, mac_un=mac_un,
+        dup_macros=np.where(is_dup, mac_un, 1),
+        n_spatial_temporal=nst)
+
+    # --- per-design legality: membership of every component ------------------
+    # Legality only sees (d1, rows, n_macros); compute the mask on the
+    # distinct triples (U rows, typically 10-50x fewer than D designs)
+    # and gather — boolean rows, so the gather is exactly identity.
+    d1_a = np.asarray(designs.d1, dtype=np.int64)
+    rows_a = np.asarray(designs.rows, dtype=np.int64)
+    nm_a = np.asarray(designs.n_macros, dtype=np.int64)
+    # pack the triple into one int64 key: 1-D unique sidesteps the
+    # row-sort of np.unique(axis=0); uniq order is irrelevant because
+    # the gather goes through ``inv`` either way
+    key = (d1_a << 42) | (rows_a << 21) | nm_a
+    uniq_key, first, inv = np.unique(key, return_index=True,
+                                     return_inverse=True)
+    d1_d = d1_a[first][:, None]
+    rows_d = rows_a[first][:, None]
+    nm_d = nm_a[first][:, None]
+    legal = _pow2_member(k_cols, k, d1_d)
+    legal &= _pow2_member(c_un, layer.dim("C"), rows_d)
+    cap_fx = rows_d // c_un
+    legal &= _pow2_member(fx_un, layer.dim("FX"), cap_fx)
+    legal &= _pow2_member(fy_un, layer.dim("FY"), cap_fx // fx_un)
+    ksplit_dim = np.maximum(1, k // k_cols)
+    mac_ok = np.where(
+        mac_dim == _MAC_NONE, True,
+        np.where(is_k, _pow2_member(mac_un, ksplit_dim, nm_d),
+                 _pow2_member(mac_un, dup_dim_size, nm_d)))
+    legal &= mac_ok
+    legal &= np.cumsum(legal, axis=1) <= max_candidates
+    legal = legal[inv]
+    cand = _with_schedule_axis(cand, scheds)
+    if len(cand) != legal.shape[1]:
+        legal = np.repeat(legal, len(scheds), axis=1)
+    return MappingGrid(cand=cand, legal=legal)
+
+
+def _unroll_pool(dim: int, caps: np.ndarray) -> np.ndarray:
+    """Sorted superset of ``union(_unroll_candidates(dim, cap) for cap
+    in caps)``: {1} | {powers of two <= the largest effective cap} |
+    {each effective cap} | {dim}.  Values outside the true union are
+    culled afterwards by the :func:`_pow2_member` membership test, so a
+    superset is all the crossing builders need."""
+    caps = np.asarray(caps, dtype=np.int64).ravel()
+    if len(caps) == 0:
+        return np.asarray([1], dtype=np.int64)
+    caps_eff = np.maximum(1, np.minimum(dim, caps))
+    hi = int(caps_eff.max())
+    pows = (1 << np.arange(max(1, hi).bit_length(), dtype=np.int64))
+    return np.unique(np.concatenate([
+        np.asarray([1, dim], dtype=np.int64), pows, caps_eff]))
+
+
+def _member_union(u: np.ndarray, dim, caps: np.ndarray) -> np.ndarray:
+    """(|u|,) bool: ``u`` in the union of ``_unroll_candidates(dim,
+    cap)`` over ``caps`` (vectorized over both axes)."""
+    caps = np.asarray(caps, dtype=np.int64).ravel()
+    if len(caps) == 0:
+        return np.zeros(len(u), dtype=bool)
+    return _pow2_member(u[None, :], dim, caps[:, None]).any(axis=0)
+
+
+def _cum0(counts: np.ndarray) -> np.ndarray:
+    """Exclusive prefix sum: segment start offsets for ``counts``."""
+    out = np.zeros(len(counts) + 1, dtype=np.int64)
+    np.cumsum(counts, out=out[1:])
+    return out[:-1]
+
+
+def candidate_grid(layer: Layer, designs,
+                   max_candidates: int = 4096,
+                   schedules=None) -> MappingGrid:
+    """Build the union mapping lattice of ``layer`` over a
+    :class:`repro.core.designs.MacroBatch`, with per-design legality.
+
+    Union axes are assembled from the *distinct* knob values in the
+    batch (never per design), so construction cost scales with the knob
+    ranges, not with D.  Per-design legality is the vectorized
+    membership test of every lattice component against that design's
+    caps — by construction the masked rows reproduce
+    ``enumerate_mappings(layer, designs.macro_at(d))`` element for
+    element (property-tested in ``tests/core/test_grid_parity.py``),
+    including the ``max_candidates`` truncation, applied per design in
+    enumeration order via a cumulative count.  ``schedules`` crosses the
+    dataflow axis into the candidate axis (mapping outer, schedule
+    inner) after truncation; legality is schedule-independent, so the
+    mask rows simply repeat along the new inner axis.
+
+    Construction is fully array-based: every union axis (k_col
+    candidates, row triples, macro-dup and K-split options) is a
+    candidate *pool* filtered by the same :func:`_pow2_member`
+    predicate that defines legality, and the k_col x row-triple x
+    macro-option crossing is pure ``repeat``/gather index arithmetic —
+    no per-candidate Python.  :func:`candidate_grid_loop` keeps the
+    original nested-loop construction as the bitwise enumeration-order
+    oracle.
+    """
+    scheds = _normalize_schedules(schedules)
+    k = layer.dim("K")
+    c_dim, fx_dim, fy_dim = (layer.dim("C"), layer.dim("FX"),
+                             layer.dim("FY"))
+    d1s = np.unique(np.asarray(designs.d1, dtype=np.int64))
+    rows_vals = np.unique(np.asarray(designs.rows, dtype=np.int64))
+    nm_vals = np.unique(np.asarray(designs.n_macros, dtype=np.int64))
+    nm_gt1 = nm_vals[nm_vals > 1]
+
+    # --- k_col union: pool + membership (sorted ascending) -------------------
+    kc_pool = _unroll_pool(k, d1s)
+    kcs = kc_pool[_member_union(kc_pool, k, d1s)]
+
+    # --- row-triple union: 4-D (rows, c, fx, fy) membership ------------------
+    # The fx/fy caps are the floor quotients rows//c (then //fx); their
+    # pools derive from every quotient the crossing can produce.
+    c_pool = _unroll_pool(c_dim, rows_vals)
+    rem_pool = np.unique(rows_vals[:, None] // c_pool[None, :])
+    fx_pool = _unroll_pool(fx_dim, rem_pool)
+    rem2_pool = np.unique(rem_pool[:, None] // fx_pool[None, :])
+    fy_pool = _unroll_pool(fy_dim, rem2_pool)
+    rows_b = rows_vals[:, None, None, None]
+    c_b = c_pool[None, :, None, None]
+    fx_b = fx_pool[None, None, :, None]
+    fy_b = fy_pool[None, None, None, :]
+    ok = _pow2_member(c_b, c_dim, rows_b)
+    rem_b = rows_b // c_b
+    ok = ok & _pow2_member(fx_b, fx_dim, rem_b)
+    ok = ok & _pow2_member(fy_b, fy_dim, rem_b // fx_b)
+    # any-rows + row-major nonzero == sorted(set(triples)) lexicographic
+    ci, fxi, fyi = np.nonzero(ok.any(axis=0))
+    row_c, row_fx, row_fy = c_pool[ci], fx_pool[fxi], fy_pool[fyi]
+    n_rows = len(row_c)
+
+    # --- macro options: shared duplication part + per-k_col K splits ---------
+    # sorted(dup_opts) == codes ascending (OX<OY<G), u ascending within.
+    dup_codes_l, dup_uns_l = [], []
+    for d in MACRO_DUP_DIMS:                     # 3 fixed iterations
+        pool = _unroll_pool(layer.dim(d), nm_gt1)
+        us = pool[_member_union(pool, layer.dim(d), nm_gt1) & (pool > 1)]
+        dup_codes_l.append(np.full(len(us), _MAC_CODES[d], dtype=np.int64))
+        dup_uns_l.append(us)
+    base_codes = np.concatenate(
+        [np.asarray([_MAC_NONE], dtype=np.int64)] + dup_codes_l)
+    base_uns = np.concatenate(
+        [np.asarray([1], dtype=np.int64)] + dup_uns_l)
+    n_base = len(base_codes)
+
+    ksplit_dims = np.maximum(1, k // kcs)        # (|kcs|,)
+    if len(nm_gt1):
+        ks_pool = np.unique(np.concatenate([
+            np.asarray([1], dtype=np.int64),
+            1 << np.arange(int(np.maximum(nm_gt1.max(), 1)).bit_length(),
+                           dtype=np.int64),
+            nm_gt1, ksplit_dims]))
+        # (|kcs|, |pool|): u in union over nm of cands(k//k_col, nm), u>1
+        ks_member = _pow2_member(
+            ks_pool[None, :, None], ksplit_dims[:, None, None],
+            nm_gt1[None, None, :]).any(axis=2) & (ks_pool[None, :] > 1)
+    else:
+        ks_pool = np.asarray([], dtype=np.int64)
+        ks_member = np.zeros((len(kcs), 0), dtype=bool)
+    n_ks = ks_member.sum(axis=1).astype(np.int64)    # (|kcs|,)
+
+    # flattened per-k_col macro-option tables: base options then the
+    # K-split options of that k_col (np.nonzero row-major order is
+    # exactly per-k_col ascending u).
+    n_mac = n_base + n_ks
+    mac_starts = _cum0(n_mac)
+    total_mac = int(n_mac.sum())
+    mac_codes_flat = np.empty(total_mac, dtype=np.int64)
+    mac_uns_flat = np.empty(total_mac, dtype=np.int64)
+    base_idx = (mac_starts[:, None]
+                + np.arange(n_base, dtype=np.int64)).ravel()
+    mac_codes_flat[base_idx] = np.tile(base_codes, len(kcs))
+    mac_uns_flat[base_idx] = np.tile(base_uns, len(kcs))
+    kci, ui = np.nonzero(ks_member)
+    rank = np.arange(len(kci), dtype=np.int64) - np.repeat(_cum0(n_ks), n_ks)
+    ks_idx = mac_starts[kci] + n_base + rank
+    mac_codes_flat[ks_idx] = _MAC_K
+    mac_uns_flat[ks_idx] = ks_pool[ui]
+
+    # --- the crossing: k_col outer, row triple middle, macro inner -----------
+    block = n_rows * n_mac                       # candidates per k_col
+    n_cand = int(block.sum())
+    kc_of = np.repeat(np.arange(len(kcs), dtype=np.int64), block)
+    within = np.arange(n_cand, dtype=np.int64) - np.repeat(_cum0(block),
+                                                           block)
+    nm_per = n_mac[kc_of]
+    row_i = within // nm_per
+    mac_i = mac_starts[kc_of] + within % nm_per
+    return _assemble_grid(layer, designs, scheds, max_candidates,
+                          kcs[kc_of], row_c[row_i], row_fx[row_i],
+                          row_fy[row_i], mac_codes_flat[mac_i],
+                          mac_uns_flat[mac_i])
 
 
 @dataclasses.dataclass(frozen=True)

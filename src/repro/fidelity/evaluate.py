@@ -96,6 +96,10 @@ def evaluate_grid(forward: ForwardFn, designs: MacroBatch, *,
     are exact and noise-free, so all noise knobs apply to the AIMC
     designs only; ``n_seeds`` collapses to 1 when noise is off.
     """
+    # persist the per-group jit executables across processes (no-op
+    # after the first call; env knob REPRO_XLA_CACHE_DIR)
+    from repro.core.compilecache import enable_compilation_cache
+    enable_compilation_cache()
     base = jax.random.fold_in(jax.random.PRNGKey(seed), 0)
     y_ref = forward(IDEAL, base)
 

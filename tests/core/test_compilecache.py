@@ -1,0 +1,87 @@
+"""Persistent XLA compilation cache plumbing (``core.compilecache``).
+
+The fused sweep enables jax's persistent compilation cache on first
+use; a second process pointed at the same directory starts with warm
+compiles.  Configuration is process-global and first-call-wins, so the
+behavioral tests run in subprocesses with a controlled environment;
+the in-process tests only cover the pure helpers.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.core.compilecache import compilation_cache_info
+
+_WORKER = """
+import json, os
+from repro.core import designs, dse, workloads
+from repro.core.compilecache import (compilation_cache_info,
+                                     enable_compilation_cache)
+
+grid = designs.macro_grid(rows=(64,), cols=(256,), adc_bits=(5,),
+                          dac_bits=(2,), m_mux=(1,), tech_nm=(22,))
+res = dse.sweep("dae", workloads.deep_autoencoder(), grid)
+info = compilation_cache_info()
+print(json.dumps({"dir": info["dir"], "entries": info["entries"],
+                  "bytes": info["bytes"],
+                  "energy0": float(res.energy_fj[0])}))
+"""
+
+
+def _run_worker(cache_env: str | None, tmp_path: Path) -> dict:
+    repo = Path(__file__).resolve().parent.parent.parent
+    env = {"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+           # HOME inside tmp so the default-dir branch can't touch the
+           # real user cache from a test
+           "HOME": str(tmp_path)}
+    if "TMPDIR" in os.environ:
+        env["TMPDIR"] = os.environ["TMPDIR"]
+    if cache_env is not None:
+        env["REPRO_XLA_CACHE_DIR"] = cache_env
+    res = subprocess.run([sys.executable, "-c", _WORKER],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_sweep_populates_cache_dir_and_warm_start(tmp_path):
+    """A sweep persists its XLA executables into the env-configured
+    directory; a fresh process reuses them (entry count does not grow)
+    and reproduces identical results."""
+    cache = tmp_path / "xla"
+    cold = _run_worker(str(cache), tmp_path)
+    assert cold["dir"] == str(cache)
+    assert cold["entries"] > 0
+    assert cold["bytes"] > 0
+
+    warm = _run_worker(str(cache), tmp_path)
+    assert warm["entries"] == cold["entries"]    # hits, not re-compiles
+    assert warm["energy0"] == cold["energy0"]    # bitwise across processes
+
+
+def test_cache_disabled_by_env(tmp_path):
+    """``off`` (and friends) disable persistence: no directory appears,
+    the sweep still runs."""
+    out = _run_worker("off", tmp_path)
+    assert out["dir"] is None
+    assert out["entries"] == 0
+    # nothing created under the fake HOME's default location either
+    assert not (tmp_path / ".cache" / "repro").exists()
+
+
+def test_default_dir_under_home(tmp_path):
+    """With no env knob the cache lands in ``~/.cache/repro/jax``."""
+    out = _run_worker(None, tmp_path)
+    assert out["dir"] == str(tmp_path / ".cache" / "repro" / "jax")
+    assert out["entries"] > 0
+
+
+def test_cache_info_tolerates_unconfigured_state():
+    info = compilation_cache_info()
+    assert set(info) == {"dir", "entries", "bytes"}
+    assert info["entries"] >= 0 and info["bytes"] >= 0

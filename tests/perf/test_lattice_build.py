@@ -1,0 +1,63 @@
+"""Perf guard: vectorized lattice construction (ISSUE 6 acceptance).
+
+``mapping.candidate_grid`` — pools + membership grids +
+index-arithmetic crossing, legality computed per *distinct* design
+knob triple — must beat the retained loop oracle
+(``candidate_grid_loop``: per-candidate Python crossing, per-design
+legality) by >= 5x on a >= 1000-point macro grid.  Same marker scheme
+as the other perf guards: CI runs the builds for crash coverage and
+skips the wall-clock ratio; a local regression means the construction
+fell back to per-candidate Python (or legality stopped deduping)."""
+
+import os
+import time
+
+import pytest
+
+from repro.core import designs, mapping, workloads
+
+
+def _grid() -> designs.MacroBatch:
+    g = designs.macro_grid(
+        rows=(64, 128, 256, 512, 1024), cols=(128, 256, 512),
+        adc_bits=(4, 5, 6, 7, 8), dac_bits=(1, 2, 4), m_mux=(1, 4, 16),
+        tech_nm=(5, 22, 28), vdd=(0.7, 0.8))
+    assert len(g) >= 1000
+    return g
+
+
+def _best3(fn) -> float:
+    t = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fn()
+        t = min(t, time.perf_counter() - t0)
+    return t
+
+
+def test_vectorized_lattice_build_beats_loop_5x():
+    grid = _grid()
+    # the heavier benchmark shapes: the fused sweep's probe dense layer
+    # plus a large dense layer (the regime cold sweeps actually spend
+    # lattice-build time in; trivially small layers are dominated by
+    # fixed per-call overhead on both builders)
+    layers = [workloads.dense("probe", 64, 1024, 64),
+              workloads.dense("big", 128, 4096, 512)]
+
+    def build(fn, schedules):
+        for layer in layers:
+            fn(layer, grid, schedules=schedules)
+
+    ratios = []
+    for schedules in (None, ("ws", "os")):
+        t_loop = _best3(lambda: build(mapping.candidate_grid_loop,
+                                      schedules))
+        t_vec = _best3(lambda: build(mapping.candidate_grid, schedules))
+        ratios.append(t_loop / max(t_vec, 1e-9))
+    speedup = min(ratios)
+    if os.environ.get("CI"):
+        pytest.skip(f"timing guard skipped on CI (speedup={speedup:.1f}x)")
+    assert speedup >= 5.0, (
+        f"vectorized lattice build only {speedup:.1f}x faster than the "
+        f"loop oracle on a {len(grid)}-design grid (per-schedule-set "
+        f"ratios: {', '.join(f'{r:.1f}x' for r in ratios)})")

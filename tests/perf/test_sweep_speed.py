@@ -141,7 +141,12 @@ def _run_network_guard(mode: str) -> dict:
            # pin the CPU backend (same rationale as the launch
            # subprocess tests: an unpinned jax probes for a TPU via the
            # GCP metadata server and hangs for minutes)
-           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+           # this guard measures in-process compile amortization (one
+           # fused compile vs one per lattice width), so the persistent
+           # XLA cache must not pre-warm either subprocess — a warm
+           # ~/.cache/repro/jax would erase exactly the gap under test
+           "REPRO_XLA_CACHE_DIR": "off"}
     env.update({k: os.environ[k] for k in ("HOME", "TMPDIR")
                 if k in os.environ})
     res = subprocess.run(
@@ -159,9 +164,14 @@ def test_fused_network_sweep_beats_per_layer_loop():
     per-layer loop, and stays within 1.5x of it warm (the fused pass
     adds only bounded quantum-padding waste).  Each engine is measured
     in a fresh subprocess so "cold" really means a cold process, not
-    whatever allocator/jit-cache state the suite left behind."""
-    fused = _run_network_guard("fused")
-    loop = _run_network_guard("loop")
+    whatever allocator/jit-cache state the suite left behind — best of
+    two runs per engine, because the first process to compile after a
+    long suite pays a one-off system transient (page-cache/allocator
+    warmup) that the engine under test did not cause."""
+    fused = min((_run_network_guard("fused") for _ in range(2)),
+                key=lambda r: r["cold"])
+    loop = min((_run_network_guard("loop") for _ in range(2)),
+               key=lambda r: r["cold"])
     # crash coverage everywhere: the fused engine produced sane totals
     # (bitwise parity itself is pinned by tests/core/test_grid_parity.py)
     assert len(fused["totals"]) == 3
