@@ -1,0 +1,190 @@
+"""LLM-serving operating-point sweep: (tokens/s, J/token) per design
+over a (prompt_len x batch) grid, phases split prefill/decode, KV-cache
+bytes priced through the tiered hierarchy (``core.memory
+.KVCacheHierarchy``) — the serving axis of the fused DSE lattice.
+
+Every (operating point x phase) pair enters ``dse.sweep_serving`` as
+one workload of a single ``sweep_networks`` pass, so the whole (point x
+phase x layer x design x mapping x dataflow) lattice shares one lane
+axis and the per-(layer, design) mapping argmin is taken *per operating
+point*.  Before the artifact is written, every smoke design (a
+subsample in full mode, ``--oracle-designs``) is re-priced through the
+scalar per-phase ``map_network`` oracle (``dse.serving_point_scalar``)
+and compared **bitwise** on every derived column; the artifact records
+the outcome (``oracle.bitwise_equal``) and the run fails loudly on any
+mismatch.
+
+Grid knobs
+----------
+``--arch``            LM config id (default ``qwen1.5-0.5b``; the
+                      non-smoke run adds ``jamba-1.5-large-398b`` as a
+                      second, KV-hierarchy-stressing case study).
+``--prompts``         comma list of prompt lengths (default smoke
+                      ``64,1024``; full ``64,1024,8192``).
+``--batches``         comma list of batch sizes (default smoke ``1,8``;
+                      full ``1,8,64``).  The operating-point grid is
+                      the cross product: >= 3 points in smoke.
+``--gen``             decode length per request (default 64).
+``--dataflows``       search the ws+os temporal-schedule axis too.
+``--oracle-designs``  how many designs the bitwise oracle check covers
+                      (default: all in smoke, 4 in full).
+
+``BENCH_serving.json`` schema
+-----------------------------
+``{"benchmark": "serving_sweep", "smoke": bool, "designs": int,
+"gen_len": int, "schedules": [..], "oracle": {"designs_checked": int,
+"points_checked": int, "bitwise_equal": bool}, "models": {arch: {
+"points": [{"point": "arch/p<P>xb<B>", "prompt_len": int, "batch": int,
+"tokens_out": float, "best_design": str, "best_analog": bool,
+"best_tokens_per_s": float, "best_j_per_token": float,
+"kv_energy_share": float, "pareto": [per-design rows with name /
+analog / tokens_per_s / j_per_token / energy_fj / kv_energy_fj /
+cycles / pareto]}, ...]}}}`` — written atomically (tmp + rename).
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_sweep \
+          [--smoke] [--dataflows] [--out BENCH_serving.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro import configs
+from repro.core import dse, lm_bridge
+
+from .common import emit, write_json_atomic
+from .design_sweep import make_grid
+
+
+def _parse_ints(s: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in s.split(",") if x)
+
+
+def oracle_check(points, results, grid, schedules,
+                 n_designs: int | None = None) -> dict:
+    """Bitwise-compare the fused serving sweep against the scalar
+    per-(point, design) oracle on every derived column; raise on any
+    mismatch and return the artifact's ``oracle`` block."""
+    d_idx = range(len(grid)) if n_designs is None else \
+        range(0, len(grid), max(1, len(grid) // n_designs))
+    d_idx = list(d_idx)
+    for pt, res in zip(points, results):
+        for d in d_idx:
+            o = dse.serving_point_scalar(pt, grid.macro_at(d),
+                                         schedules=schedules)
+            for col in ("energy_fj", "kv_energy_fj", "cycles",
+                        "tokens_per_s", "j_per_token"):
+                got = getattr(res, col)[d]
+                if got != o[col]:
+                    raise AssertionError(
+                        f"{pt.name} design {grid.names[d]} {col}: "
+                        f"grid {got!r} != oracle {o[col]!r}")
+    return {"designs_checked": len(d_idx),
+            "points_checked": len(points),
+            "bitwise_equal": True}
+
+
+def run(smoke: bool = False, arch: str = "qwen1.5-0.5b",
+        prompts: tuple[int, ...] | None = None,
+        batches: tuple[int, ...] | None = None,
+        gen: int = 64, dataflows: bool = False,
+        oracle_designs: int | None = None,
+        out: str = "BENCH_serving.json") -> dict:
+    """Sweep the operating-point grid, print the per-point winners and
+    Pareto fronts, verify against the scalar oracle, write ``out``."""
+    grid = make_grid(smoke)
+    schedules = ("ws", "os") if dataflows else None
+    prompts = prompts or ((64, 1024) if smoke else (64, 1024, 8192))
+    batches = batches or ((1, 8) if smoke else (1, 8, 64))
+    pt_grid = [(p, b) for p in prompts for b in batches]
+    archs = [arch] if smoke else [arch, "jamba-1.5-large-398b"]
+    if oracle_designs is None:
+        oracle_designs = None if smoke else 4
+
+    models = {}
+    oracle = {"designs_checked": 0, "points_checked": 0,
+              "bitwise_equal": True}
+    t0 = time.perf_counter()
+    for a in archs:
+        cfg = configs.get(a)
+        points = lm_bridge.serving_points(cfg, pt_grid, gen_len=gen)
+        results = dse.sweep_serving(points, grid, schedules=schedules)
+        chk = oracle_check(points, results, grid, schedules,
+                           n_designs=oracle_designs)
+        oracle["designs_checked"] += chk["designs_checked"]
+        oracle["points_checked"] += chk["points_checked"]
+
+        rows = []
+        print(f"# {a}: {len(points)} operating points x {len(grid)} "
+              f"designs, gen={gen}, "
+              f"dataflows={'ws+os' if dataflows else 'ws'}")
+        print(f"# {'point':28s} {'best design':44s} {'tok/s':>10s} "
+              f"{'J/tok':>10s} {'KV%':>5s} {'pareto':>6s}")
+        for pt, res in zip(points, results):
+            b = res.best()
+            recs = res.to_records()
+            kv_share = float(res.kv_energy_fj[b] / res.total_fj[b])
+            rows.append({
+                "point": pt.name,
+                "prompt_len": pt.prompt_len,
+                "batch": pt.batch,
+                "tokens_out": pt.tokens_out,
+                "best_design": grid.names[b],
+                "best_analog": bool(grid.analog[b]),
+                "best_tokens_per_s": float(res.tokens_per_s[b]),
+                "best_j_per_token": float(res.j_per_token[b]),
+                "kv_energy_share": kv_share,
+                "pareto": recs,
+            })
+            print(f"# {pt.name:28s} {grid.names[b]:44s} "
+                  f"{res.tokens_per_s[b]:10.3e} "
+                  f"{res.j_per_token[b]:10.3e} {kv_share:5.1%} "
+                  f"{int(res.pareto_mask().sum()):6d}")
+        models[a] = {"points": rows}
+    wall = time.perf_counter() - t0
+
+    artifact = {
+        "benchmark": "serving_sweep",
+        "smoke": smoke,
+        "designs": len(grid),
+        "gen_len": gen,
+        "schedules": list(results[0].phase_sweeps[0].schedules),
+        "wall_s": wall,
+        "oracle": oracle,
+        "models": models,
+    }
+    write_json_atomic(out, artifact)
+    n_points = sum(len(m["points"]) for m in models.values())
+    print(f"# wrote {out}: {n_points} points, oracle bitwise over "
+          f"{oracle['designs_checked']} design checks")
+    emit("serving_sweep", wall * 1e6,
+         f"archs={len(models)} points={n_points} designs={len(grid)} "
+         f"oracle_ok={oracle['bitwise_equal']}")
+    return artifact
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small design grid + cheap LM only, for CI")
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    choices=configs.ARCH_IDS)
+    ap.add_argument("--prompts", type=_parse_ints, default=None,
+                    help="comma list of prompt lengths")
+    ap.add_argument("--batches", type=_parse_ints, default=None,
+                    help="comma list of batch sizes")
+    ap.add_argument("--gen", type=int, default=64,
+                    help="decode tokens per request")
+    ap.add_argument("--dataflows", action="store_true",
+                    help="search the ws+os dataflow axis too")
+    ap.add_argument("--oracle-designs", type=int, default=None,
+                    help="designs covered by the bitwise oracle check "
+                         "(default: all in smoke, 4 otherwise)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, arch=args.arch, prompts=args.prompts,
+        batches=args.batches, gen=args.gen, dataflows=args.dataflows,
+        oracle_designs=args.oracle_designs, out=args.out)

@@ -1,12 +1,16 @@
-"""Tracked perf trajectory: fold ``BENCH_sweep.json`` points into the
-committed ``BENCH_trajectory.json`` history.
+"""Tracked perf trajectory: fold ``BENCH_sweep.json`` /
+``BENCH_serving.json`` points into the committed
+``BENCH_trajectory.json`` history.
 
-Each entry is one commit's fused-sweep timing point (cold/warm wall,
-lattice-build time, compile-count proxy, padding waste, shard count),
-so perf regressions show up as a diff in review instead of vanishing
-with the CI artifact.  Appending is idempotent per commit: re-running
-on the same SHA replaces that entry in place.  The file is written
-atomically (tmp + rename).
+Each entry is one commit's headline numbers for one benchmark — the
+fused-sweep timing point (cold/warm wall, lattice-build time,
+compile-count proxy, padding waste, shard count) or the serving-sweep
+summary (operating points, best tokens/s and J/token, oracle verdict)
+— so perf regressions show up as a diff in review instead of vanishing
+with the CI artifact.  Appending is idempotent per (commit, benchmark):
+re-running on the same SHA replaces that benchmark's entry in place, so
+the sweep and serving points of one commit coexist.  The file is
+written atomically (tmp + rename).
 
 Run:  PYTHONPATH=src python -m benchmarks.trajectory \
           [--artifact BENCH_sweep.json] [--traj BENCH_trajectory.json] \
@@ -27,7 +31,24 @@ from .common import write_json_atomic
 _FIELDS = ("benchmark", "smoke", "designs", "networks", "schedules",
            "cold_s", "warm_s", "lattice_build_s", "kernel_calls_cold",
            "kernel_distinct_shapes_cold", "kernel_sharded_calls_cold",
-           "lane_shards", "lattice_slots", "padding_waste")
+           "lane_shards", "lattice_slots", "padding_waste",
+           # serving_sweep headline fields
+           "gen_len", "wall_s")
+
+
+def _serving_headline(artifact: dict) -> dict:
+    """Headline columns of a ``BENCH_serving.json`` artifact: point
+    count, the best (tokens/s, J/token) across every model's operating
+    points, and the bitwise-oracle verdict."""
+    pts = [p for m in artifact.get("models", {}).values()
+           for p in m["points"]]
+    out: dict = {"operating_points": len(pts)}
+    if pts:
+        out["best_tokens_per_s"] = max(p["best_tokens_per_s"] for p in pts)
+        out["best_j_per_token"] = min(p["best_j_per_token"] for p in pts)
+    oracle = artifact.get("oracle") or {}
+    out["oracle_ok"] = bool(oracle.get("bitwise_equal", False))
+    return out
 
 
 def _head_commit() -> str:
@@ -52,23 +73,32 @@ def append(artifact_path: str = "BENCH_sweep.json",
     if date:
         entry["date"] = date
     entry.update({k: artifact[k] for k in _FIELDS if k in artifact})
-    cc = artifact.get("compilation_cache") or {}
-    entry["compile_cache_entries"] = cc.get("entries", 0)
+    if artifact.get("benchmark") == "serving_sweep":
+        entry.update(_serving_headline(artifact))
+    else:
+        cc = artifact.get("compilation_cache") or {}
+        entry["compile_cache_entries"] = cc.get("entries", 0)
 
     history: list[dict] = []
     if os.path.exists(traj_path):
         with open(traj_path) as f:
             history = json.load(f)["entries"]
-    history = [e for e in history if e.get("commit") != entry["commit"]]
+    # idempotent per (commit, benchmark); legacy entries without a
+    # benchmark field are treated as the fused design sweep's
+    bench = entry.get("benchmark", "design_sweep_networks")
+    history = [e for e in history
+               if not (e.get("commit") == entry["commit"]
+                       and e.get("benchmark",
+                                 "design_sweep_networks") == bench)]
     history.append(entry)
     write_json_atomic(traj_path, {
-        "doc": "fused design-sweep perf history, one entry per commit "
+        "doc": "benchmark perf history, one entry per (commit, benchmark) "
                "(benchmarks/trajectory.py appends, CI keeps it current)",
         "entries": history,
     })
+    wall = entry.get("cold_s", entry.get("wall_s", 0))
     print(f"# trajectory: {len(history)} entries -> {traj_path} "
-          f"(latest {entry['commit'][:12]} cold={entry.get('cold_s', 0):.3f}s"
-          f" warm={entry.get('warm_s', 0):.3f}s)")
+          f"(latest {entry['commit'][:12]} {bench} wall={wall:.3f}s)")
     return entry
 
 

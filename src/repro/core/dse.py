@@ -115,10 +115,10 @@ from .energy import EnergyBreakdown
 from .hardware import IMCMacro
 from .mapping import (MappingCost, candidate_batch, enumerate_mappings,
                       evaluate, evaluate_batch)
-from .memory import MemoryModel
+from .memory import KVCacheHierarchy, MemoryModel, kv_traffic_energy_grid
 from .schedule import (names as _schedule_names,
                        normalize as _normalize_schedules)
-from .workloads import Layer
+from .workloads import Layer, ServingPoint
 
 
 @dataclasses.dataclass(frozen=True)
@@ -726,6 +726,180 @@ def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
     return sweep_networks(((network, layers),), designs,
                           objective=objective, alpha=alpha, mem=mem,
                           schedules=schedules)[0]
+
+
+# --------------------------------------------------------------------------- #
+# serving operating-point sweep: prefill/decode phases + KV hierarchy          #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ServingPointResult:
+    """Per-design serving cost at ONE (prompt_len x batch) operating
+    point: the phase-split (prefill + decode) MVM cost from the fused
+    lattice plus the KV-cache hierarchy traffic, folded into
+    (tokens/s, J/token).
+
+    All arrays are (D,), indexed like ``designs``.  The float
+    association of every derived column is pinned (and property-tested)
+    against the scalar per-design oracle ``serving_point_scalar``:
+
+    * ``energy_fj[d]  = sum_phase sweep.energy_fj[d] * repeats``
+    * ``kv_energy_fj[d] = sum_phase kv_traffic_energy(phase, d)``
+    * ``total_fj = energy_fj + kv_energy_fj`` (MVM first, KV second)
+    * ``cycles[d] = sum_phase float64(sweep.cycles[d]) * repeats``
+    * ``time_s = cycles / (f_clk_ghz * 1e9)``;
+      ``tokens_per_s = tokens_out / time_s``;
+      ``j_per_token = (total_fj * 1e-15) / tokens_out``
+    """
+
+    point: ServingPoint
+    objective: str
+    designs: MacroBatch
+    phase_sweeps: tuple[SweepResult, ...]   # aligned with point.phases
+    energy_fj: np.ndarray                   # (D,) MVM + operand traffic
+    kv_energy_fj: np.ndarray                # (D,) KV hierarchy traffic
+    cycles: np.ndarray                      # (D,) float64 request cycles
+    tokens_per_s: np.ndarray                # (D,) generated-token rate
+    j_per_token: np.ndarray                 # (D,) Joules per generated token
+
+    def __len__(self) -> int:
+        return len(self.energy_fj)
+
+    @property
+    def total_fj(self) -> np.ndarray:
+        return self.energy_fj + self.kv_energy_fj
+
+    def best(self, objective: str | None = None) -> int:
+        """Argmin design index: ``"energy"``/``"edp"`` rank by
+        J/token (their per-request order), ``"latency"`` by cycles —
+        i.e. the per-operating-point winner under the sweep objective."""
+        obj = objective or self.objective
+        if obj == "latency":
+            return int(np.argmin(self.cycles))
+        if obj == "edp":
+            return int(np.argmin(self.total_fj * self.cycles))
+        return int(np.argmin(self.j_per_token))
+
+    def pareto_mask(self) -> np.ndarray:
+        """(D,) bool: non-dominated over (tokens/s max, J/token min) —
+        the serving frontier the benchmark renders per operating
+        point."""
+        return _non_dominated(np.stack(
+            [-self.tokens_per_s, self.j_per_token], axis=1))
+
+    def pareto(self) -> np.ndarray:
+        """Frontier design indices, throughput-descending."""
+        idx = np.flatnonzero(self.pareto_mask())
+        return idx[np.argsort(-self.tokens_per_s[idx], kind="stable")]
+
+    def to_records(self) -> list[dict]:
+        """One JSON-ready row per design (``BENCH_serving.json``)."""
+        mask = self.pareto_mask()
+        return [{
+            "name": self.designs.names[d],
+            "analog": bool(self.designs.analog[d]),
+            "tokens_per_s": float(self.tokens_per_s[d]),
+            "j_per_token": float(self.j_per_token[d]),
+            "energy_fj": float(self.energy_fj[d]),
+            "kv_energy_fj": float(self.kv_energy_fj[d]),
+            "cycles": float(self.cycles[d]),
+            "pareto": bool(mask[d]),
+        } for d in range(len(self))]
+
+
+def _f_clk_ghz(designs: MacroBatch) -> np.ndarray:
+    """(D,) per-design macro clock — the scalar property per row, so
+    grid-side time conversions are trivially bitwise vs the oracle."""
+    return np.array([m.f_clk_ghz for m in designs.macros], dtype=np.float64)
+
+
+def sweep_serving(points: Sequence[ServingPoint], designs: MacroBatch,
+                  objective: str = "energy", alpha: float | None = None,
+                  mem: MemoryModel | None = None, schedules=None,
+                  kv_hier: KVCacheHierarchy = KVCacheHierarchy()
+                  ) -> tuple[ServingPointResult, ...]:
+    """Price a serving operating-point grid against a macro grid in one
+    fused pass — the serving axis of the DSE lattice.
+
+    Every phase of every point enters :func:`sweep_networks` as its own
+    workload, so the whole (point x phase x layer x design x mapping x
+    dataflow) lattice shares one lane axis, one set of jit dispatches
+    and the usual finite-sentinel masking; the per-(layer, design)
+    argmin is therefore taken *per operating point* and is bitwise what
+    ``map_network`` on that phase alone would pick.  On top of the MVM
+    sweep each phase's KV-cache byte volumes are priced through
+    ``memory.kv_traffic_energy_grid`` at the per-design SRAM rate
+    (``mem=None``) or the shared memory model's — tier-selected by the
+    phase's live working set.  Build ``points`` with
+    ``lm_bridge.serving_points``.
+    """
+    nets = []
+    for pt in points:
+        for ph in pt.phases:
+            nets.append((f"{pt.name}/{ph.phase}", list(ph.layers)))
+    sweeps = sweep_networks(nets, designs, objective=objective, alpha=alpha,
+                            mem=mem, schedules=schedules)
+    per_bit, _, _ = _mem_pricing(designs, mem)
+    f_clk = _f_clk_ghz(designs)
+    n_designs = len(designs)
+
+    results = []
+    it = iter(sweeps)
+    for pt in points:
+        if pt.tokens_out <= 0:
+            raise ValueError(f"{pt.name}: no generated tokens "
+                             f"(gen_len must be >= 1)")
+        phase_sweeps = tuple(next(it) for _ in pt.phases)
+        energy = np.zeros(n_designs, dtype=np.float64)
+        kv = np.zeros(n_designs, dtype=np.float64)
+        cycles = np.zeros(n_designs, dtype=np.float64)
+        for ph, sw in zip(pt.phases, phase_sweeps):
+            energy = energy + sw.energy_fj * ph.repeats
+            cycles = cycles + sw.cycles.astype(np.float64) * ph.repeats
+            kv = kv + kv_traffic_energy_grid(
+                per_bit, ph.kv_read_bytes, ph.kv_write_bytes,
+                ph.kv_live_bytes, kv_hier)
+        total = energy + kv
+        time_s = cycles / (f_clk * 1e9)
+        results.append(ServingPointResult(
+            point=pt, objective=objective, designs=designs,
+            phase_sweeps=phase_sweeps,
+            energy_fj=energy, kv_energy_fj=kv, cycles=cycles,
+            tokens_per_s=pt.tokens_out / time_s,
+            j_per_token=(total * 1e-15) / pt.tokens_out))
+    return tuple(results)
+
+
+def serving_point_scalar(pt: ServingPoint, macro: IMCMacro,
+                         objective: str = "energy",
+                         alpha: float | None = None,
+                         mem: MemoryModel | None = None, schedules=None,
+                         kv_hier: KVCacheHierarchy = KVCacheHierarchy()
+                         ) -> dict[str, float]:
+    """Reference oracle for ONE (operating point, design) pair: the
+    per-phase scalar ``map_network`` loop plus python-float KV pricing,
+    combined with exactly the association :func:`sweep_serving`
+    documents.  Never vectorized; the fused serving lattice is
+    property-tested bitwise against this."""
+    m = mem or MemoryModel(tech_nm=macro.tech_nm, vdd=macro.vdd)
+    per_bit = m.sram_fj_per_bit()
+    energy = 0.0
+    kv = 0.0
+    cycles = 0.0
+    for ph in pt.phases:
+        net = map_network(f"{pt.name}/{ph.phase}", list(ph.layers), macro,
+                          objective=objective, mem=m, alpha=alpha,
+                          engine="scalar", schedules=schedules)
+        energy = energy + net.total_energy_fj * ph.repeats
+        cycles = cycles + float(net.total_cycles) * ph.repeats
+        kv = kv + kv_hier.traffic_energy_fj(
+            per_bit, ph.kv_read_bytes, ph.kv_write_bytes, ph.kv_live_bytes)
+    total = energy + kv
+    time_s = cycles / (macro.f_clk_ghz * 1e9)
+    return {
+        "energy_fj": energy, "kv_energy_fj": kv, "cycles": cycles,
+        "tokens_per_s": pt.tokens_out / time_s,
+        "j_per_token": (total * 1e-15) / pt.tokens_out,
+    }
 
 
 def _non_dominated(pts: np.ndarray) -> np.ndarray:

@@ -3,11 +3,28 @@ extension, DESIGN.md §2): every projection of one superblock becomes a
 Dense workload with B = tokens, plus an accounting of the non-MVM MACs
 (attention score/value products, SSM/WKV recurrences) that are NOT
 IMC-mappable — reported as coverage %.
+
+Serving operating points
+------------------------
+LLM serving splits every request into two phases with very different
+cost shapes: **prefill** processes the whole prompt at once (MVMs with
+B = batch * prompt_len, one KV-cache write per prompt token) and
+**decode** emits one token at a time (MVMs with B = batch, the whole
+live KV window read back per step).  :func:`lm_imc_workloads` takes a
+``phase`` and a ``ctx_len`` so both regimes lower correctly, and
+:func:`serving_points` bundles the two phases of one
+(prompt_len x batch x gen_len) operating point — including the
+bytes-based KV-cache traffic volumes the memory hierarchy prices
+(``memory.KVCacheHierarchy``) — into a ``workloads.ServingPoint`` for
+``dse.sweep_serving``.
 """
 
 from __future__ import annotations
 
-from repro.core.workloads import Layer, LMBlockSpec, dense
+from typing import Sequence
+
+from repro.core.workloads import (Layer, LMBlockSpec, PhaseWorkload,
+                                  ServingPoint, dense)
 from repro.models.lm import ModelConfig
 
 
@@ -69,6 +86,33 @@ def _superblock_projections(cfg: ModelConfig) -> list[tuple[str, int, int, int]]
     return projs
 
 
+def _global_attn_frac(cfg: ModelConfig, pos: int) -> float:
+    """Fraction of pattern position ``pos``'s ``n_super`` instances that
+    run *global* attention.  ``layer_is_global_attn`` is defined on the
+    absolute layer depth (every ``global_every``-th layer), which the
+    one-superblock abstraction can't index positionally — averaging
+    over the repeats keeps whole-model totals exact (all the uses are
+    linear in the span)."""
+    a = cfg.attn
+    if a is None or not a.sliding_window:
+        return 1.0
+    if a.global_every <= 0:
+        return 0.0
+    stride = len(cfg.pattern)
+    n_global = sum(1 for r in range(cfg.n_super)
+                   if cfg.layer_is_global_attn(r * stride + pos))
+    return n_global / cfg.n_super
+
+
+def _attn_span(cfg: ModelConfig, pos: int, ctx_len: int) -> float:
+    """Expected live-context span of an ``attn`` pattern position at
+    ``ctx_len``: global instances see the whole context, windowed ones
+    clamp at the sliding window."""
+    frac = _global_attn_frac(cfg, pos)
+    window = cfg.attn.sliding_window or ctx_len
+    return frac * ctx_len + (1.0 - frac) * min(window, ctx_len)
+
+
 def _non_mvm_macs_per_token(cfg: ModelConfig, ctx_len: int) -> float:
     """Score/value products and recurrent updates per token, per
     superblock — compute that cannot sit in an IMC array."""
@@ -77,9 +121,7 @@ def _non_mvm_macs_per_token(cfg: ModelConfig, ctx_len: int) -> float:
     for pos, kind in enumerate(cfg.pattern):
         if kind == "attn":
             a = cfg.attn
-            window = a.sliding_window or ctx_len
-            span = ctx_len if cfg.layer_is_global_attn(pos) else \
-                min(window, ctx_len)
+            span = _attn_span(cfg, pos, ctx_len)
             total += 2.0 * span * a.n_heads * a.head_dim
         elif kind == "mla":
             m = cfg.mla
@@ -100,10 +142,214 @@ def lm_block_spec(cfg: ModelConfig, ctx_len: int = 4096) -> LMBlockSpec:
 
 
 def lm_imc_workloads(cfg: ModelConfig, tokens: int,
-                     w_prec: int = 4, i_prec: int = 4) -> list[Layer]:
+                     w_prec: int = 4, i_prec: int = 4,
+                     phase: str | None = None,
+                     ctx_len: int = 4096) -> list[Layer]:
     """Dense workloads for ONE superblock (multiply results by
-    cfg.n_super for whole-model numbers)."""
-    spec = lm_block_spec(cfg)
-    return [dense(name, tokens * calls, fin, fout,
+    cfg.n_super for whole-model numbers).
+
+    ``tokens`` is the per-phase token count the MVMs batch over — for a
+    serving operating point that is ``batch * prompt_len`` in prefill
+    and ``batch`` (one step) in decode, never one flat per-request
+    count.  ``ctx_len`` is the attention context the phase runs at; it
+    threads through to :func:`lm_block_spec` so the non-MVM accounting
+    (sliding-window vs global span) matches the operating point instead
+    of a hardcoded 4096.  ``phase`` (``"prefill"`` / ``"decode"``) tags
+    the layer names so both phases of one request coexist in a fused
+    sweep; ``None`` keeps the historical flat naming.
+    """
+    spec = lm_block_spec(cfg, ctx_len=ctx_len)
+    prefix = f"{phase}." if phase else ""
+    return [dense(prefix + name, tokens * calls, fin, fout,
                   w_prec=w_prec, i_prec=i_prec)
             for (name, fin, fout, calls) in spec.projections]
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache byte accounting (bytes-based hierarchy, per phase)                  #
+# --------------------------------------------------------------------------- #
+def _cache_itemsize(cfg: ModelConfig) -> int:
+    import jax.numpy as jnp
+    return jnp.dtype(cfg.cache_dtype).itemsize
+
+
+def kv_slot_bytes(cfg: ModelConfig) -> float:
+    """Cache bytes appended per token, per superblock: attention K+V
+    slots and MLA latents grow with context; pure-SSM blocks contribute
+    0 (their state is ctx-independent — see :func:`kv_state_bytes`).
+    Matches ``LM.cache_specs`` elementwise (same dims, same
+    ``cache_dtype``)."""
+    e = _cache_itemsize(cfg)
+    total = 0.0
+    for kind in cfg.pattern:
+        if kind == "attn":
+            total += 2.0 * cfg.attn.kv_dim * e
+        elif kind == "mla":
+            total += float(cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * e
+    return total
+
+
+def kv_state_bytes(cfg: ModelConfig) -> float:
+    """Ctx-independent recurrent state bytes per sequence, per
+    superblock (Mamba ``h`` is f32 + conv tail in ``cache_dtype``,
+    RWKV6 ``state`` is f32 + two token shifts — mirrors
+    ``ssm.mamba_cache_specs`` / ``rwkv6_cache_specs``)."""
+    d, e = cfg.d_model, _cache_itemsize(cfg)
+    total = 0.0
+    for kind in cfg.pattern:
+        if kind == "mamba":
+            c = cfg.mamba
+            di = c.d_inner(d)
+            total += di * c.d_state * 4.0 + (c.d_conv - 1) * di * e
+        elif kind == "rwkv6":
+            c = cfg.rwkv
+            total += (c.n_heads(d) * c.head_dim * c.head_dim * 4.0
+                      + 2.0 * d * e)
+    return total
+
+
+def _window_spans(cfg: ModelConfig, ctx_len: int) -> list[float]:
+    """Effective live-slot span per attention-family position of one
+    superblock at context ``ctx_len`` (sliding-window layers saturate
+    at their window, averaged with their ``global_every`` instances;
+    MLA and global attention hold the whole context)."""
+    spans: list[float] = []
+    for pos, kind in enumerate(cfg.pattern):
+        if kind == "attn":
+            spans.append(_attn_span(cfg, pos, ctx_len))
+        elif kind == "mla":
+            spans.append(float(ctx_len))
+    return spans
+
+
+def _slot_bytes_per_pos(cfg: ModelConfig) -> list[float]:
+    """Per-token slot bytes per attention-family position, aligned with
+    :func:`_window_spans`."""
+    e = _cache_itemsize(cfg)
+    out = []
+    for kind in cfg.pattern:
+        if kind == "attn":
+            out.append(2.0 * cfg.attn.kv_dim * e)
+        elif kind == "mla":
+            out.append(float(cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * e)
+    return out
+
+
+def kv_live_bytes(cfg: ModelConfig, ctx_len: int, batch: int = 1) -> float:
+    """Live KV working set across the whole model at context ``ctx_len``
+    — the quantity the hierarchy's tier selection compares against its
+    buffer/HBM capacities.  Sliding-window layers only keep their
+    window live; recurrent state is always live."""
+    per_super = sum(s * b for s, b in zip(_window_spans(cfg, ctx_len),
+                                          _slot_bytes_per_pos(cfg)))
+    per_super += kv_state_bytes(cfg)
+    return batch * cfg.n_super * per_super
+
+
+def _span_sum(lo: int, hi: int, window: int) -> float:
+    """sum_{t=lo..hi} min(t, window) in closed form (t = live context
+    when the t-th token attends; ``window`` clamps sliding layers)."""
+    if hi < lo:
+        return 0.0
+    if window >= hi:                      # never clamped
+        return (hi * (hi + 1) - (lo - 1) * lo) / 2.0
+    if window <= lo:                      # always clamped
+        return float(window) * (hi - lo + 1)
+    head = (window * (window + 1) - (lo - 1) * lo) / 2.0
+    return head + float(window) * (hi - window)
+
+
+def kv_phase_traffic(cfg: ModelConfig, phase: str, prompt_len: int,
+                     batch: int, gen_len: int = 1) -> tuple[float, float]:
+    """Whole-model (read_bytes, write_bytes) KV-cache traffic of one
+    serving phase.
+
+    * **prefill**: every prompt token appends its slot once (write =
+      prompt cache build); causal attention reads the growing prefix,
+      so reads sum ``min(t, window)`` slots over t = 1..prompt_len per
+      layer.  Recurrent state is written once per sequence.
+    * **decode**: each of the ``gen_len`` steps reads the whole live
+      window (context grows prompt_len..prompt_len+gen_len-1) and
+      appends one slot; recurrent state is read and fully rewritten
+      every step.
+    """
+    slot_b = _slot_bytes_per_pos(cfg)
+    state_b = kv_state_bytes(cfg)
+    mix: list[tuple[float, int]] = []   # (global frac, window), per slot pos
+    for pos, kind in enumerate(cfg.pattern):
+        if kind == "attn":
+            mix.append((_global_attn_frac(cfg, pos),
+                        cfg.attn.sliding_window or 0))
+        elif kind == "mla":
+            mix.append((1.0, 0))
+
+    def span_reads(lo: int, hi: int) -> float:
+        total = 0.0
+        for b, (frac, w) in zip(slot_b, mix):
+            full = _span_sum(lo, hi, hi)          # never clamped
+            clamped = _span_sum(lo, hi, w) if w else full
+            total += b * (frac * full + (1.0 - frac) * clamped)
+        return total
+
+    if phase == "prefill":
+        reads = span_reads(1, prompt_len)
+        # every prompt token's slot is written once, window or not (the
+        # eviction of old slots is free; only live slots are re-read)
+        writes = sum(b * prompt_len for b in slot_b) + state_b
+    elif phase == "decode":
+        reads = span_reads(prompt_len, prompt_len + gen_len - 1)
+        reads += state_b * gen_len
+        writes = sum(b * gen_len for b in slot_b) + state_b * gen_len
+    else:
+        raise ValueError(f"unknown phase {phase!r}")
+    return (batch * cfg.n_super * reads, batch * cfg.n_super * writes)
+
+
+# --------------------------------------------------------------------------- #
+# operating-point assembly                                                     #
+# --------------------------------------------------------------------------- #
+def serving_points(cfg: ModelConfig,
+                   grid: Sequence[tuple[int, int]],
+                   gen_len: int = 128,
+                   w_prec: int = 4, i_prec: int = 4
+                   ) -> tuple[ServingPoint, ...]:
+    """Build the (prompt_len x batch) operating-point grid of one LM as
+    phase-split :class:`~repro.core.workloads.ServingPoint` bundles.
+
+    Each point carries a prefill :class:`PhaseWorkload` (one superblock
+    at B = batch * prompt_len, repeated ``n_super`` times) and a decode
+    one (one superblock at B = batch for ONE step, repeated
+    ``n_super * gen_len`` times), plus the whole-phase KV-cache byte
+    volumes at that point's context.  Feed the tuple straight to
+    ``dse.sweep_serving``.
+    """
+    points = []
+    for prompt_len, batch in grid:
+        name = f"{cfg.name}/p{prompt_len}xb{batch}"
+        ctx = prompt_len + gen_len
+        pre_layers = tuple(lm_imc_workloads(
+            cfg, tokens=batch * prompt_len, w_prec=w_prec, i_prec=i_prec,
+            phase="prefill", ctx_len=prompt_len))
+        dec_layers = tuple(lm_imc_workloads(
+            cfg, tokens=batch, w_prec=w_prec, i_prec=i_prec,
+            phase="decode", ctx_len=ctx))
+        pre_r, pre_w = kv_phase_traffic(cfg, "prefill", prompt_len, batch)
+        dec_r, dec_w = kv_phase_traffic(cfg, "decode", prompt_len, batch,
+                                        gen_len=gen_len)
+        points.append(ServingPoint(
+            name=name, prompt_len=prompt_len, batch=batch, gen_len=gen_len,
+            phases=(
+                PhaseWorkload(
+                    phase="prefill", layers=pre_layers,
+                    repeats=float(cfg.n_super),
+                    kv_read_bytes=pre_r, kv_write_bytes=pre_w,
+                    kv_live_bytes=kv_live_bytes(cfg, prompt_len, batch),
+                    tokens_out=0.0),
+                PhaseWorkload(
+                    phase="decode", layers=dec_layers,
+                    repeats=float(cfg.n_super) * gen_len,
+                    kv_read_bytes=dec_r, kv_write_bytes=dec_w,
+                    kv_live_bytes=kv_live_bytes(cfg, ctx, batch),
+                    tokens_out=float(batch) * gen_len),
+            )))
+    return tuple(points)

@@ -38,6 +38,14 @@ SRAM_CINV_FACTOR = 20.0
 #: Off-chip DRAM access energy per bit [fJ] (LPDDR4-class, node-independent).
 DRAM_FJ_PER_BIT = 4000.0
 
+#: Off-chip HBM access energy per bit [fJ] (HBM2e-class incl. PHY,
+#: node-independent — the KV-cache spill tier for LM serving).
+HBM_FJ_PER_BIT = 3500.0
+
+#: Chip-to-chip fabric energy per bit [fJ] (NVLink/ICI-class SerDes) —
+#: paid on top of HBM when the live KV overflows one chip's HBM.
+FABRIC_FJ_PER_BIT = 10000.0
+
 
 @dataclasses.dataclass(frozen=True)
 class MemoryModel:
@@ -91,6 +99,71 @@ class MemoryModel:
             "outputs": costs.output_bits * per_bit,
             "psums": costs.psum_bits * per_bit,
         }
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache byte hierarchy (LLM serving)                                        #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class KVCacheHierarchy:
+    """Bytes-based memory tiers for the serving KV cache.
+
+    Three tiers above the macro: an **on-chip SRAM KV buffer**
+    (``sram_kv_bytes`` capacity, priced at the design's per-bit SRAM
+    rate like every other on-chip operand), **off-chip HBM**
+    (``hbm_bytes`` capacity per chip) and the **chip-to-chip fabric**
+    for live caches too big for one chip's HBM.  Tier selection is by
+    the phase's *live* working set (``kv_live_bytes``): all of a
+    phase's KV traffic is priced at the rate of the tier the live cache
+    lands in — off-chip tiers still cross the on-chip buffer on the way
+    to the macro, so their rates add to the SRAM rate exactly like the
+    DRAM spill term in :func:`traffic_energy_grid`.
+    """
+
+    sram_kv_bytes: int = 8 << 20          # 8 MiB on-chip KV buffer
+    hbm_bytes: int = 16 << 30             # 16 GiB HBM per chip
+    hbm_fj_per_bit: float = HBM_FJ_PER_BIT
+    fabric_fj_per_bit: float = FABRIC_FJ_PER_BIT
+
+    def fj_per_bit(self, per_bit_sram: float, live_bytes: float) -> float:
+        """Scalar per-bit KV rate for one design (the oracle the grid
+        path must match bitwise)."""
+        if live_bytes <= self.sram_kv_bytes:
+            return per_bit_sram
+        if live_bytes <= self.hbm_bytes:
+            return per_bit_sram + self.hbm_fj_per_bit
+        return per_bit_sram + (self.hbm_fj_per_bit + self.fabric_fj_per_bit)
+
+    def traffic_energy_fj(self, per_bit_sram: float, read_bytes: float,
+                          write_bytes: float, live_bytes: float) -> float:
+        """Scalar KV traffic energy of one phase on one design [fJ]:
+        ``(read + write) bytes * 8 * tier rate`` — reads and writes
+        share the tier rate (both cross the same levels)."""
+        rate = self.fj_per_bit(per_bit_sram, live_bytes)
+        return (read_bytes + write_bytes) * 8.0 * rate
+
+
+def kv_traffic_energy_grid(per_bit_sram, read_bytes: float,
+                           write_bytes: float, live_bytes,
+                           hier: KVCacheHierarchy = KVCacheHierarchy()
+                           ) -> np.ndarray:
+    """Per-design KV traffic energy [fJ], shape (D,).
+
+    ``per_bit_sram`` is a scalar or a (D,) array
+    (:func:`sram_fj_per_bit_grid`); ``live_bytes`` may be per-design
+    too.  The tier rate is an elementwise selection between the same
+    precomputed values the scalar :meth:`KVCacheHierarchy.fj_per_bit`
+    branch chooses from, and the energy expression keeps its float
+    association — so every entry is bitwise what the per-design scalar
+    oracle returns.
+    """
+    per_bit = np.atleast_1d(np.asarray(per_bit_sram, dtype=np.float64))
+    live = np.asarray(live_bytes)
+    rate = np.where(
+        live <= hier.sram_kv_bytes, per_bit,
+        np.where(live <= hier.hbm_bytes, per_bit + hier.hbm_fj_per_bit,
+                 per_bit + (hier.hbm_fj_per_bit + hier.fabric_fj_per_bit)))
+    return (read_bytes + write_bytes) * 8.0 * rate
 
 
 # --------------------------------------------------------------------------- #

@@ -170,6 +170,64 @@ class LMBlockSpec:
     non_mvm_macs_per_token: float = 0.0
 
 
+#: serving phases of an LM request, in execution order.
+SERVING_PHASES = ("prefill", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseWorkload:
+    """One serving phase of one operating point, ready for the fused DSE.
+
+    ``layers`` hold the MVM workloads of ONE superblock for ONE unit of
+    the phase (the whole prompt for prefill, one decode step for
+    decode); ``repeats`` scales the priced unit to the whole request
+    batch's phase (``n_super`` superblocks, times ``gen_len`` steps for
+    decode).  The KV fields are whole-phase, whole-model byte volumes
+    for the bytes-based cache hierarchy (``memory.KVCacheHierarchy``):
+
+    * ``kv_read_bytes`` / ``kv_write_bytes`` — cache traffic the phase
+      generates (attention reads the live window per token, appends one
+      slot per token; recurrent state is read + rewritten per step);
+    * ``kv_live_bytes`` — peak live cache working set during the phase,
+      which selects the hierarchy tier the traffic is priced at;
+    * ``tokens_out`` — tokens this phase emits toward the serving
+      throughput denominator (0 for prefill: prompt tokens are not
+      generated output).
+    """
+
+    phase: str                       # "prefill" | "decode"
+    layers: tuple[Layer, ...]        # one superblock, one phase unit
+    repeats: float                   # units priced -> whole-request scale
+    kv_read_bytes: float = 0.0
+    kv_write_bytes: float = 0.0
+    kv_live_bytes: float = 0.0
+    tokens_out: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.phase not in SERVING_PHASES:
+            raise ValueError(f"unknown serving phase {self.phase!r}; "
+                             f"expected one of {SERVING_PHASES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPoint:
+    """One (prompt_len x batch) serving operating point: the phase-split
+    workload bundle ``dse.sweep_serving`` prices as one lattice lane
+    group.  Build from a model config with
+    ``repro.core.lm_bridge.serving_points``."""
+
+    name: str
+    prompt_len: int
+    batch: int
+    gen_len: int
+    phases: tuple[PhaseWorkload, ...]
+
+    @property
+    def tokens_out(self) -> float:
+        """Generated tokens per request batch (throughput denominator)."""
+        return sum(p.tokens_out for p in self.phases)
+
+
 def lm_block_workloads(spec: LMBlockSpec, tokens: int,
                        w_prec: int = 4, i_prec: int = 4) -> list[Layer]:
     """Lower an LM block into Dense workloads: one batched MVM per

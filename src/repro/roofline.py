@@ -237,11 +237,15 @@ def analytic_min_bytes(cfg, shape, chips: int) -> float:
                                               shape.seq_len))
         act = 2 * cfg.n_layers * tokens * d * act_elem
         return (param_b + act + cache_b) / chips
-    # decode: read all params, read whole cache, write the new slots
+    # decode: read all params, read the whole cache, write the new
+    # slots.  The per-step write is cache_specs at seq=1: one K/V (or
+    # latent) slot per attention layer, and the full recurrent state
+    # for SSM layers — which decode rewrites entirely each step.
     lm = LM(cfg)
     cache_b = _specs_bytes(lm.cache_specs(shape.global_batch,
                                           shape.seq_len))
-    return (param_b + cache_b) / chips
+    write_b = _specs_bytes(lm.cache_specs(shape.global_batch, 1))
+    return (param_b + cache_b + write_b) / chips
 
 
 def build(arch: str, shape_name: str, mesh_name: str, chips: int,

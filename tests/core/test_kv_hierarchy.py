@@ -1,0 +1,58 @@
+"""KV-cache byte-hierarchy pricing: tier selection, scaling, and
+bitwise grid/scalar parity (the serving sweep's KV term relies on it)."""
+
+import numpy as np
+
+from repro.core import memory
+from repro.testing.hypocompat import given, settings, st
+
+
+def test_tier_rates_are_monotone_and_additive():
+    h = memory.KVCacheHierarchy()
+    per_bit = 3.25
+    on_chip = h.fj_per_bit(per_bit, float(h.sram_kv_bytes))
+    hbm = h.fj_per_bit(per_bit, float(h.sram_kv_bytes) + 1.0)
+    fabric = h.fj_per_bit(per_bit, float(h.hbm_bytes) + 1.0)
+    # off-chip tiers still cross the on-chip buffer: rates add
+    assert on_chip == per_bit
+    assert hbm == per_bit + h.hbm_fj_per_bit
+    assert fabric == per_bit + (h.hbm_fj_per_bit + h.fabric_fj_per_bit)
+    assert on_chip < hbm < fabric
+
+
+def test_traffic_energy_is_linear_in_bytes():
+    h = memory.KVCacheHierarchy()
+    e1 = h.traffic_energy_fj(2.0, 1000.0, 500.0, 1.0)
+    e2 = h.traffic_energy_fj(2.0, 2000.0, 1000.0, 1.0)
+    assert e2 == 2.0 * e1
+    assert h.traffic_energy_fj(2.0, 0.0, 0.0, 1.0) == 0.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(per_bit=st.floats(0.1, 100.0),
+       read_mb=st.floats(0.0, 4096.0),
+       write_mb=st.floats(0.0, 4096.0),
+       live_exp=st.integers(10, 38))
+def test_grid_matches_scalar_bitwise(per_bit, read_mb, write_mb, live_exp):
+    """Every (D,) entry of the vectorized pricing is bitwise the scalar
+    per-design call — across all three tiers (live_exp spans them)."""
+    h = memory.KVCacheHierarchy()
+    live = float(1 << live_exp)
+    reads, writes = read_mb * 2.0 ** 20, write_mb * 2.0 ** 20
+    per_bits = np.array([per_bit, per_bit * 2.0, per_bit / 3.0])
+    got = memory.kv_traffic_energy_grid(per_bits, reads, writes, live, h)
+    assert got.shape == (3,)
+    for d in range(3):
+        assert got[d] == h.traffic_energy_fj(float(per_bits[d]), reads,
+                                             writes, live)
+
+
+def test_grid_tier_boundaries_match_scalar():
+    """Exactly-at-capacity working sets stay in the cheaper tier, in
+    both the scalar and the vectorized path."""
+    h = memory.KVCacheHierarchy()
+    pb = np.array([1.0])
+    for live in (float(h.sram_kv_bytes), float(h.sram_kv_bytes) + 1.0,
+                 float(h.hbm_bytes), float(h.hbm_bytes) + 1.0):
+        got = memory.kv_traffic_energy_grid(pb, 1.0, 0.0, live, h)
+        assert got[0] == h.traffic_energy_fj(1.0, 1.0, 0.0, live)

@@ -1,0 +1,146 @@
+"""Serving-phase lowering in ``core.lm_bridge``: ctx_len threading,
+phase-split workloads, and the KV-cache byte accounting the hierarchy
+prices."""
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import lm_bridge
+from repro.core.workloads import PhaseWorkload
+from repro.testing.hypocompat import given, settings, st
+
+
+# --------------------------------------------------------------------------- #
+# ctx_len threading (the historical bug: lm_imc_workloads hardcoded 4096)      #
+# --------------------------------------------------------------------------- #
+def test_ctx_len_reaches_non_mvm_accounting():
+    """Global-attention models scale their non-MVM MACs linearly with
+    context; sliding-window models clamp.  A hardcoded ctx would make
+    the two ratios identical."""
+    qwen = configs.get("qwen1.5-0.5b")        # global attention everywhere
+    gemma = configs.get("gemma3-1b")          # sliding window + periodic global
+    assert not qwen.attn.sliding_window       # 0/None = global everywhere
+    assert gemma.attn.sliding_window
+
+    def ratio(cfg):
+        hi = lm_bridge.lm_block_spec(cfg, ctx_len=8192).non_mvm_macs_per_token
+        lo = lm_bridge.lm_block_spec(cfg, ctx_len=512).non_mvm_macs_per_token
+        return hi / lo
+
+    assert ratio(qwen) == 8192 / 512          # pure global attn: exact
+    # window layers stopped growing at 512, only the global ones scale
+    assert 1.0 < ratio(gemma) < ratio(qwen) / 2
+
+
+def test_lm_imc_workloads_ctx_changes_nothing_for_mvms():
+    """ctx_len feeds the coverage accounting, not the projection MVMs —
+    the workload list itself is ctx-invariant."""
+    cfg = configs.get("qwen1.5-0.5b")
+    a = lm_bridge.lm_imc_workloads(cfg, tokens=32, ctx_len=512)
+    b = lm_bridge.lm_imc_workloads(cfg, tokens=32, ctx_len=8192)
+    assert [(l.name, l.dims) for l in a] == [(l.name, l.dims) for l in b]
+
+
+def test_phase_prefix_and_backward_compat_naming():
+    cfg = configs.get("qwen1.5-0.5b")
+    flat = lm_bridge.lm_imc_workloads(cfg, tokens=8)
+    pre = lm_bridge.lm_imc_workloads(cfg, tokens=8, phase="prefill")
+    assert not any(l.name.startswith(("prefill.", "decode.")) for l in flat)
+    assert all(l.name == "prefill." + f.name for l, f in zip(pre, flat))
+
+
+# --------------------------------------------------------------------------- #
+# phase-split operating points                                                 #
+# --------------------------------------------------------------------------- #
+def test_serving_points_phase_shapes():
+    cfg = configs.get("qwen1.5-0.5b")
+    (pt,) = lm_bridge.serving_points(cfg, [(64, 4)], gen_len=16)
+    assert pt.prompt_len == 64 and pt.batch == 4 and pt.gen_len == 16
+    prefill, decode = pt.phases
+    assert prefill.phase == "prefill" and decode.phase == "decode"
+    # prefill batches the whole prompt; decode is one step at B=batch
+    assert all(l.dims["B"] == 64 * 4 for l in prefill.layers)
+    assert all(l.dims["B"] == 4 for l in decode.layers)
+    assert prefill.repeats == float(cfg.n_super)
+    assert decode.repeats == float(cfg.n_super) * 16
+    assert prefill.tokens_out == 0.0
+    assert decode.tokens_out == 4.0 * 16
+    assert pt.tokens_out == 64.0
+
+
+def test_phase_workload_rejects_unknown_phase():
+    with pytest.raises(ValueError):
+        PhaseWorkload(phase="chunked", layers=(), repeats=1.0)
+    cfg = configs.get("qwen1.5-0.5b")
+    with pytest.raises(ValueError):
+        lm_bridge.kv_phase_traffic(cfg, "chunked", 16, 1)
+
+
+# --------------------------------------------------------------------------- #
+# KV byte accounting                                                           #
+# --------------------------------------------------------------------------- #
+def test_kv_live_bytes_matches_cache_specs_global_attn():
+    """For a global-attention model the live working set IS the
+    allocated cache: the analytic accounting must match ``LM.cache_specs``
+    byte-for-byte."""
+    from repro.models.lm import LM
+    from repro.roofline import _specs_bytes
+    cfg = configs.get("qwen1.5-0.5b")
+    for batch, ctx in ((1, 256), (8, 4096)):
+        want = _specs_bytes(LM(cfg).cache_specs(batch, ctx))
+        assert lm_bridge.kv_live_bytes(cfg, ctx, batch) == want
+
+
+def test_kv_live_bytes_window_clamps_below_allocation():
+    """Sliding-window layers keep only their window live, so the live
+    set sits strictly below the full-seq allocation once ctx exceeds
+    the window."""
+    from repro.models.lm import LM
+    from repro.roofline import _specs_bytes
+    cfg = configs.get("gemma3-1b")
+    ctx = 4 * cfg.attn.sliding_window
+    alloc = _specs_bytes(LM(cfg).cache_specs(1, ctx))
+    live = lm_bridge.kv_live_bytes(cfg, ctx, 1)
+    assert live < alloc
+    # below the window nothing clamps
+    small = cfg.attn.sliding_window // 2
+    assert lm_bridge.kv_live_bytes(cfg, small, 1) == \
+        _specs_bytes(LM(cfg).cache_specs(1, small))
+
+
+@settings(max_examples=80, deadline=None)
+@given(lo=st.integers(1, 300), n=st.integers(0, 300),
+       window=st.integers(1, 400))
+def test_span_sum_closed_form(lo, n, window):
+    hi = lo + n
+    want = float(sum(min(t, window) for t in range(lo, hi + 1)))
+    assert lm_bridge._span_sum(lo, hi, window) == want
+    assert lm_bridge._span_sum(hi + 1, hi, window) == 0.0
+
+
+def test_kv_phase_traffic_prefill_quadratic_global():
+    """Global attention reads the growing prefix: doubling the prompt
+    roughly 4x's the prefill read volume, while writes stay linear."""
+    cfg = configs.get("qwen1.5-0.5b")
+    r1, w1 = lm_bridge.kv_phase_traffic(cfg, "prefill", 256, 1)
+    r2, w2 = lm_bridge.kv_phase_traffic(cfg, "prefill", 512, 1)
+    assert w2 == 2.0 * w1
+    assert 3.5 < r2 / r1 <= 4.0
+    # batch scales everything linearly
+    rb, wb = lm_bridge.kv_phase_traffic(cfg, "prefill", 256, 4)
+    assert (rb, wb) == (4.0 * r1, 4.0 * w1)
+
+
+def test_kv_phase_traffic_decode_window_saturates():
+    """Once context passes the sliding window, each extra decode step
+    reads a constant live window — per-step reads stop growing."""
+    gemma = configs.get("gemma3-1b")
+    w = gemma.attn.sliding_window
+    r_a, _ = lm_bridge.kv_phase_traffic(gemma, "decode", 4 * w, 1, gen_len=8)
+    r_b, _ = lm_bridge.kv_phase_traffic(gemma, "decode", 8 * w, 1, gen_len=8)
+    qwen = configs.get("qwen1.5-0.5b")
+    q_a, _ = lm_bridge.kv_phase_traffic(qwen, "decode", 4 * w, 1, gen_len=8)
+    q_b, _ = lm_bridge.kv_phase_traffic(qwen, "decode", 8 * w, 1, gen_len=8)
+    # global attn keeps growing with context; the windowed share does not
+    assert q_b / q_a > r_b / r_a

@@ -97,3 +97,21 @@ def test_active_params_moe_scaling():
     active = roofline.active_params(moe_cfg)
     total = moe_cfg.n_params()
     assert active < total * 0.35               # 8 of 64 experts + shared
+
+
+def test_decode_min_bytes_includes_per_step_writes():
+    """Decode's analytic HBM floor = params + whole-cache read + the
+    per-step write-back (cache_specs at seq=1: one new slot per
+    attention layer, the full recurrent state for SSM layers)."""
+    from repro import configs
+    from repro.models.lm import LM
+    cfg = configs.get("qwen1.5-0.5b")
+    shape = configs.SHAPES["decode_32k"]
+    lm = LM(cfg)
+    param_b = roofline._specs_bytes(cfg.param_specs())
+    cache_b = roofline._specs_bytes(
+        lm.cache_specs(shape.global_batch, shape.seq_len))
+    write_b = roofline._specs_bytes(lm.cache_specs(shape.global_batch, 1))
+    got = roofline.analytic_min_bytes(cfg, shape, chips=4)
+    assert got == (param_b + cache_b + write_b) / 4
+    assert write_b > 0                         # the fixed omission

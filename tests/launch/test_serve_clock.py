@@ -1,0 +1,55 @@
+"""Regression pin for the serving benchmark clocks: ``ServeLoop.generate``
+must force in-flight async work before stopping either timer.  jax
+dispatch returns immediately, so a dispatch-only return used to charge
+the prefill tail to the first decode step and drop the last decode step
+entirely — the stats looked faster than the hardware."""
+
+import time
+
+import numpy as np
+
+from repro.launch import serve
+
+
+class _InFlight:
+    """Stand-in for a dispatched-but-unfinished jax value: the work
+    only 'happens' when something blocks on it."""
+
+    def __init__(self, delay: float):
+        self.delay = delay
+        self.forced = False
+
+    def block_until_ready(self):
+        if not self.forced:
+            time.sleep(self.delay)
+            self.forced = True
+        return self
+
+
+def test_generate_clocks_include_dispatch_only_work(monkeypatch):
+    prefill_delay, decode_delay = 0.12, 0.12
+    batch, n_gen = 2, 3
+    logits = np.zeros((batch, 1, 4), dtype=np.float32)
+
+    loop = serve.ServeLoop.__new__(serve.ServeLoop)
+    loop.batch = batch
+    loop._prefill = lambda params, b: (logits, _InFlight(prefill_delay), 0)
+    loop._decode = lambda params, cache, tok, pos: (logits, cache)
+
+    calls = {"n": 0}
+
+    def fake_sample(lg, key, temperature=0.8, top_k=40):
+        calls["n"] += 1
+        if calls["n"] == n_gen + 1:           # the final, never-read token
+            return _InFlight(decode_delay)
+        return np.zeros(batch, dtype=np.int32)
+
+    monkeypatch.setattr(serve, "sample", fake_sample)
+
+    prompts = np.zeros((batch, 5), dtype=np.int32)
+    tokens, stats = loop.generate(None, prompts, n_gen)
+    assert tokens.shape == (batch, n_gen)
+    # both clocks must have waited for the in-flight values
+    assert stats["prefill_s"] >= prefill_delay
+    assert stats["decode_s"] >= decode_delay
+    assert stats["decode_tok_per_s"] <= batch * n_gen / decode_delay
