@@ -1,69 +1,17 @@
 """Shared benchmark plumbing: CSV rows in the harness format
-``name,us_per_call,derived``, async-safe timing helpers, and atomic
-artifact writes."""
+``name,us_per_call,derived`` and timing helpers.  The async-safe
+``sync`` walker and the atomic ``write_json_atomic`` writer moved to
+:mod:`repro.obs` (the telemetry layer owns both) and are re-exported
+here for the existing benchmark call sites."""
 
 from __future__ import annotations
 
-import dataclasses
-import json
-import os
-import tempfile
 import time
 from typing import Callable
 
+from repro.obs import sync, write_json_atomic  # noqa: F401 (re-export)
+
 ROWS: list[tuple[str, float, str]] = []
-
-
-def sync(x):
-    """Block until every jax array reachable from ``x`` has a value.
-
-    jax dispatch is asynchronous: stopping a ``perf_counter`` clock
-    without forcing the result under-reports wall time by whatever is
-    still in flight.  Walks containers and dataclasses; NumPy arrays
-    and scalars pass through untouched.  Returns ``x`` so it can wrap a
-    call expression inline.
-    """
-    seen: set[int] = set()
-
-    def walk(v) -> None:
-        if id(v) in seen:
-            return
-        seen.add(id(v))
-        ready = getattr(v, "block_until_ready", None)
-        if ready is not None:
-            ready()
-        elif dataclasses.is_dataclass(v) and not isinstance(v, type):
-            for f in dataclasses.fields(v):
-                walk(getattr(v, f.name))
-        elif isinstance(v, dict):
-            for item in v.values():
-                walk(item)
-        elif isinstance(v, (list, tuple)):
-            for item in v:
-                walk(item)
-
-    walk(x)
-    return x
-
-
-def write_json_atomic(path: str, obj) -> None:
-    """Write ``obj`` as JSON via tmp-file + rename, so an interrupted
-    benchmark can never leave a truncated artifact behind."""
-    d = os.path.dirname(os.path.abspath(path))
-    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench-", suffix=".tmp")
-    try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(obj, f, indent=2, sort_keys=True)
-            f.write("\n")
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
-    except BaseException:
-        try:
-            os.unlink(tmp)
-        except OSError:
-            pass
-        raise
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

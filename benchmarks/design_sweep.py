@@ -39,6 +39,33 @@ Env knobs
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
     ``REPRO_SWEEP_SHARDS=auto python -m benchmarks.design_sweep
     --networks``.
+``REPRO_TRACE``
+    Turn on span tracing (``repro.obs``).  The fused sweep then records
+    nested wall-time spans — lattice builds, per-bucket jit dispatch
+    with compile-vs-execute attribution, kernel calls — and
+    ``--networks`` writes ``design_sweep_trace.json`` (Chrome
+    trace-event format, loadable in ``chrome://tracing``/Perfetto) plus
+    ``design_sweep_telemetry.jsonl`` next to the artifact.  Tracing is
+    inert: sweep outputs are bitwise identical on/off.
+``REPRO_TRACE_DIR``
+    Directory for the trace files above (default: current directory).
+
+Telemetry artifact schema
+-------------------------
+``BENCH_sweep.json`` carries a ``"telemetry"`` block
+(``repro.obs.telemetry_block``):
+
+* ``trace_enabled`` — whether spans were recorded this run;
+* ``metrics`` — full registry snapshot (``dse.cache.*`` layer-result
+  cache hits/misses/evictions, ``dse.lattice.*`` slot/lane/eviction
+  counters, ``energy.kernel.*`` dispatch/compile-proxy counters,
+  ``dse.bucket.first_call``/``dse.bucket.warm`` compile-vs-execute
+  timer splits, ``compilecache.*`` persistent-cache gauges);
+* ``spans`` — per-name ``{count, total_s}`` rollup of recorded spans;
+* ``cache`` — headline hit-rate/eviction numbers;
+* ``span_coverage_cold`` (tracing only) — fraction of the cold-sweep
+  wall covered by the root ``dse.sweep_networks`` span;
+* ``trace_files`` (tracing only) — paths of the exported traces.
 
 Run:  PYTHONPATH=src python -m benchmarks.design_sweep \
           [--smoke] [--dataflows] [--networks] [--out BENCH_sweep.json]
@@ -51,6 +78,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import designs, dse, energy, mapping, workloads
 from repro.core.compilecache import compilation_cache_info
 
@@ -147,6 +175,7 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
 
     dse.cache_clear()
     energy.grid_kernel_reset()
+    obs.drain_spans()
     t0 = time.perf_counter()
     results = sync(dse.sweep_networks(nets, grid, schedules=schedules))
     t_cold = time.perf_counter() - t0
@@ -207,6 +236,18 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
         "padding_waste": cache["padding_waste"],
         "per_network": per_network,
     }
+    tele = obs.telemetry_block()
+    if obs.trace_enabled():
+        # the root sweep span covers lattice build + every bucket
+        # dispatch + assembly; its share of the measured cold wall is
+        # the trace-coverage acceptance number
+        roots = [s for s in obs.iter_spans()
+                 if s["name"] == "dse.sweep_networks"]
+        if roots:
+            tele["span_coverage_cold"] = min(
+                1.0, roots[0]["dur_us"] / 1e6 / max(t_cold, 1e-9))
+        tele["trace_files"] = obs.export_all(prefix="design_sweep")
+    artifact["telemetry"] = tele
     write_json_atomic(out, artifact)
     print(f"# wrote {out}: cold={t_cold:.3f}s warm={t_warm:.3f}s "
           f"compiles~{kernel_cold['distinct_shapes']} "

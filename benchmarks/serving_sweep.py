@@ -41,6 +41,18 @@ Grid knobs
 analog / tokens_per_s / j_per_token / energy_fj / kv_energy_fj /
 cycles / pareto]}, ...]}}}`` — written atomically (tmp + rename).
 
+The artifact also carries a ``"telemetry"`` block
+(``repro.obs.telemetry_block``): tracing state, the full metrics
+snapshot (``dse.cache.*`` / ``dse.lattice.*`` / ``energy.kernel.*`` /
+``dse.bucket.*`` compile-vs-execute timers), a per-name span rollup and
+cache headline numbers.  With ``REPRO_TRACE=1`` the run additionally
+writes ``serving_sweep_trace.json`` (Chrome trace-event format) and
+``serving_sweep_telemetry.jsonl`` into ``REPRO_TRACE_DIR`` (default
+current directory) and records their paths under
+``telemetry.trace_files``; per-point ``dse.serving_point`` spans split
+the fused pass across operating points.  Tracing is inert — results
+are bitwise identical on/off.
+
 Run:  PYTHONPATH=src python -m benchmarks.serving_sweep \
           [--smoke] [--dataflows] [--out BENCH_serving.json]
 """
@@ -52,7 +64,7 @@ import time
 
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.core import dse, lm_bridge
 
 from .common import emit, write_json_atomic
@@ -107,6 +119,7 @@ def run(smoke: bool = False, arch: str = "qwen1.5-0.5b",
     models = {}
     oracle = {"designs_checked": 0, "points_checked": 0,
               "bitwise_equal": True}
+    obs.drain_spans()
     t0 = time.perf_counter()
     for a in archs:
         cfg = configs.get(a)
@@ -156,6 +169,10 @@ def run(smoke: bool = False, arch: str = "qwen1.5-0.5b",
         "oracle": oracle,
         "models": models,
     }
+    tele = obs.telemetry_block()
+    if obs.trace_enabled():
+        tele["trace_files"] = obs.export_all(prefix="serving_sweep")
+    artifact["telemetry"] = tele
     write_json_atomic(out, artifact)
     n_points = sum(len(m["points"]) for m in models.values())
     print(f"# wrote {out}: {n_points} points, oracle bitwise over "

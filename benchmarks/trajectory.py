@@ -78,6 +78,15 @@ def append(artifact_path: str = "BENCH_sweep.json",
     else:
         cc = artifact.get("compilation_cache") or {}
         entry["compile_cache_entries"] = cc.get("entries", 0)
+    tele = artifact.get("telemetry")
+    if tele:
+        # telemetry headline: cache thrash + tracing state travel with
+        # the history; the full metrics snapshot stays in the artifact
+        cache = tele.get("cache") or {}
+        entry["cache_hit_rate"] = cache.get("hit_rate", 0.0)
+        entry["cache_evictions"] = cache.get("evictions", 0)
+        entry["lattice_evictions"] = cache.get("lattice_evictions", 0)
+        entry["trace_enabled"] = bool(tele.get("trace_enabled", False))
 
     history: list[dict] = []
     if os.path.exists(traj_path):

@@ -28,6 +28,8 @@ from __future__ import annotations
 import os
 from pathlib import Path
 
+from .. import obs
+
 _DISABLED_VALUES = {"", "0", "off", "none", "disabled", "false"}
 
 #: tri-state: None = not yet configured, "" = disabled, else the dir
@@ -69,16 +71,25 @@ def enable_compilation_cache(cache_dir: str | None = None) -> str | None:
     return cache_dir
 
 
+def persistent_cache_dir() -> str | None:
+    """Active persistent-cache directory, or ``None`` when persistence
+    is disabled or not yet configured."""
+    return _STATE["dir"] or None
+
+
 def compilation_cache_info() -> dict:
     """Artifact-friendly snapshot: active dir (or None) and entry
-    count/bytes currently on disk."""
+    count/bytes currently on disk.  Also refreshes the registry gauges
+    ``compilecache.entries`` / ``compilecache.bytes`` so telemetry
+    blocks carry the same figures."""
     d = _STATE["dir"]
-    if not d or not os.path.isdir(d):
-        return {"dir": d or None, "entries": 0, "bytes": 0}
     entries = 0
     size = 0
-    for p in Path(d).iterdir():
-        if p.is_file():
-            entries += 1
-            size += p.stat().st_size
-    return {"dir": d, "entries": entries, "bytes": size}
+    if d and os.path.isdir(d):
+        for p in Path(d).iterdir():
+            if p.is_file():
+                entries += 1
+                size += p.stat().st_size
+    obs.gauge("compilecache.entries").set(entries)
+    obs.gauge("compilecache.bytes").set(size)
+    return {"dir": d or None, "entries": entries, "bytes": size}

@@ -106,10 +106,12 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import time
 from typing import Callable, Sequence
 
 import numpy as np
 
+from .. import obs
 from .designs import MacroBatch
 from .energy import EnergyBreakdown
 from .hardware import IMCMacro
@@ -290,7 +292,6 @@ _ENGINES = {"batch": best_mapping_batched, "scalar": best_mapping_scalar}
 _CACHE: "collections.OrderedDict[tuple, LayerResult]" = \
     collections.OrderedDict()
 _CACHE_MAX = 4096
-_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 #: per-shape union-lattice memo: (shape, designs signature, schedules,
 #: max_candidates) -> mapping.MappingGrid.  Repeated sweeps over the
@@ -302,12 +303,30 @@ _CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 _LATTICE_CACHE: "collections.OrderedDict[tuple, object]" = \
     collections.OrderedDict()
 _LATTICE_CACHE_MAX = 512
-_LATTICE_CACHE_STATS = {"evictions": 0}
+
+#: all dse bookkeeping lives in the process-global metrics registry
+#: (``repro.obs``) under the ``dse.`` subsystem; ``cache_info()`` is a
+#: compatibility view over it.  Handles are bound once so hot-path
+#: increments are a single method call.
+_C_HITS = obs.counter("dse.cache.hits")
+_C_MISSES = obs.counter("dse.cache.misses")
+_C_EVICTIONS = obs.counter("dse.cache.evictions")
+_C_LAT_EVICTIONS = obs.counter("dse.lattice.evictions")
 #: fused-lattice bookkeeping: distinct shape slots priced, eligible
 #: layers they covered, and the lane/padding-waste tally of every
 #: bucket dispatched (see ``cache_info``).
-_LATTICE_STATS = {"lattice_slots": 0, "lattice_layers": 0,
-                  "lattice_lanes": 0, "lattice_pad_lanes": 0}
+_C_LAT_SLOTS = obs.counter("dse.lattice.slots")
+_C_LAT_LAYERS = obs.counter("dse.lattice.layers")
+_C_LAT_LANES = obs.counter("dse.lattice.lanes")
+_C_LAT_PAD_LANES = obs.counter("dse.lattice.pad_lanes")
+#: per-bucket wall-time split: ``first_call`` buckets dispatched a
+#: kernel shape XLA had not seen this process (their wall includes
+#: trace+compile — or a persistent-cache deserialize when
+#: ``compilecache`` has the shape on disk); ``warm`` buckets are pure
+#: execute.  The difference IS the compile cost the fused sweep exists
+#: to amortize.
+_T_BUCKET_FIRST = obs.timer("dse.bucket.first_call")
+_T_BUCKET_WARM = obs.timer("dse.bucket.warm")
 
 
 def _shape_key(layer: Layer) -> tuple:
@@ -328,11 +347,9 @@ def _cache_key(layer: Layer, macro: IMCMacro, mem: MemoryModel,
 def cache_clear() -> None:
     _CACHE.clear()
     _LATTICE_CACHE.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
-    _CACHE_STATS["evictions"] = 0
-    _LATTICE_CACHE_STATS["evictions"] = 0
-    for k in _LATTICE_STATS:
-        _LATTICE_STATS[k] = 0
+    # counters, bucket timers and any other dse-subsystem metrics reset
+    # together so a fresh measurement window starts clean
+    obs.reset("dse.")
 
 
 def cache_info() -> dict[str, int | float]:
@@ -343,14 +360,22 @@ def cache_info() -> dict[str, int | float]:
     lanes that were quantum-padding filler — and the LRU bookkeeping of
     both memo caches (``size``/``evictions`` for the layer-result
     cache, ``lattice_size``/``lattice_evictions`` for the union-lattice
-    memo)."""
-    lanes = _LATTICE_STATS["lattice_lanes"]
-    waste = (_LATTICE_STATS["lattice_pad_lanes"] / lanes) if lanes else 0.0
-    return {"size": len(_CACHE), **_CACHE_STATS,
+    memo).
+
+    Compatibility view over the ``dse.*`` metrics of the process-global
+    registry (``repro.obs``) — the historical return shape is
+    unchanged; the registry snapshot additionally carries the same
+    counters plus the per-bucket first-call/warm timing split."""
+    lanes = _C_LAT_LANES.value
+    waste = (_C_LAT_PAD_LANES.value / lanes) if lanes else 0.0
+    return {"size": len(_CACHE),
+            "hits": _C_HITS.value,
+            "misses": _C_MISSES.value,
+            "evictions": _C_EVICTIONS.value,
             "lattice_size": len(_LATTICE_CACHE),
-            "lattice_evictions": _LATTICE_CACHE_STATS["evictions"],
-            "lattice_slots": _LATTICE_STATS["lattice_slots"],
-            "lattice_layers": _LATTICE_STATS["lattice_layers"],
+            "lattice_evictions": _C_LAT_EVICTIONS.value,
+            "lattice_slots": _C_LAT_SLOTS.value,
+            "lattice_layers": _C_LAT_LAYERS.value,
             "padding_waste": waste}
 
 
@@ -378,16 +403,16 @@ def best_mapping(layer: Layer, macro: IMCMacro, mem: MemoryModel,
     key = _cache_key(layer, macro, mem, objective, alpha, scheds)
     hit = _CACHE.get(key)
     if hit is not None:
-        _CACHE_STATS["hits"] += 1
+        _C_HITS.inc()
         _CACHE.move_to_end(key)
         return hit if hit.layer.name == layer.name \
             else dataclasses.replace(hit, layer=layer)
-    _CACHE_STATS["misses"] += 1
+    _C_MISSES.inc()
     res = _ENGINES[engine](layer, macro, mem, objective=objective,
                            alpha=alpha, schedules=scheds)
     while len(_CACHE) >= _CACHE_MAX:
         _CACHE.popitem(last=False)
-        _CACHE_STATS["evictions"] += 1
+        _C_EVICTIONS.inc()
     _CACHE[key] = res
     return res
 
@@ -517,11 +542,15 @@ def _grid_for(layer: Layer, designs: MacroBatch, scheds,
            max_candidates)
     grid = _LATTICE_CACHE.get(key)
     if grid is None:
-        grid = candidate_grid(layer, designs, max_candidates=max_candidates,
-                              schedules=scheds)
+        with obs.span("dse.lattice_build", layer=layer.name,
+                      designs=len(designs)) as sp:
+            grid = candidate_grid(layer, designs,
+                                  max_candidates=max_candidates,
+                                  schedules=scheds)
+            sp.set(lanes=len(grid))
         while len(_LATTICE_CACHE) >= _LATTICE_CACHE_MAX:
             _LATTICE_CACHE.popitem(last=False)
-            _LATTICE_CACHE_STATS["evictions"] += 1
+            _C_LAT_EVICTIONS.inc()
         _LATTICE_CACHE[key] = grid
     else:
         _LATTICE_CACHE.move_to_end(key)
@@ -540,52 +569,80 @@ def _price_buckets(buckets, designs: MacroBatch, objective: str,
     reductions happen here in NumPy with the scalar association (see
     the module docstring's bitwise contract); the masked lanes enter
     the argmin as finite sentinels, never as inf/NaN arithmetic.
+
+    Telemetry: each bucket dispatch is a ``dse.price_bucket`` span and
+    one observation of the ``dse.bucket.first_call`` / ``.warm`` timer
+    pair — a bucket counts as *first call* when its jit dispatch added
+    a kernel shape XLA had not seen this process (the distinct-shape
+    delta of ``energy.grid_kernel_info``), so its wall includes
+    trace+compile time (or a persistent compile-cache deserialize; the
+    span's ``persistent_cache`` attr records whether one was active to
+    attribute suspiciously-fast first calls).  Warm buckets are pure
+    execute.  The split is what "compile vs execute" means per bucket.
     """
+    from .compilecache import persistent_cache_dir
+    from .energy import grid_kernel_info
     from .mapping import evaluate_network_grid
     from .memory import traffic_energy_grid
 
     out: list[tuple | None] = [None] * sum(
         len(net.shape_indices) for net in buckets)
-    for net in buckets:
-        costs = evaluate_network_grid(net, designs, alpha=alpha)
-        resident = np.asarray(
-            [_layer_resident_bytes(l) for l in net.layers],
-            dtype=np.int64)[net.lane_layer]
-        mem_fj = traffic_energy_grid(per_bit, costs, resident,
-                                     buffer_bytes=buffer_bytes,
-                                     dram_fj_per_bit=dram)
-        # The scalar association, assembled with in-place adds to keep
-        # (D, Ctot) temporaries down: total_fj is
-        # (((e_wl + e_bl) + e_logic) + (e_adc + e_tree)) + e_dac + e_ww
-        # and the memory side is ((w + i) + o) + p, then macro + mem —
-        # each += performs the identical float add the property chain
-        # would, so every lane stays bitwise.
-        e = costs.macro_energy
-        total = e.e_wl + e.e_bl
-        total += e.e_logic
-        total += e.e_adc + e.e_adder_tree
-        total += e.e_dac
-        total += e.e_weight_write
-        mem_total = mem_fj["weights"]
-        mem_total += mem_fj["inputs"]
-        mem_total += mem_fj["outputs"]
-        mem_total += mem_fj["psums"]
-        total += mem_total
-        if objective == "energy":
-            col = np.where(net.legal, total, _SENTINEL_F64)
-        elif objective == "latency":
-            col = np.where(net.legal, costs.cycles, _SENTINEL_I64)
-        else:                                     # edp
-            col = np.where(net.legal, total * costs.cycles, _SENTINEL_F64)
-        for row, si in enumerate(net.shape_indices):
-            seg = net.segment(row)
-            best_idx = np.argmin(col[:, seg], axis=1)
-            take = lambda a: np.take_along_axis(
-                a[:, seg], best_idx[:, None], axis=1)[:, 0]
-            out[si] = (net.grids[row], best_idx,
-                       take(total), take(costs.cycles))
-        _LATTICE_STATS["lattice_lanes"] += len(net)
-        _LATTICE_STATS["lattice_pad_lanes"] += net.pad_lanes
+    for bi, net in enumerate(buckets):
+        shapes_before = grid_kernel_info()["distinct_shapes"]
+        t0 = time.perf_counter()
+        with obs.span("dse.price_bucket", bucket=bi, lanes=len(net),
+                      layers=len(net.layers), designs=net.n_designs) as sp:
+            costs = evaluate_network_grid(net, designs, alpha=alpha)
+            # the grid kernel converts to NumPy before returning, so
+            # the lap already includes device execution — no async
+            # leakage into the argmin remainder of the span
+            sp.lap("kernel")
+            new_shapes = (grid_kernel_info()["distinct_shapes"]
+                          - shapes_before)
+            timer = _T_BUCKET_FIRST if new_shapes else _T_BUCKET_WARM
+            timer.observe(time.perf_counter() - t0)
+            sp.set(new_kernel_shapes=new_shapes,
+                   first_call=bool(new_shapes),
+                   persistent_cache=persistent_cache_dir() is not None)
+            resident = np.asarray(
+                [_layer_resident_bytes(l) for l in net.layers],
+                dtype=np.int64)[net.lane_layer]
+            mem_fj = traffic_energy_grid(per_bit, costs, resident,
+                                         buffer_bytes=buffer_bytes,
+                                         dram_fj_per_bit=dram)
+            # The scalar association, assembled with in-place adds to
+            # keep (D, Ctot) temporaries down: total_fj is
+            # (((e_wl + e_bl) + e_logic) + (e_adc + e_tree)) + e_dac
+            # + e_ww and the memory side is ((w + i) + o) + p, then
+            # macro + mem — each += performs the identical float add
+            # the property chain would, so every lane stays bitwise.
+            e = costs.macro_energy
+            total = e.e_wl + e.e_bl
+            total += e.e_logic
+            total += e.e_adc + e.e_adder_tree
+            total += e.e_dac
+            total += e.e_weight_write
+            mem_total = mem_fj["weights"]
+            mem_total += mem_fj["inputs"]
+            mem_total += mem_fj["outputs"]
+            mem_total += mem_fj["psums"]
+            total += mem_total
+            if objective == "energy":
+                col = np.where(net.legal, total, _SENTINEL_F64)
+            elif objective == "latency":
+                col = np.where(net.legal, costs.cycles, _SENTINEL_I64)
+            else:                                 # edp
+                col = np.where(net.legal, total * costs.cycles,
+                               _SENTINEL_F64)
+            for row, si in enumerate(net.shape_indices):
+                seg = net.segment(row)
+                best_idx = np.argmin(col[:, seg], axis=1)
+                take = lambda a: np.take_along_axis(
+                    a[:, seg], best_idx[:, None], axis=1)[:, 0]
+                out[si] = (net.grids[row], best_idx,
+                           take(total), take(costs.cycles))
+        _C_LAT_LANES.inc(len(net))
+        _C_LAT_PAD_LANES.inc(net.pad_lanes)
     return out
 
 
@@ -605,9 +662,13 @@ def _price_shapes(shape_layers: Sequence[Layer], designs: MacroBatch,
     # unsharded runs see the exact same bucket shapes as before
     shards = lane_shards()
     pad_q = PAD_QUANTUM if shards <= 1 else math.lcm(PAD_QUANTUM, shards)
-    buckets = network_grid(shape_layers, designs, schedules=scheds,
-                           grids=grids, pad_quantum=pad_q,
-                           max_lanes=max_lanes)
+    with obs.span("dse.network_grid_build", shapes=len(shape_layers),
+                  designs=len(designs)) as sp:
+        buckets = network_grid(shape_layers, designs, schedules=scheds,
+                               grids=grids, pad_quantum=pad_q,
+                               max_lanes=max_lanes)
+        sp.set(buckets=len(buckets),
+               lanes=sum(len(b) for b in buckets))
     return _price_buckets(buckets, designs, objective, alpha, per_bit,
                           buffer_bytes, dram)
 
@@ -638,6 +699,17 @@ def sweep_networks(networks: Sequence[tuple[str, Sequence[Layer]]],
     """
     if objective not in OBJECTIVES:
         raise KeyError(objective)
+    with obs.span("dse.sweep_networks", networks=len(networks),
+                  designs=len(designs), objective=objective):
+        return _sweep_networks_traced(networks, designs, objective, alpha,
+                                      mem, schedules)
+
+
+def _sweep_networks_traced(networks, designs, objective, alpha, mem,
+                           schedules) -> tuple[SweepResult, ...]:
+    """Body of :func:`sweep_networks`, under its root span — the span
+    covers lattice build, every bucket dispatch and result assembly, so
+    trace wall-time coverage of a sweep is the root span itself."""
     # persist XLA executables across processes (no-op after first call;
     # env knob REPRO_XLA_CACHE_DIR — see core.compilecache)
     from .compilecache import enable_compilation_cache
@@ -664,8 +736,8 @@ def sweep_networks(networks: Sequence[tuple[str, Sequence[Layer]]],
 
     priced = _price_shapes(shape_layers, designs, objective, alpha,
                            per_bit, buffer_bytes, dram, scheds)
-    _LATTICE_STATS["lattice_slots"] += len(shape_layers)
-    _LATTICE_STATS["lattice_layers"] += sum(len(n[2]) for n in nets)
+    _C_LAT_SLOTS.inc(len(shape_layers))
+    _C_LAT_LAYERS.inc(sum(len(n[2]) for n in nets))
 
     area = designs.area_mm2()
     results = []
@@ -832,41 +904,46 @@ def sweep_serving(points: Sequence[ServingPoint], designs: MacroBatch,
     phase's live working set.  Build ``points`` with
     ``lm_bridge.serving_points``.
     """
-    nets = []
-    for pt in points:
-        for ph in pt.phases:
-            nets.append((f"{pt.name}/{ph.phase}", list(ph.layers)))
-    sweeps = sweep_networks(nets, designs, objective=objective, alpha=alpha,
-                            mem=mem, schedules=schedules)
-    per_bit, _, _ = _mem_pricing(designs, mem)
-    f_clk = _f_clk_ghz(designs)
-    n_designs = len(designs)
+    with obs.span("dse.sweep_serving", points=len(points),
+                  designs=len(designs)):
+        nets = []
+        for pt in points:
+            for ph in pt.phases:
+                nets.append((f"{pt.name}/{ph.phase}", list(ph.layers)))
+        sweeps = sweep_networks(nets, designs, objective=objective,
+                                alpha=alpha, mem=mem, schedules=schedules)
+        per_bit, _, _ = _mem_pricing(designs, mem)
+        f_clk = _f_clk_ghz(designs)
+        n_designs = len(designs)
 
-    results = []
-    it = iter(sweeps)
-    for pt in points:
-        if pt.tokens_out <= 0:
-            raise ValueError(f"{pt.name}: no generated tokens "
-                             f"(gen_len must be >= 1)")
-        phase_sweeps = tuple(next(it) for _ in pt.phases)
-        energy = np.zeros(n_designs, dtype=np.float64)
-        kv = np.zeros(n_designs, dtype=np.float64)
-        cycles = np.zeros(n_designs, dtype=np.float64)
-        for ph, sw in zip(pt.phases, phase_sweeps):
-            energy = energy + sw.energy_fj * ph.repeats
-            cycles = cycles + sw.cycles.astype(np.float64) * ph.repeats
-            kv = kv + kv_traffic_energy_grid(
-                per_bit, ph.kv_read_bytes, ph.kv_write_bytes,
-                ph.kv_live_bytes, kv_hier)
-        total = energy + kv
-        time_s = cycles / (f_clk * 1e9)
-        results.append(ServingPointResult(
-            point=pt, objective=objective, designs=designs,
-            phase_sweeps=phase_sweeps,
-            energy_fj=energy, kv_energy_fj=kv, cycles=cycles,
-            tokens_per_s=pt.tokens_out / time_s,
-            j_per_token=(total * 1e-15) / pt.tokens_out))
-    return tuple(results)
+        results = []
+        it = iter(sweeps)
+        for pt in points:
+            if pt.tokens_out <= 0:
+                raise ValueError(f"{pt.name}: no generated tokens "
+                                 f"(gen_len must be >= 1)")
+            with obs.span("dse.serving_point", point=pt.name,
+                          phases=len(pt.phases)):
+                phase_sweeps = tuple(next(it) for _ in pt.phases)
+                energy = np.zeros(n_designs, dtype=np.float64)
+                kv = np.zeros(n_designs, dtype=np.float64)
+                cycles = np.zeros(n_designs, dtype=np.float64)
+                for ph, sw in zip(pt.phases, phase_sweeps):
+                    energy = energy + sw.energy_fj * ph.repeats
+                    cycles = (cycles
+                              + sw.cycles.astype(np.float64) * ph.repeats)
+                    kv = kv + kv_traffic_energy_grid(
+                        per_bit, ph.kv_read_bytes, ph.kv_write_bytes,
+                        ph.kv_live_bytes, kv_hier)
+                total = energy + kv
+                time_s = cycles / (f_clk * 1e9)
+                results.append(ServingPointResult(
+                    point=pt, objective=objective, designs=designs,
+                    phase_sweeps=phase_sweeps,
+                    energy_fj=energy, kv_energy_fj=kv, cycles=cycles,
+                    tokens_per_s=pt.tokens_out / time_s,
+                    j_per_token=(total * 1e-15) / pt.tokens_out))
+        return tuple(results)
 
 
 def serving_point_scalar(pt: ServingPoint, macro: IMCMacro,
@@ -1069,9 +1146,9 @@ def _map_network_grid(network: str, layers: Sequence[Layer],
     for layer in eligible:
         key = _cache_key(layer, macro, mem, objective, alpha, scheds)
         if key in _CACHE or key in pending:
-            _CACHE_STATS["hits"] += 1
+            _C_HITS.inc()
         else:
-            _CACHE_STATS["misses"] += 1
+            _C_MISSES.inc()
             pending[key] = layer
     if pending:
         res = sweep(network, list(pending.values()),

@@ -72,6 +72,7 @@ import os
 
 import numpy as np
 
+from .. import obs
 from . import tech as _tech
 from .hardware import IMCMacro
 from .schedule import WEIGHT_STATIONARY, Schedule
@@ -497,8 +498,13 @@ def set_lane_shards(n: int | None) -> None:
 #: compiled executables per argument-shape signature, so the number of
 #: distinct signatures seen is a faithful proxy for XLA compile count —
 #: the quantity the workload-axis fused sweep exists to minimize
-#: (``BENCH_sweep.json`` records both).
-_GRID_KERNEL_STATS = {"calls": 0, "sharded_calls": 0}
+#: (``BENCH_sweep.json`` records both).  Counts live in the
+#: process-global metrics registry (``repro.obs``, ``energy.kernel.*``);
+#: only the shape *set* stays module-local (the registry holds its
+#: cardinality as a gauge).
+_C_KERNEL_CALLS = obs.counter("energy.kernel.calls")
+_C_KERNEL_SHARDED = obs.counter("energy.kernel.sharded_calls")
+_G_KERNEL_SHAPES = obs.gauge("energy.kernel.distinct_shapes")
 _GRID_KERNEL_SHAPES: set[tuple] = set()
 
 
@@ -506,15 +512,15 @@ def grid_kernel_info() -> dict[str, int]:
     """Fused-kernel dispatch stats: total ``calls``,
     ``distinct_shapes`` (compile-count proxy) and ``sharded_calls``
     (dispatches that went through the shard_map path) since the last
-    reset."""
-    return {"calls": _GRID_KERNEL_STATS["calls"],
+    reset.  Compatibility view over the registry's ``energy.kernel.*``
+    metrics — the historical return shape is unchanged."""
+    return {"calls": _C_KERNEL_CALLS.value,
             "distinct_shapes": len(_GRID_KERNEL_SHAPES),
-            "sharded_calls": _GRID_KERNEL_STATS["sharded_calls"]}
+            "sharded_calls": _C_KERNEL_SHARDED.value}
 
 
 def grid_kernel_reset() -> None:
-    _GRID_KERNEL_STATS["calls"] = 0
-    _GRID_KERNEL_STATS["sharded_calls"] = 0
+    obs.reset("energy.kernel.")
     _GRID_KERNEL_SHAPES.clear()
 
 
@@ -679,8 +685,9 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
     # before the candidate axis.
     tile = (lambda a: a) if n_inputs.ndim == 1 else (lambda a: a[..., None, :])
 
-    _GRID_KERNEL_STATS["calls"] += 1
+    _C_KERNEL_CALLS.inc()
     _GRID_KERNEL_SHAPES.add((n_inputs.shape, len(designs.rows)))
+    _G_KERNEL_SHAPES.set(len(_GRID_KERNEL_SHAPES))
 
     # lane-sharded path: only when the lane axis divides evenly over the
     # mesh and every tile arg shares the full lane shape (the fused
@@ -688,6 +695,7 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
     # anything else falls back to the single-device jit.
     shards = lane_shards()
     kern = None
+    sharded = False
     if shards > 1 and n_inputs.shape[-1] % shards == 0 \
             and rows_used.shape == n_inputs.shape \
             and cols_used.shape == n_inputs.shape:
@@ -696,23 +704,30 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
         if shards <= jax.device_count():
             kern = _sharded_grid_kernel(
                 shards, 1 if n_inputs.ndim == 1 else 3)
-            _GRID_KERNEL_STATS["sharded_calls"] += 1
+            _C_KERNEL_SHARDED.inc()
+            sharded = True
     if kern is None:
         kern = _grid_kernel()
 
     cst = _design_constants(designs)
     col = lambda a: a[:, None]                     # (D,) -> (D, 1)
-    with enable_x64():
-        parts = kern(
-            col(cst["analog"]), col(cst["mmux1"]), col(cst["rows"]),
-            col(cst["d1"]), col(cst["bw"]), col(cst["m"]), col(cst["cc_bs"]),
-            col(cst["e_wl_line"]), col(cst["e_bl_word"]), col(cst["p_logic"]),
-            col(cst["adc_e"]), col(cst["denom_adc"]), col(cst["cols_per_adc"]),
-            col(cst["f_tree_a"]), col(cst["f_tree_d"]), col(cst["p_tree"]),
-            col(cst["denom_occ"]), col(cst["dac_e"]), col(cst["p_write"]),
-            tile(n_inputs), tile(rows_used), tile(cols_used),
-            tile(weight_loads), tile(sched_os), alpha)
-        parts = tuple(np.asarray(p, dtype=np.float64) for p in parts)
+    # np.asarray forces execution, so the span's wall covers dispatch
+    # through device completion (compile included on a fresh shape).
+    with obs.span("energy.grid_kernel", lanes=int(n_inputs.shape[-1]),
+                  designs=len(designs.rows), sharded=sharded):
+        with enable_x64():
+            parts = kern(
+                col(cst["analog"]), col(cst["mmux1"]), col(cst["rows"]),
+                col(cst["d1"]), col(cst["bw"]), col(cst["m"]),
+                col(cst["cc_bs"]), col(cst["e_wl_line"]),
+                col(cst["e_bl_word"]), col(cst["p_logic"]),
+                col(cst["adc_e"]), col(cst["denom_adc"]),
+                col(cst["cols_per_adc"]), col(cst["f_tree_a"]),
+                col(cst["f_tree_d"]), col(cst["p_tree"]),
+                col(cst["denom_occ"]), col(cst["dac_e"]), col(cst["p_write"]),
+                tile(n_inputs), tile(rows_used), tile(cols_used),
+                tile(weight_loads), tile(sched_os), alpha)
+            parts = tuple(np.asarray(p, dtype=np.float64) for p in parts)
     (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, macs,
      x_adc, x_dac) = parts
     # OS conversion-phase terms fold in with the scalar association

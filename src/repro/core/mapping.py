@@ -46,6 +46,7 @@ from typing import Iterator, Mapping, Sequence
 
 import numpy as np
 
+from .. import obs
 from .energy import (EnergyBreakdown, EnergyBreakdownBatch, MacroTile,
                      tile_energy, tile_energy_batch)
 from .hardware import IMCMacro
@@ -724,6 +725,20 @@ def candidate_grid(layer: Layer, designs,
     original nested-loop construction as the bitwise enumeration-order
     oracle.
     """
+    _C_BUILDS.inc()
+    with obs.span("mapping.candidate_grid", layer=layer.name,
+                  designs=len(designs.rows)) as sp:
+        grid = _candidate_grid_impl(layer, designs, max_candidates,
+                                    schedules)
+        sp.set(candidates=len(grid))
+    return grid
+
+
+_C_BUILDS = obs.counter("mapping.lattice.builds")
+
+
+def _candidate_grid_impl(layer: Layer, designs, max_candidates: int,
+                         schedules) -> MappingGrid:
     scheds = _normalize_schedules(schedules)
     k = layer.dim("K")
     c_dim, fx_dim, fy_dim = (layer.dim("C"), layer.dim("FX"),
@@ -1005,6 +1020,19 @@ def network_grid(layers: Sequence[Layer], designs,
     ``pad_quantum - 1`` filler lanes per bucket), so fusing never
     explodes the lattice the way a rectangular (L, C_max) pad would.
     """
+    with obs.span("mapping.network_grid", layers=len(layers),
+                  designs=len(designs.rows),
+                  prebuilt=grids is not None) as sp:
+        out = _network_grid_impl(layers, designs, schedules,
+                                 max_candidates, grids, pad_quantum,
+                                 max_lanes)
+        sp.set(buckets=len(out), lanes=sum(len(n) for n in out))
+    return out
+
+
+def _network_grid_impl(layers, designs, schedules, max_candidates,
+                       grids, pad_quantum, max_lanes
+                       ) -> tuple[NetworkGrid, ...]:
     if grids is None:
         grids = [candidate_grid(l, designs, max_candidates=max_candidates,
                                 schedules=schedules) for l in layers]

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.designs import MacroBatch
 
 from .functional import IDEAL, ForwardFn, sqnr_db, top1_agreement
@@ -96,6 +97,19 @@ def evaluate_grid(forward: ForwardFn, designs: MacroBatch, *,
     are exact and noise-free, so all noise knobs apply to the AIMC
     designs only; ``n_seeds`` collapses to 1 when noise is off.
     """
+    with obs.span("fidelity.evaluate_grid", designs=len(designs),
+                  seeds=n_seeds) as sp:
+        grid = _evaluate_grid_impl(forward, designs, noise, n_seeds, seed)
+        sp.set(jit_calls=grid.n_jit_calls)
+    return grid
+
+
+_C_JIT_CALLS = obs.counter("fidelity.jit_calls")
+
+
+def _evaluate_grid_impl(forward: ForwardFn, designs: MacroBatch,
+                        noise: NoiseSpec, n_seeds: int,
+                        seed: int) -> FidelityGrid:
     # persist the per-group jit executables across processes (no-op
     # after the first call; env knob REPRO_XLA_CACHE_DIR)
     from repro.core.compilecache import enable_compilation_cache
@@ -133,32 +147,36 @@ def evaluate_grid(forward: ForwardFn, designs: MacroBatch, *,
     for gi, (_static, members) in enumerate(sorted(groups.items())):
         gkey = jax.random.fold_in(base, gi)
         template = sig_cfgs[members[0]]
-        if template.mode != "aimc":
-            # exact digital path: deterministic, one eval per signature
-            for si in members:
-                cfg = sig_cfgs[si]
-                a, s = jax.jit(lambda c=cfg: metrics(c, gkey))()
-                n_calls += 1
-                sig_acc[si], sig_sqnr[si] = float(a), float(s)
-            continue
-        adc = jnp.asarray([float(sig_cfgs[si].adc_res) for si in members],
-                          jnp.float32)
-        keys = jnp.stack([
-            jnp.stack([jax.random.fold_in(jax.random.fold_in(gkey, p), s)
-                       for s in range(n_eff)])
-            for p in range(len(members))])      # (G, S, key)
+        with obs.span("fidelity.group", group=gi, members=len(members),
+                      mode=template.mode):
+            if template.mode != "aimc":
+                # exact digital path: deterministic, one eval per signature
+                for si in members:
+                    cfg = sig_cfgs[si]
+                    a, s = jax.jit(lambda c=cfg: metrics(c, gkey))()
+                    n_calls += 1
+                    _C_JIT_CALLS.inc()
+                    sig_acc[si], sig_sqnr[si] = float(a), float(s)
+                continue
+            adc = jnp.asarray([float(sig_cfgs[si].adc_res)
+                               for si in members], jnp.float32)
+            keys = jnp.stack([
+                jnp.stack([jax.random.fold_in(jax.random.fold_in(gkey, p), s)
+                           for s in range(n_eff)])
+                for p in range(len(members))])      # (G, S, key)
 
-        def one(adc_res, key, template=template):
-            cfg = dataclasses.replace(template, adc_res=adc_res)
-            return metrics(cfg, key)
+            def one(adc_res, key, template=template):
+                cfg = dataclasses.replace(template, adc_res=adc_res)
+                return metrics(cfg, key)
 
-        batched = jax.jit(jax.vmap(jax.vmap(one, in_axes=(None, 0)),
-                                   in_axes=(0, 0)))
-        a, s = batched(adc, keys)               # (G, S) each
-        n_calls += 1
-        for i, si in enumerate(members):
-            sig_acc[si] = float(jnp.mean(a[i]))
-            sig_sqnr[si] = float(jnp.mean(s[i]))
+            batched = jax.jit(jax.vmap(jax.vmap(one, in_axes=(None, 0)),
+                                       in_axes=(0, 0)))
+            a, s = batched(adc, keys)               # (G, S) each
+            n_calls += 1
+            _C_JIT_CALLS.inc()
+            for i, si in enumerate(members):
+                sig_acc[si] = float(jnp.mean(a[i]))
+                sig_sqnr[si] = float(jnp.mean(s[i]))
 
     ids = np.asarray(sig_ids)
     return FidelityGrid(designs=designs, accuracy=sig_acc[ids],

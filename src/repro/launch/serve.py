@@ -8,6 +8,13 @@ slot hits its budget.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --smoke --batch 4 --prompt-len 16 --gen 24
+
+Telemetry: with ``REPRO_TRACE=1`` the loop records ``serve.prefill`` /
+``serve.decode`` spans, attaches a :class:`repro.runtime.monitor.
+StepMonitor` to the decode loop (per-step wall + straggler flags into
+the ``runtime.*`` registry metrics), and exports a Chrome trace +
+telemetry JSONL (``serve_trace.json`` / ``serve_telemetry.jsonl`` in
+``REPRO_TRACE_DIR``).
 """
 
 from __future__ import annotations
@@ -19,21 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.models.common import Dist
 from repro.models.lm import LM
+from repro.obs import sync
 from repro.runtime.elastic import make_mesh_from_devices
-
-try:
-    # the canonical async-safe walker (also forces dataclass fields);
-    # benchmarks/ is a repo-root package, present in every supported
-    # launch context (repo checkout / CI)
-    from benchmarks.common import sync
-except ImportError:                        # installed package w/o repo root
-    def sync(x):
-        """Fallback: block on every jax array in the pytree."""
-        jax.block_until_ready(x)
-        return x
+from repro.runtime.monitor import StepMonitor
 
 
 def sample(logits: jax.Array, key: jax.Array, temperature: float = 0.8,
@@ -47,40 +45,57 @@ def sample(logits: jax.Array, key: jax.Array, temperature: float = 0.8,
 
 
 class ServeLoop:
-    def __init__(self, lm: LM, batch: int, max_seq: int):
+    def __init__(self, lm: LM, batch: int, max_seq: int,
+                 monitor: StepMonitor | None = None):
         self.lm = lm
         self.batch = batch
         self.max_seq = max_seq
+        self.monitor = monitor
         self._decode = jax.jit(lm.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(
             lambda p, b: lm.prefill(p, b, max_seq=max_seq))
 
     def generate(self, params, prompts: np.ndarray, n_gen: int,
                  key=None, temperature: float = 0.8):
-        """prompts: (B, S_prompt) int32 -> (B, n_gen) int32 + stats."""
+        """prompts: (B, S_prompt) int32 -> (B, n_gen) int32 + stats.
+
+        With a :class:`StepMonitor` attached, every decode step is
+        individually forced and timed (straggler detection needs honest
+        per-step walls); without one the loop keeps jax's async
+        pipelining and only forces the tail.
+        """
         key = jax.random.PRNGKey(0) if key is None else key
         b, s_prompt = prompts.shape
         assert b == self.batch
+        monitor = getattr(self, "monitor", None)
         t0 = time.time()
-        logits, cache, pos = self._prefill(params,
-                                           {"tokens": jnp.asarray(prompts)})
-        # jax dispatch is async: without forcing the prefill outputs the
-        # clock stops while the real work is still in flight and the
-        # first decode step absorbs it
-        sync((logits, cache))
+        with obs.span("serve.prefill", batch=b, prompt_len=s_prompt):
+            logits, cache, pos = self._prefill(
+                params, {"tokens": jnp.asarray(prompts)})
+            # jax dispatch is async: without forcing the prefill outputs
+            # the clock stops while the real work is still in flight and
+            # the first decode step absorbs it
+            sync((logits, cache))
         t_prefill = time.time() - t0
         out = []
         tok = sample(logits[:, 0], key, temperature)
         t1 = time.time()
-        for i in range(n_gen):
-            out.append(np.asarray(tok))
-            logits, cache = self._decode(params, cache, tok,
-                                         jnp.int32(s_prompt + i))
-            key, sub = jax.random.split(key)
-            tok = sample(logits[:, 0], sub, temperature)
-        # the last decode+sample is dispatch-only at this point: force
-        # it before the clock stops so decode_tok_per_s is honest
-        sync(tok)
+        with obs.span("serve.decode", batch=b, n_gen=n_gen):
+            for i in range(n_gen):
+                if monitor is not None:
+                    monitor.start()
+                out.append(np.asarray(tok))
+                logits, cache = self._decode(params, cache, tok,
+                                             jnp.int32(s_prompt + i))
+                key, sub = jax.random.split(key)
+                tok = sample(logits[:, 0], sub, temperature)
+                if monitor is not None:
+                    sync(tok)
+                    monitor.stop(step=i)
+            # the last decode+sample is dispatch-only at this point:
+            # force it before the clock stops so decode_tok_per_s is
+            # honest
+            sync(tok)
         t_decode = time.time() - t1
         tokens = np.stack(out, axis=1)
         stats = {
@@ -112,12 +127,20 @@ def main(argv=None) -> dict:
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
-    loop = ServeLoop(lm, args.batch, args.prompt_len + args.gen)
+    monitor = StepMonitor() if obs.trace_enabled() else None
+    loop = ServeLoop(lm, args.batch, args.prompt_len + args.gen,
+                     monitor=monitor)
     tokens, stats = loop.generate(params, prompts, args.gen)
     print(f"[serve] batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen}: prefill {stats['prefill_s']:.2f}s, "
           f"decode {stats['decode_tok_per_s']:.1f} tok/s")
     print(f"[serve] first request tokens: {tokens[0][:12].tolist()}...")
+    if monitor is not None:
+        stats["steps"] = monitor.summary()
+        print(f"[serve] step monitor: {stats['steps']}")
+    if obs.trace_enabled():
+        stats["trace_files"] = obs.export_all(prefix="serve")
+        print(f"[serve] trace: {stats['trace_files']}")
     return stats
 
 

@@ -1,0 +1,164 @@
+"""Trace/metric exporters: JSONL, Chrome trace-event JSON, telemetry
+blocks for BENCH artifacts — all through one atomic write path.
+
+Atomic writes (tmp + fsync + rename) are the house rule for every
+artifact (an interrupted benchmark must never leave a truncated file);
+:func:`write_json_atomic` / :func:`write_text_atomic` are the canonical
+implementations here, and ``benchmarks.common.write_json_atomic``
+re-exports the JSON one.
+
+Formats
+-------
+``export_jsonl(path)``
+    One JSON object per line: a ``{"type": "meta", ...}`` header, every
+    finished span as ``{"type": "span", ...}`` (ids/parents/depths keep
+    nesting explicit), and a final ``{"type": "metrics", ...}`` snapshot
+    of the registry.  ``repro.obs.validate`` checks this schema.
+``export_chrome(path)``
+    Chrome trace-event format (``chrome://tracing`` / Perfetto): one
+    complete (``"ph": "X"``) event per span, ``ts``/``dur`` in
+    microseconds, spans grouped per thread.
+``telemetry_block()``
+    The structured dict BENCH artifacts embed under ``"telemetry"``:
+    tracing state, the full metrics snapshot, a per-name span rollup,
+    and cache headline numbers (hit rate / evictions) so cache thrash
+    is visible in the perf trajectory.
+``export_all(out_dir, prefix)``
+    Writes both trace files (named ``<prefix>_trace.json`` /
+    ``<prefix>_telemetry.jsonl``) and returns their paths.  ``out_dir``
+    defaults to the ``REPRO_TRACE_DIR`` env knob, else ``"."``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+from .registry import snapshot
+from .tracing import iter_spans, span_summary, trace_enabled
+
+__all__ = [
+    "write_text_atomic", "write_json_atomic",
+    "export_jsonl", "export_chrome", "export_all", "telemetry_block",
+]
+
+
+def write_text_atomic(path: str, text: str) -> None:
+    """Write ``text`` via tmp-file + fsync + rename, so an interrupted
+    writer can never leave a truncated artifact behind."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".obs-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def write_json_atomic(path: str, obj) -> None:
+    """Atomic JSON dump (sorted keys, trailing newline)."""
+    write_text_atomic(path, json.dumps(obj, indent=2, sort_keys=True) + "\n")
+
+
+def _meta() -> dict:
+    return {"type": "meta", "format": "repro-obs-v1", "pid": os.getpid(),
+            "unix_time": time.time(),
+            "trace_enabled": trace_enabled()}
+
+
+def export_jsonl(path: str, spans: list[dict] | None = None) -> str:
+    """Write the JSONL trace (meta + spans + metrics snapshot)."""
+    if spans is None:
+        spans = iter_spans()
+    lines = [json.dumps(_meta(), sort_keys=True)]
+    lines += [json.dumps(s, sort_keys=True) for s in spans]
+    lines.append(json.dumps({"type": "metrics", "metrics": snapshot()},
+                            sort_keys=True))
+    write_text_atomic(path, "\n".join(lines) + "\n")
+    return path
+
+
+def export_chrome(path: str, spans: list[dict] | None = None) -> str:
+    """Write a ``chrome://tracing``-loadable trace-event file."""
+    if spans is None:
+        spans = iter_spans()
+    events = []
+    tids = {}
+    for s in spans:
+        # compact per-process thread ids: chrome renders one lane per tid
+        tid = tids.setdefault(s["tid"], len(tids))
+        ev = {
+            "name": s["name"],
+            "cat": s["cat"],
+            "ph": "X",
+            "ts": s["ts_us"],
+            "dur": s["dur_us"],
+            "pid": os.getpid(),
+            "tid": tid,
+        }
+        if s.get("attrs"):
+            ev["args"] = {k: (v if isinstance(v, (int, float, str, bool))
+                              or v is None else repr(v))
+                          for k, v in s["attrs"].items()}
+        events.append(ev)
+    write_json_atomic(path, {"traceEvents": events,
+                             "displayTimeUnit": "ms",
+                             "otherData": _meta()})
+    return path
+
+
+def telemetry_block(extra: dict | None = None) -> dict:
+    """The structured ``"telemetry"`` block for BENCH artifacts.
+
+    Always cheap to build (registry snapshot + in-memory span rollup);
+    carries the cache headline numbers — layer-result/lattice hit rate
+    and eviction counts — so cache thrash shows up in
+    ``BENCH_trajectory.json`` instead of only in transient counters.
+    """
+    m = snapshot()
+    hits = m.get("dse.cache.hits", 0)
+    misses = m.get("dse.cache.misses", 0)
+    block = {
+        "trace_enabled": trace_enabled(),
+        "metrics": m,
+        "spans": span_summary(),
+        "cache": {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "evictions": m.get("dse.cache.evictions", 0),
+            "lattice_evictions": m.get("dse.lattice.evictions", 0),
+        },
+    }
+    if extra:
+        block.update(extra)
+    return block
+
+
+def export_all(out_dir: str | None = None, prefix: str = "obs",
+               spans: list[dict] | None = None) -> dict[str, str]:
+    """Write both trace formats; return ``{"chrome": ..., "jsonl": ...}``.
+
+    ``out_dir=None`` resolves the ``REPRO_TRACE_DIR`` env knob (default
+    current directory); the directory is created if missing.
+    """
+    if out_dir is None:
+        out_dir = os.environ.get("REPRO_TRACE_DIR") or "."
+    os.makedirs(out_dir, exist_ok=True)
+    if spans is None:
+        spans = iter_spans()
+    return {
+        "chrome": export_chrome(
+            os.path.join(out_dir, f"{prefix}_trace.json"), spans),
+        "jsonl": export_jsonl(
+            os.path.join(out_dir, f"{prefix}_telemetry.jsonl"), spans),
+    }

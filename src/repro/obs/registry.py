@@ -1,0 +1,215 @@
+"""Process-global metrics registry: counters, gauges, timers.
+
+One flat namespace of dotted metric names (``"dse.cache.hits"``); the
+first dotted component is the owning subsystem, which is how
+``snapshot``/``reset`` filter.  The registry is the single home for the
+runtime bookkeeping that used to live in scattered module-level dicts
+(``dse._CACHE_STATS``, ``energy._GRID_KERNEL_STATS``, ...): the legacy
+accessors — ``dse.cache_info``, ``energy.grid_kernel_info``,
+``compilecache.compilation_cache_info`` — are now *views* over this
+registry and keep their historical return shapes.
+
+Design constraints, in order:
+
+* **Zero dependencies** — stdlib only, importable from anywhere in the
+  tree (including ``repro.core`` hot paths) without pulling jax/numpy.
+* **Cheap increments** — one shared lock, taken for single attribute
+  updates only; metric handles are meant to be bound once at module
+  scope (``_HITS = counter("dse.cache.hits")``) so the hot path is one
+  method call, not a dict lookup.
+* **Atomic snapshot/reset** — both hold the same lock every mutation
+  holds, so a snapshot is a consistent cut across all metrics and a
+  reset can never tear a concurrent ``inc``.
+
+Metric kinds
+------------
+``Counter``
+    Monotonic count (``inc``); reset to 0 on ``reset``.
+``Gauge``
+    Last-write-wins point-in-time value (``set``); reset to 0.
+``Timer``
+    Duration accumulator (``observe(seconds)``): count / total /
+    min / max.  ``value`` is a dict; snapshots embed it as one.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Iterator
+
+__all__ = [
+    "Counter", "Gauge", "Timer", "MetricsRegistry", "REGISTRY",
+    "counter", "gauge", "timer", "snapshot", "reset",
+]
+
+
+class Counter:
+    """Monotonic counter.  ``inc`` is the only mutator."""
+
+    __slots__ = ("name", "_lock", "_value")
+
+    def __init__(self, name: str, lock: threading.Lock):
+        self.name = name
+        self._lock = lock
+        self._value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+    def _reset(self) -> None:
+        self._value = 0          # caller holds the lock
+
+
+class Gauge:
+    """Last-write-wins value (``set``); also supports ``add`` for
+    up/down tracking (live sizes)."""
+
+    __slots__ = ("name", "_lock", "_value")
+
+    def __init__(self, name: str, lock: threading.Lock):
+        self.name = name
+        self._lock = lock
+        self._value: float = 0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = v
+
+    def add(self, n: float = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def _reset(self) -> None:
+        self._value = 0
+
+
+class Timer:
+    """Duration accumulator: ``observe(seconds)`` folds one sample."""
+
+    __slots__ = ("name", "_lock", "count", "total_s", "min_s", "max_s")
+
+    def __init__(self, name: str, lock: threading.Lock):
+        self.name = name
+        self._lock = lock
+        self.count = 0
+        self.total_s = 0.0
+        self.min_s = float("inf")
+        self.max_s = 0.0
+
+    def observe(self, seconds: float) -> None:
+        with self._lock:
+            self.count += 1
+            self.total_s += seconds
+            if seconds < self.min_s:
+                self.min_s = seconds
+            if seconds > self.max_s:
+                self.max_s = seconds
+
+    @property
+    def value(self) -> dict:
+        with self._lock:
+            return {"count": self.count, "total_s": self.total_s,
+                    "min_s": self.min_s if self.count else 0.0,
+                    "max_s": self.max_s}
+
+    def _reset(self) -> None:
+        self.count = 0
+        self.total_s = 0.0
+        self.min_s = float("inf")
+        self.max_s = 0.0
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named metrics behind one lock."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._metrics: dict[str, Counter | Gauge | Timer] = {}
+
+    def _get(self, name: str, kind: type):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = kind(name, self._lock)
+                self._metrics[name] = m
+            elif type(m) is not kind:
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, requested {kind.__name__}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def timer(self, name: str) -> Timer:
+        return self._get(name, Timer)
+
+    def snapshot(self, prefix: str = "") -> dict:
+        """Consistent cut of every metric whose name starts with
+        ``prefix``: ``{name: value}`` with counters/gauges as numbers
+        and timers as their stat dicts.  Taken under the same lock all
+        mutations hold, so no concurrent ``inc`` can tear it."""
+        with self._lock:
+            out = {}
+            for name, m in sorted(self._metrics.items()):
+                if not name.startswith(prefix):
+                    continue
+                if isinstance(m, Timer):
+                    out[name] = {
+                        "count": m.count, "total_s": m.total_s,
+                        "min_s": m.min_s if m.count else 0.0,
+                        "max_s": m.max_s}
+                else:
+                    out[name] = m._value
+            return out
+
+    def reset(self, prefix: str = "") -> None:
+        """Zero every metric whose name starts with ``prefix``.
+        Metric handles stay valid (the objects are reset in place, not
+        dropped), so module-level bindings survive."""
+        with self._lock:
+            for name, m in self._metrics.items():
+                if name.startswith(prefix):
+                    m._reset()
+
+    def __iter__(self) -> Iterator[str]:
+        with self._lock:
+            return iter(sorted(self._metrics))
+
+
+#: the process-global registry every subsystem shares
+REGISTRY = MetricsRegistry()
+
+
+def counter(name: str) -> Counter:
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return REGISTRY.gauge(name)
+
+
+def timer(name: str) -> Timer:
+    return REGISTRY.timer(name)
+
+
+def snapshot(prefix: str = "") -> dict:
+    return REGISTRY.snapshot(prefix)
+
+
+def reset(prefix: str = "") -> None:
+    REGISTRY.reset(prefix)

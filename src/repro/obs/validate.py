@@ -1,0 +1,213 @@
+"""Telemetry schema validation: trace files and telemetry blocks.
+
+CI runs this over the smoke sweeps' uploaded traces (``python -m
+repro.obs.validate <files...>``) so a malformed exporter fails the
+build instead of shipping an unloadable artifact.  Checks, per format:
+
+Chrome trace (``*_trace.json``)
+    ``traceEvents`` list present; every event carries
+    ``name``/``ph``/``ts``/``dur``/``pid``/``tid``; durations
+    non-negative; per-``(pid, tid)`` lane the complete events are
+    *well-nested* (sorted by start, every event either contains or is
+    disjoint from its neighbours — stack discipline).
+
+JSONL trace (``*_telemetry.jsonl``)
+    Every line parses; first record is ``type: meta`` with the format
+    tag; span records carry id/parent/depth/name/ts/dur with
+    non-negative durations and parents that were opened before them;
+    exactly one ``type: metrics`` record with non-negative counters.
+
+Telemetry block (``validate_telemetry``)
+    Required keys present; every plain metric value non-negative;
+    timer sub-dicts consistent (count 0 implies total 0).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+__all__ = ["validate_chrome", "validate_jsonl", "validate_telemetry",
+           "main"]
+
+
+def _fail(errors: list[str], msg: str) -> None:
+    errors.append(msg)
+
+
+def _check_nesting(events: list[dict], errors: list[str],
+                   label: str) -> None:
+    """Stack-discipline check on complete events of one (pid, tid)
+    lane: sorted by (start, -dur), each event must close before any
+    enclosing event does.  A tiny tolerance absorbs float microsecond
+    rounding from the exporter."""
+    eps = 0.5                                    # us
+    stack: list[tuple[float, float, str]] = []   # (start, end, name)
+    for ev in sorted(events, key=lambda e: (e["ts"], -e["dur"])):
+        start, end = ev["ts"], ev["ts"] + ev["dur"]
+        while stack and start >= stack[-1][1] - eps:
+            stack.pop()
+        if stack and end > stack[-1][1] + eps:
+            _fail(errors,
+                  f"{label}: span {ev['name']!r} [{start:.1f}, {end:.1f}] "
+                  f"overlaps {stack[-1][2]!r} ending {stack[-1][1]:.1f} "
+                  f"without nesting")
+        stack.append((start, end, ev["name"]))
+
+
+def validate_chrome(path: str) -> list[str]:
+    """Return a list of schema errors (empty = valid)."""
+    errors: list[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable: {e}"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{path}: no traceEvents list"]
+    lanes: dict[tuple, list[dict]] = {}
+    for i, ev in enumerate(events):
+        for key in ("name", "ph", "ts", "dur", "pid", "tid"):
+            if key not in ev:
+                _fail(errors, f"{path}: event {i} missing {key!r}")
+                break
+        else:
+            if ev["ph"] != "X":
+                _fail(errors, f"{path}: event {i} ph={ev['ph']!r} != 'X'")
+            elif ev["dur"] < 0 or ev["ts"] < 0:
+                _fail(errors, f"{path}: event {i} ({ev['name']}) has "
+                              f"negative ts/dur")
+            else:
+                lanes.setdefault((ev["pid"], ev["tid"]), []).append(ev)
+    for (pid, tid), evs in lanes.items():
+        _check_nesting(evs, errors, f"{path} pid={pid} tid={tid}")
+    return errors
+
+
+def _validate_metrics(metrics: dict, errors: list[str],
+                      label: str) -> None:
+    if not isinstance(metrics, dict):
+        _fail(errors, f"{label}: metrics is not a dict")
+        return
+    for name, v in metrics.items():
+        if isinstance(v, dict):                  # timer
+            if v.get("count", 0) < 0 or v.get("total_s", 0) < 0:
+                _fail(errors, f"{label}: timer {name} negative")
+            if v.get("count", 0) == 0 and v.get("total_s", 0) > 0:
+                _fail(errors, f"{label}: timer {name} total without count")
+        elif isinstance(v, bool):
+            pass
+        elif isinstance(v, (int, float)):
+            if v < 0:
+                _fail(errors, f"{label}: metric {name} negative ({v})")
+        elif v is not None and not isinstance(v, str):
+            _fail(errors, f"{label}: metric {name} has type "
+                          f"{type(v).__name__}")
+
+
+def validate_jsonl(path: str) -> list[str]:
+    """Return a list of schema errors (empty = valid)."""
+    errors: list[str] = []
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        return [f"{path}: unreadable: {e}"]
+    if not lines:
+        return [f"{path}: empty"]
+    seen_ids: set[int] = set()
+    n_metrics = 0
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            _fail(errors, f"{path}:{i + 1}: bad json: {e}")
+            continue
+        t = rec.get("type")
+        if i == 0:
+            if t != "meta" or rec.get("format") != "repro-obs-v1":
+                _fail(errors, f"{path}: first record is not a "
+                              f"repro-obs-v1 meta header")
+            continue
+        if t == "span":
+            for key in ("id", "parent", "depth", "name", "ts_us",
+                        "dur_us"):
+                if key not in rec:
+                    _fail(errors, f"{path}:{i + 1}: span missing {key!r}")
+                    break
+            else:
+                if rec["dur_us"] < 0:
+                    _fail(errors, f"{path}:{i + 1}: negative duration")
+                if rec["parent"] and rec["parent"] not in seen_ids \
+                        and rec["parent"] >= rec["id"]:
+                    _fail(errors, f"{path}:{i + 1}: parent "
+                                  f"{rec['parent']} opened after span "
+                                  f"{rec['id']}")
+                seen_ids.add(rec["id"])
+        elif t == "metrics":
+            n_metrics += 1
+            _validate_metrics(rec.get("metrics"), errors,
+                              f"{path}:{i + 1}")
+        elif t != "meta":
+            _fail(errors, f"{path}:{i + 1}: unknown record type {t!r}")
+    if n_metrics != 1:
+        _fail(errors, f"{path}: expected exactly one metrics record, "
+                      f"found {n_metrics}")
+    return errors
+
+
+def validate_telemetry(block: dict) -> list[str]:
+    """Validate a BENCH artifact's ``"telemetry"`` block."""
+    errors: list[str] = []
+    for key in ("trace_enabled", "metrics", "spans", "cache"):
+        if key not in block:
+            _fail(errors, f"telemetry: missing {key!r}")
+    _validate_metrics(block.get("metrics", {}), errors, "telemetry")
+    for name, agg in (block.get("spans") or {}).items():
+        if agg.get("count", 0) < 0 or agg.get("total_s", 0) < 0:
+            _fail(errors, f"telemetry: span rollup {name} negative")
+    cache = block.get("cache") or {}
+    for key in ("hits", "misses", "hit_rate", "evictions"):
+        if cache.get(key, 0) < 0:
+            _fail(errors, f"telemetry: cache.{key} negative")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Validate every path; also checks embedded ``telemetry`` blocks
+    of BENCH artifacts (any ``.json`` that is not a chrome trace but
+    has a ``telemetry`` key).  Exit status 0 iff all valid."""
+    paths = argv if argv is not None else sys.argv[1:]
+    if not paths:
+        print("usage: python -m repro.obs.validate <trace files...>")
+        return 2
+    failed = False
+    for path in paths:
+        if path.endswith(".jsonl"):
+            errors = validate_jsonl(path)
+        else:
+            try:
+                with open(path) as f:
+                    doc = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                errors = [f"{path}: unreadable: {e}"]
+            else:
+                if isinstance(doc, dict) and "traceEvents" in doc:
+                    errors = validate_chrome(path)
+                elif isinstance(doc, dict) and "telemetry" in doc:
+                    errors = [f"{path}: {e}"
+                              for e in validate_telemetry(doc["telemetry"])]
+                else:
+                    errors = [f"{path}: not a chrome trace, obs jsonl, "
+                              f"or artifact with a telemetry block"]
+        status = "ok" if not errors else "FAIL"
+        print(f"[obs.validate] {path}: {status}")
+        for e in errors:
+            print(f"  {e}")
+        failed = failed or bool(errors)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

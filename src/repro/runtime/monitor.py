@@ -6,6 +6,12 @@ keeps a rolling window of per-step wall times, flags steps beyond
 ``threshold`` x the rolling median, and (multi-host) compares this
 host's time against the all-host median via a tiny all-gather so the
 *specific* straggler is named in the log.
+
+Every ``stop()`` also emits into the process-global metrics registry
+(:mod:`repro.obs`): counter ``runtime.steps``, counter
+``runtime.stragglers`` and timer ``runtime.step_wall`` — so serve-loop
+telemetry blocks carry the step statistics without reaching into the
+monitor object.
 """
 
 from __future__ import annotations
@@ -18,6 +24,13 @@ from typing import Callable
 
 import jax
 import numpy as np
+from jax.experimental import multihost_utils
+
+from repro import obs
+
+_C_STEPS = obs.counter("runtime.steps")
+_C_STRAGGLERS = obs.counter("runtime.stragglers")
+_T_STEP_WALL = obs.timer("runtime.step_wall")
 
 
 @dataclasses.dataclass
@@ -50,8 +63,8 @@ class StepMonitor:
         ratio = wall / max(med, 1e-9)
         slow_host = None
         if jax.process_count() > 1:
-            times = np.asarray(jax.experimental.multihost_utils
-                               .process_allgather(np.float64(wall)))
+            times = np.asarray(
+                multihost_utils.process_allgather(np.float64(wall)))
             slow_host = int(np.argmax(times))
             med = float(np.median(times))
             ratio = float(times[jax.process_index()] / max(med, 1e-9))
@@ -59,7 +72,10 @@ class StepMonitor:
                               ratio=ratio,
                               is_straggler=ratio > self.threshold,
                               slowest_host=slow_host)
+        _C_STEPS.inc()
+        _T_STEP_WALL.observe(wall)
         if rep.is_straggler:
+            _C_STRAGGLERS.inc()
             self.log(f"[straggler] step {step}: {wall:.3f}s vs median "
                      f"{med:.3f}s (x{ratio:.2f})"
                      + (f" slowest host={slow_host}"

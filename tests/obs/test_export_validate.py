@@ -1,0 +1,152 @@
+"""Exporters + validators: every exported file passes its own schema
+check, tampered files fail, telemetry blocks validate, writes are
+atomic."""
+
+import json
+import os
+
+import pytest
+
+from repro import obs
+from repro.obs import validate
+
+
+@pytest.fixture
+def spans():
+    obs.set_trace_enabled(True)
+    obs.drain_spans()
+    with obs.span("t.outer", n=2) as sp:
+        with obs.span("t.inner"):
+            pass
+        sp.set(done=True)
+    out = obs.drain_spans()
+    obs.set_trace_enabled(None)
+    return out
+
+
+def test_export_chrome_validates(tmp_path, spans):
+    path = str(tmp_path / "x_trace.json")
+    obs.export_chrome(path, spans)
+    assert validate.validate_chrome(path) == []
+    doc = json.load(open(path))
+    assert len(doc["traceEvents"]) == 2
+    ev = {e["name"]: e for e in doc["traceEvents"]}
+    assert ev["t.outer"]["args"]["n"] == 2
+    # inner nests inside outer on the same lane
+    assert ev["t.inner"]["ts"] >= ev["t.outer"]["ts"]
+    assert (ev["t.inner"]["ts"] + ev["t.inner"]["dur"]
+            <= ev["t.outer"]["ts"] + ev["t.outer"]["dur"] + 0.5)
+
+
+def test_export_jsonl_validates(tmp_path, spans):
+    path = str(tmp_path / "x_telemetry.jsonl")
+    obs.export_jsonl(path, spans)
+    assert validate.validate_jsonl(path) == []
+    lines = [json.loads(l) for l in open(path)]
+    assert lines[0]["type"] == "meta"
+    assert lines[0]["format"] == "repro-obs-v1"
+    assert [l["type"] for l in lines[1:]] == ["span", "span", "metrics"]
+
+
+def test_export_all_writes_both(tmp_path, spans, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_DIR", str(tmp_path / "sub"))
+    files = obs.export_all(prefix="unit", spans=spans)
+    assert files["chrome"].endswith("unit_trace.json")
+    assert files["jsonl"].endswith("unit_telemetry.jsonl")
+    for p in files.values():
+        assert os.path.exists(p)
+    assert validate.validate_chrome(files["chrome"]) == []
+    assert validate.validate_jsonl(files["jsonl"]) == []
+
+
+def test_validate_chrome_rejects_tampered(tmp_path, spans):
+    path = str(tmp_path / "bad_trace.json")
+    obs.export_chrome(path, spans)
+    doc = json.load(open(path))
+    doc["traceEvents"][0]["dur"] = -5.0
+    del doc["traceEvents"][1]["ph"]
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    errors = validate.validate_chrome(path)
+    assert len(errors) == 2
+
+
+def test_validate_chrome_rejects_overlap(tmp_path):
+    path = str(tmp_path / "overlap_trace.json")
+    with open(path, "w") as f:
+        json.dump({"traceEvents": [
+            {"name": "a", "ph": "X", "ts": 0, "dur": 10,
+             "pid": 1, "tid": 1},
+            {"name": "b", "ph": "X", "ts": 5, "dur": 10,
+             "pid": 1, "tid": 1},
+        ]}, f)
+    errors = validate.validate_chrome(path)
+    assert any("without nesting" in e for e in errors)
+
+
+def test_validate_jsonl_rejects_tampered(tmp_path, spans):
+    path = str(tmp_path / "bad.jsonl")
+    obs.export_jsonl(path, spans)
+    lines = open(path).read().splitlines()
+    recs = [json.loads(l) for l in lines]
+    spans_recs = [r for r in recs if r["type"] == "span"]
+    spans_recs[0]["dur_us"] = -1
+    with open(path, "w") as f:
+        f.write("\n".join(json.dumps(r) for r in recs) + "\n")
+    assert any("negative duration" in e
+               for e in validate.validate_jsonl(path))
+
+
+def test_validate_jsonl_requires_meta_and_metrics(tmp_path):
+    path = str(tmp_path / "no_meta.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"type": "metrics", "metrics": {}}) + "\n")
+    errors = validate.validate_jsonl(path)
+    assert any("meta header" in e for e in errors)
+
+    path2 = str(tmp_path / "two_metrics.jsonl")
+    with open(path2, "w") as f:
+        f.write(json.dumps({"type": "meta", "format": "repro-obs-v1"})
+                + "\n")
+        f.write(json.dumps({"type": "metrics", "metrics": {}}) + "\n")
+        f.write(json.dumps({"type": "metrics", "metrics": {}}) + "\n")
+    assert any("exactly one metrics" in e
+               for e in validate.validate_jsonl(path2))
+
+
+def test_telemetry_block_shape_and_validation():
+    block = obs.telemetry_block()
+    assert validate.validate_telemetry(block) == []
+    assert set(block) >= {"trace_enabled", "metrics", "spans", "cache"}
+    assert set(block["cache"]) == {"hits", "misses", "hit_rate",
+                                   "evictions", "lattice_evictions"}
+    assert 0.0 <= block["cache"]["hit_rate"] <= 1.0
+    assert validate.validate_telemetry({}) != []   # missing keys flagged
+
+
+def test_validate_main_autodetects(tmp_path, spans, capsys):
+    chrome = str(tmp_path / "a_trace.json")
+    jsonl = str(tmp_path / "a_telemetry.jsonl")
+    artifact = str(tmp_path / "BENCH_x.json")
+    obs.export_chrome(chrome, spans)
+    obs.export_jsonl(jsonl, spans)
+    with open(artifact, "w") as f:
+        json.dump({"benchmark": "x", "telemetry": obs.telemetry_block()},
+                  f)
+    assert validate.main([chrome, jsonl, artifact]) == 0
+    bad = str(tmp_path / "bad.json")
+    with open(bad, "w") as f:
+        json.dump({"neither": True}, f)
+    assert validate.main([bad]) == 1
+
+
+def test_atomic_write_never_leaves_partial(tmp_path):
+    path = str(tmp_path / "out.json")
+    obs.write_json_atomic(path, {"ok": 1})
+    assert json.load(open(path)) == {"ok": 1}
+    # overwrite keeps the file valid at every observable point
+    obs.write_json_atomic(path, {"ok": 2})
+    assert json.load(open(path)) == {"ok": 2}
+    # no tmp droppings
+    assert [p for p in os.listdir(tmp_path)
+            if p.endswith(".tmp")] == []

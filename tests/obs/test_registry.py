@@ -1,0 +1,117 @@
+"""Metrics registry: counters/gauges/timers, get-or-create semantics,
+atomic snapshot/reset, thread-safety of concurrent increments."""
+
+import threading
+
+import pytest
+
+from repro.obs import registry
+
+
+@pytest.fixture
+def reg():
+    return registry.MetricsRegistry()
+
+
+def test_counter_inc_and_value(reg):
+    c = reg.counter("t.hits")
+    assert c.value == 0
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+
+
+def test_gauge_set_and_add(reg):
+    g = reg.gauge("t.size")
+    g.set(7)
+    assert g.value == 7
+    g.add(-2)
+    assert g.value == 5
+    g.set(1.5)
+    assert g.value == 1.5
+
+
+def test_timer_observe_stats(reg):
+    t = reg.timer("t.wall")
+    t.observe(0.2)
+    t.observe(0.1)
+    t.observe(0.4)
+    v = t.value
+    assert v["count"] == 3
+    assert v["total_s"] == pytest.approx(0.7)
+    assert v["min_s"] == pytest.approx(0.1)
+    assert v["max_s"] == pytest.approx(0.4)
+
+
+def test_timer_empty_value_is_zeroed(reg):
+    v = reg.timer("t.idle").value
+    assert v == {"count": 0, "total_s": 0.0, "min_s": 0.0, "max_s": 0.0}
+
+
+def test_get_or_create_returns_same_handle(reg):
+    assert reg.counter("t.c") is reg.counter("t.c")
+    assert reg.gauge("t.g") is reg.gauge("t.g")
+    assert reg.timer("t.t") is reg.timer("t.t")
+
+
+def test_kind_conflict_raises(reg):
+    reg.counter("t.x")
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("t.x")
+    with pytest.raises(TypeError):
+        reg.timer("t.x")
+
+
+def test_snapshot_prefix_filter(reg):
+    reg.counter("a.one").inc()
+    reg.counter("b.two").inc(2)
+    reg.timer("a.t").observe(0.5)
+    snap = reg.snapshot("a.")
+    assert set(snap) == {"a.one", "a.t"}
+    assert snap["a.one"] == 1
+    assert snap["a.t"]["count"] == 1
+    full = reg.snapshot()
+    assert set(full) == {"a.one", "a.t", "b.two"}
+
+
+def test_reset_is_in_place_and_prefix_scoped(reg):
+    c_a = reg.counter("a.n")
+    c_b = reg.counter("b.n")
+    t_a = reg.timer("a.t")
+    c_a.inc(3)
+    c_b.inc(5)
+    t_a.observe(1.0)
+    reg.reset("a.")
+    # the same handles keep working after reset (reset never drops
+    # objects, so module-level bindings stay live)
+    assert c_a.value == 0
+    assert t_a.value["count"] == 0
+    assert c_b.value == 5
+    c_a.inc()
+    assert c_a.value == 1
+    assert reg.counter("a.n") is c_a
+
+
+def test_concurrent_increments_are_exact(reg):
+    c = reg.counter("t.par")
+    n_threads, n_incs = 8, 2000
+
+    def worker():
+        for _ in range(n_incs):
+            c.inc()
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * n_incs
+
+
+def test_global_helpers_share_one_registry():
+    from repro import obs
+    c = obs.counter("test_registry.global")
+    c.inc()
+    assert obs.snapshot("test_registry.")["test_registry.global"] == 1
+    obs.reset("test_registry.")
+    assert obs.snapshot("test_registry.")["test_registry.global"] == 0

@@ -1,0 +1,149 @@
+"""StepMonitor: single-host rolling-median straggler detection with a
+controlled clock, the multi-host all-gather path (regression: the
+``jax.experimental.multihost_utils`` submodule must be imported, not
+attribute-accessed off ``jax.experimental``), and registry emission."""
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.runtime import monitor as monitor_mod
+from repro.runtime.monitor import StepMonitor
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@pytest.fixture
+def clock(monkeypatch):
+    clk = FakeClock()
+    monkeypatch.setattr(monitor_mod.time, "perf_counter", clk)
+    return clk
+
+
+def _step(mon: StepMonitor, clock: FakeClock, wall: float, step: int):
+    mon.start()
+    clock.advance(wall)
+    return mon.stop(step)
+
+
+# ------------------------------------------------------------ single host
+def test_rolling_median_and_threshold(clock):
+    mon = StepMonitor(window=5, threshold=1.5, log_fn=lambda s: None)
+    for i in range(5):
+        rep = _step(mon, clock, 0.10, i)
+        assert not rep.is_straggler
+    # 0.14s vs median 0.10s -> ratio 1.4 < 1.5: not flagged
+    assert not _step(mon, clock, 0.14, 5).is_straggler
+    # 0.16s vs rolling median -> ratio > 1.5: flagged
+    rep = _step(mon, clock, 0.16, 6)
+    assert rep.is_straggler
+    assert rep.median_s == pytest.approx(0.10)
+    assert rep.ratio == pytest.approx(1.6)
+    assert rep.slowest_host is None          # single host
+
+
+def test_first_step_never_flags(clock):
+    mon = StepMonitor(log_fn=lambda s: None)
+    rep = _step(mon, clock, 3.0, 0)          # empty window: median = wall
+    assert rep.ratio == pytest.approx(1.0)
+    assert not rep.is_straggler
+
+
+def test_window_is_rolling(clock):
+    mon = StepMonitor(window=3, threshold=1.5, log_fn=lambda s: None)
+    for i in range(4):
+        _step(mon, clock, 1.0, i)
+    for i in range(4, 7):                    # old 1.0s steps roll out
+        _step(mon, clock, 0.1, i)
+    rep = _step(mon, clock, 0.2, 7)          # vs median 0.1 -> x2.0
+    assert rep.is_straggler
+    assert rep.median_s == pytest.approx(0.1)
+
+
+def test_summary_p90_and_straggler_count(clock):
+    mon = StepMonitor(window=50, threshold=1.5, log_fn=lambda s: None)
+    walls = [0.1] * 9 + [0.5]                # one clear straggler
+    for i, w in enumerate(walls):
+        _step(mon, clock, w, i)
+    s = mon.summary()
+    assert s["median_s"] == pytest.approx(0.1)
+    assert s["p90_s"] == pytest.approx(sorted(walls)[int(0.9 * 9)])
+    assert s["n_stragglers"] == 1
+
+
+def test_summary_empty():
+    assert StepMonitor(log_fn=lambda s: None).summary() == {}
+
+
+def test_straggler_logged(clock):
+    lines: list[str] = []
+    mon = StepMonitor(window=5, threshold=1.5, log_fn=lines.append)
+    for i in range(3):
+        _step(mon, clock, 0.1, i)
+    _step(mon, clock, 0.4, 3)
+    assert len(lines) == 1
+    assert "straggler" in lines[0] and "step 3" in lines[0]
+
+
+# ------------------------------------------------------------- multi host
+def test_multihost_allgather_names_slowest(clock, monkeypatch):
+    """Regression: monitor used to do ``jax.experimental.multihost_utils
+    .process_allgather`` without importing the submodule — an
+    AttributeError on the first multi-host step.  The import now happens
+    at module top; this exercises the multi-host branch end to end."""
+    monkeypatch.setattr(monitor_mod.jax, "process_count", lambda: 2)
+    monkeypatch.setattr(monitor_mod.jax, "process_index", lambda: 0)
+    gathered = {}
+
+    def fake_allgather(x):
+        gathered["local"] = float(x)
+        return np.asarray([float(x), 0.05])   # host 0 = us, host 1 fast
+
+    monkeypatch.setattr(monitor_mod.multihost_utils, "process_allgather",
+                        fake_allgather)
+    mon = StepMonitor(threshold=1.5, log_fn=lambda s: None)
+    rep = _step(mon, clock, 0.5, 0)
+    assert gathered["local"] == pytest.approx(0.5)
+    assert rep.slowest_host == 0             # we are the straggler
+    # all-host median replaces the local rolling median
+    assert rep.median_s == pytest.approx(np.median([0.5, 0.05]))
+    assert rep.ratio == pytest.approx(0.5 / rep.median_s)
+    assert rep.is_straggler
+
+
+def test_multihost_fast_host_not_flagged(clock, monkeypatch):
+    monkeypatch.setattr(monitor_mod.jax, "process_count", lambda: 2)
+    monkeypatch.setattr(monitor_mod.jax, "process_index", lambda: 1)
+    monkeypatch.setattr(
+        monitor_mod.multihost_utils, "process_allgather",
+        lambda x: np.asarray([3.0, float(x)]))
+    mon = StepMonitor(threshold=1.5, log_fn=lambda s: None)
+    rep = _step(mon, clock, 0.1, 0)
+    assert rep.slowest_host == 0             # the other host
+    assert not rep.is_straggler              # we are under the median
+
+
+# --------------------------------------------------------------- registry
+def test_stop_emits_registry_metrics(clock):
+    obs.reset("runtime.")
+    mon = StepMonitor(window=5, threshold=1.5, log_fn=lambda s: None)
+    for i in range(4):
+        _step(mon, clock, 0.1, i)
+    _step(mon, clock, 0.4, 4)                # straggler
+    snap = obs.snapshot("runtime.")
+    assert snap["runtime.steps"] == 5
+    assert snap["runtime.stragglers"] == 1
+    t = snap["runtime.step_wall"]
+    assert t["count"] == 5
+    assert t["total_s"] == pytest.approx(0.8)
+    assert t["max_s"] == pytest.approx(0.4)
+    obs.reset("runtime.")
