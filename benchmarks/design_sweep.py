@@ -39,6 +39,20 @@ Env knobs
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
     ``REPRO_SWEEP_SHARDS=auto python -m benchmarks.design_sweep
     --networks``.
+``REPRO_SWEEP_PIPELINE``
+    Bucket-pipeline depth of the reduced sweep engine (``auto``/unset
+    = 2, an integer >= 1 is a depth, ``0``/``off``/``false`` falls back
+    to the full-grid host oracle).  With a depth >= 1 each bucket's
+    objective total and per-segment argmin run device-side
+    (``mapping.evaluate_network_grid(reduce=True)``) and only (S, D)
+    winners cross to the host, while up to N bucket dispatches stay in
+    flight ahead of finalization and the next lattice builds on a
+    background thread.  Results are bitwise identical to the host
+    oracle either way.  Composes with ``REPRO_SWEEP_SHARDS``: when the
+    lane axis is sharded the reduced path keeps the ``shard_map`` grid
+    kernel and only the fold/scale/argmin chain changes, so both knobs
+    can be on at once (shards split each bucket across devices,
+    the pipeline overlaps consecutive buckets).
 ``REPRO_TRACE``
     Turn on span tracing (``repro.obs``).  The fused sweep then records
     nested wall-time spans — lattice builds, per-bucket jit dispatch
@@ -61,6 +75,14 @@ Telemetry artifact schema
   counters, ``energy.kernel.*`` dispatch/compile-proxy counters,
   ``dse.bucket.first_call``/``dse.bucket.warm`` compile-vs-execute
   timer splits, ``compilecache.*`` persistent-cache gauges);
+
+and the top level carries the reduced-engine headline numbers of the
+cold pass: ``transfer_bytes_cold`` — measured device→host bytes
+realized by bucket pricing (the quantity the reduced path collapses
+from nine (D, Ctot) float64 grids to 3·S·D winners per bucket) —
+plus ``pipeline_depth`` and ``pipeline_occupancy`` (in-flight depth
+actually used and the fraction of finalizations that never had to
+wait, 0/0.0 under the host oracle);
 * ``spans`` — per-name ``{count, total_s}`` rollup of recorded spans;
 * ``cache`` — headline hit-rate/eviction numbers;
 * ``span_coverage_cold`` (tracing only) — fraction of the cold-sweep
@@ -181,6 +203,9 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
     t_cold = time.perf_counter() - t0
     kernel_cold = energy.grid_kernel_info()
     cache = dse.cache_info()
+    # reduced-engine headline of the cold pass (cache_clear above reset
+    # the dse.* registry, so these are this sweep's numbers alone)
+    pipe_cold = obs.snapshot("dse.")
 
     t_warm = float("inf")
     for _ in range(3):
@@ -230,6 +255,11 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
         "kernel_distinct_shapes_cold": kernel_cold["distinct_shapes"],
         "kernel_sharded_calls_cold": kernel_cold["sharded_calls"],
         "lane_shards": energy.lane_shards(),
+        "pipeline_depth": int(pipe_cold.get("dse.pipeline.depth", 0)),
+        "pipeline_occupancy": float(
+            pipe_cold.get("dse.pipeline.occupancy", 0.0)),
+        "transfer_bytes_cold": int(
+            pipe_cold.get("dse.transfer_bytes", 0)),
         "compilation_cache": compilation_cache_info(),
         "lattice_slots": cache["lattice_slots"],
         "lattice_layers": cache["lattice_layers"],

@@ -158,6 +158,7 @@ def run(smoke: bool = False, arch: str = "qwen1.5-0.5b",
                   f"{int(res.pareto_mask().sum()):6d}")
         models[a] = {"points": rows}
     wall = time.perf_counter() - t0
+    pipe = obs.snapshot("dse.")
 
     artifact = {
         "benchmark": "serving_sweep",
@@ -166,6 +167,10 @@ def run(smoke: bool = False, arch: str = "qwen1.5-0.5b",
         "gen_len": gen,
         "schedules": list(results[0].phase_sweeps[0].schedules),
         "wall_s": wall,
+        "pipeline_depth": int(pipe.get("dse.pipeline.depth", 0)),
+        "pipeline_occupancy": float(
+            pipe.get("dse.pipeline.occupancy", 0.0)),
+        "transfer_bytes_cold": int(pipe.get("dse.transfer_bytes", 0)),
         "oracle": oracle,
         "models": models,
     }

@@ -106,6 +106,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import os
+import queue
+import threading
 import time
 from typing import Callable, Sequence
 
@@ -327,6 +330,55 @@ _C_LAT_PAD_LANES = obs.counter("dse.lattice.pad_lanes")
 #: to amortize.
 _T_BUCKET_FIRST = obs.timer("dse.bucket.first_call")
 _T_BUCKET_WARM = obs.timer("dse.bucket.warm")
+#: reduced-path telemetry: device→host volume actually realized by the
+#: pricing loop (the host path ships the full component grids, the
+#: reduced path only the per-segment winners), per-bucket device
+#: execute+transfer wall, and the pipeline's shape for the last sweep.
+_C_TRANSFER = obs.counter("dse.transfer_bytes")
+_C_PIPE_BUCKETS = obs.counter("dse.pipeline.buckets")
+_T_BUCKET_EXECUTE = obs.timer("dse.bucket.execute")
+_G_PIPE_DEPTH = obs.gauge("dse.pipeline.depth")
+_G_PIPE_OCC = obs.gauge("dse.pipeline.occupancy")
+
+#: in-flight depth of the reduced+pipelined bucket loop.  ``None`` = not
+#: yet resolved; resolved lazily from ``REPRO_SWEEP_PIPELINE`` so
+#: importing the module never reads the environment eagerly.  ``0``
+#: selects the legacy full-grid host path (the bitwise oracle).
+_SWEEP_PIPELINE: dict = {"depth": None}
+_PIPELINE_OFF = {"", "0", "off", "false", "none", "disabled"}
+_PIPELINE_AUTO_DEPTH = 2
+
+
+def sweep_pipeline() -> int:
+    """Active reduced-pipeline depth for the fused sweep's bucket loop.
+
+    ``REPRO_SWEEP_PIPELINE`` semantics: ``auto`` (the default — the
+    reduced path is on by default, it is bitwise identical to the host
+    oracle) resolves to depth 2; ``0``/``off``/``false``/``none``/
+    ``disabled`` select the full-grid host path; an integer ``N >= 1``
+    pins the in-flight bucket depth; anything unparsable falls back to
+    ``auto``.
+    """
+    d = _SWEEP_PIPELINE["depth"]
+    if d is None:
+        spec = os.environ.get("REPRO_SWEEP_PIPELINE", "auto").strip().lower()
+        if spec in _PIPELINE_OFF:
+            d = 0
+        elif spec == "auto":
+            d = _PIPELINE_AUTO_DEPTH
+        else:
+            try:
+                d = max(1, int(spec))
+            except ValueError:
+                d = _PIPELINE_AUTO_DEPTH
+        _SWEEP_PIPELINE["depth"] = d
+    return d
+
+
+def set_sweep_pipeline(depth: int | None) -> None:
+    """Override the pipeline depth (``None`` re-reads the env on the
+    next call; ``0`` forces the host-oracle path)."""
+    _SWEEP_PIPELINE["depth"] = None if depth is None else max(0, int(depth))
 
 
 def _shape_key(layer: Layer) -> tuple:
@@ -344,9 +396,27 @@ def _cache_key(layer: Layer, macro: IMCMacro, mem: MemoryModel,
             _schedule_names(schedules))
 
 
+#: memoized ``_layer_resident_bytes`` per distinct shape key — the
+#: bucket pricing loops would otherwise recompute the element-count sum
+#: for every (bucket, layer) visit of the same shape.  Unbounded on
+#: purpose: entries are a few machine words and the key space is the
+#: distinct-shape space, which ``_LATTICE_CACHE`` already bounds in
+#: practice.
+_RESIDENT_CACHE: dict[tuple, int] = {}
+
+
+def _resident_bytes_cached(layer: Layer) -> int:
+    key = _shape_key(layer)
+    v = _RESIDENT_CACHE.get(key)
+    if v is None:
+        v = _RESIDENT_CACHE[key] = _layer_resident_bytes(layer)
+    return v
+
+
 def cache_clear() -> None:
     _CACHE.clear()
     _LATTICE_CACHE.clear()
+    _RESIDENT_CACHE.clear()
     # counters, bucket timers and any other dse-subsystem metrics reset
     # together so a fresh measurement window starts clean
     obs.reset("dse.")
@@ -557,6 +627,23 @@ def _grid_for(layer: Layer, designs: MacroBatch, scheds,
     return grid
 
 
+def _synced_lap(sp, results, label: str = "kernel"):
+    """Record a span lap only after the device work behind ``results``
+    has completed.
+
+    Cost results may be asynchronous jax arrays (the reduced path keeps
+    them on device), so a bare ``sp.lap`` would attribute still-running
+    device execution to whatever the span times next.  ``Span.wait``
+    walks ``results`` through ``block_until_ready`` before the lap; the
+    null span (tracing off) skips the sync entirely — it costs nothing,
+    and correctness never depends on it because consumers still block
+    at their ``np.asarray`` conversion.  Returns ``results``.
+    """
+    sp.wait(results)
+    sp.lap(label)
+    return results
+
+
 def _price_buckets(buckets, designs: MacroBatch, objective: str,
                    alpha: float | None, per_bit, buffer_bytes: int,
                    dram: float) -> list[tuple]:
@@ -593,10 +680,10 @@ def _price_buckets(buckets, designs: MacroBatch, objective: str,
         with obs.span("dse.price_bucket", bucket=bi, lanes=len(net),
                       layers=len(net.layers), designs=net.n_designs) as sp:
             costs = evaluate_network_grid(net, designs, alpha=alpha)
-            # the grid kernel converts to NumPy before returning, so
-            # the lap already includes device execution — no async
-            # leakage into the argmin remainder of the span
-            sp.lap("kernel")
+            # lap only once the kernel results are synced (this host
+            # path realizes NumPy arrays, so the wait is a no-op — but
+            # the contract is the walker, not the realization)
+            _synced_lap(sp, costs.macro_energy)
             new_shapes = (grid_kernel_info()["distinct_shapes"]
                           - shapes_before)
             timer = _T_BUCKET_FIRST if new_shapes else _T_BUCKET_WARM
@@ -604,8 +691,12 @@ def _price_buckets(buckets, designs: MacroBatch, objective: str,
             sp.set(new_kernel_shapes=new_shapes,
                    first_call=bool(new_shapes),
                    persistent_cache=persistent_cache_dir() is not None)
+            # device→host accounting: this path realizes the kernel's
+            # natural unsharded output face — nine (D, Ctot) f64 grids
+            # plus the (Ctot,) macs row
+            _C_TRANSFER.inc((9 * net.n_designs + 1) * len(net) * 8)
             resident = np.asarray(
-                [_layer_resident_bytes(l) for l in net.layers],
+                [_resident_bytes_cached(l) for l in net.layers],
                 dtype=np.int64)[net.lane_layer]
             mem_fj = traffic_energy_grid(per_bit, costs, resident,
                                          buffer_bytes=buffer_bytes,
@@ -646,22 +737,39 @@ def _price_buckets(buckets, designs: MacroBatch, objective: str,
     return out
 
 
+def _bucket_pad_quantum() -> int:
+    """Shard-aware lane pad quantum: with a sharded lane axis every
+    bucket's padded width must divide over the mesh; lcm keeps the
+    quantum a PAD_QUANTUM multiple so unsharded runs see the exact same
+    bucket shapes as before."""
+    from .energy import lane_shards
+    from .mapping import PAD_QUANTUM
+    shards = lane_shards()
+    return PAD_QUANTUM if shards <= 1 else math.lcm(PAD_QUANTUM, shards)
+
+
 def _price_shapes(shape_layers: Sequence[Layer], designs: MacroBatch,
                   objective: str, alpha: float | None, per_bit,
                   buffer_bytes: int, dram: float, scheds) -> list[tuple]:
     """Build (cached) per-shape lattices, fuse them into buckets, and
-    price everything; one entry per distinct shape, input order."""
-    from .energy import lane_shards
-    from .mapping import PAD_QUANTUM, network_grid
+    price everything; one entry per distinct shape, input order.
+
+    Routed by :func:`sweep_pipeline`: depth ``0`` runs the legacy
+    full-grid host path below (the bitwise oracle); any depth ``>= 1``
+    runs the reduced+pipelined engine — identical results, winners-only
+    transfers, overlapped build/dispatch/finalize stages.
+    """
+    from .mapping import network_grid
+    depth = sweep_pipeline()
+    if depth > 0:
+        return _price_shapes_pipelined(shape_layers, designs, objective,
+                                       alpha, per_bit, buffer_bytes,
+                                       dram, scheds, depth)
     grids = [_grid_for(l, designs, scheds) for l in shape_layers]
     max_lanes = max((len(g) for g in grids),
                     default=1)
     max_lanes = max(max_lanes, _BUCKET_ELEMS // max(1, len(designs)))
-    # with a sharded lane axis every bucket's padded width must divide
-    # over the mesh; lcm keeps the quantum a PAD_QUANTUM multiple so
-    # unsharded runs see the exact same bucket shapes as before
-    shards = lane_shards()
-    pad_q = PAD_QUANTUM if shards <= 1 else math.lcm(PAD_QUANTUM, shards)
+    pad_q = _bucket_pad_quantum()
     with obs.span("dse.network_grid_build", shapes=len(shape_layers),
                   designs=len(designs)) as sp:
         buckets = network_grid(shape_layers, designs, schedules=scheds,
@@ -671,6 +779,189 @@ def _price_shapes(shape_layers: Sequence[Layer], designs: MacroBatch,
                lanes=sum(len(b) for b in buckets))
     return _price_buckets(buckets, designs, objective, alpha, per_bit,
                           buffer_bytes, dram)
+
+
+def _bucket_builder(shape_layers, designs, scheds, pad_q, out_q,
+                    stop: threading.Event):
+    """Builder-thread body of the pipelined engine: greedily assemble
+    lane buckets (same ``_BUCKET_ELEMS`` byte budget as the host path;
+    shapes never split) and fuse each into one :class:`NetworkGrid`,
+    feeding the bounded queue so lattice construction — pure NumPy,
+    which runs concurrently because XLA execution on the consumer side
+    releases the GIL — overlaps bucket pricing.
+
+    One accepted divergence from the host path's bucketing: the budget
+    is not raised to the largest single lattice, so when one shape
+    alone exceeds the byte budget the *boundaries* between buckets may
+    differ.  Results are bitwise identical either way — every shape
+    segment is priced independently.
+    """
+    from .mapping import network_grid
+
+    def put(item) -> bool:
+        while not stop.is_set():
+            try:
+                out_q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    try:
+        budget = max(1, _BUCKET_ELEMS // max(1, len(designs)))
+        members: list[int] = []
+        grids: list = []
+        lanes = 0
+
+        def flush() -> bool:
+            nonlocal members, grids, lanes
+            if not members:
+                return True
+            with obs.span("dse.network_grid_build", shapes=len(members),
+                          designs=len(designs)) as sp:
+                (net,) = network_grid(
+                    [shape_layers[s] for s in members], designs,
+                    schedules=scheds, grids=grids, pad_quantum=pad_q,
+                    max_lanes=None)
+                sp.set(buckets=1, lanes=len(net))
+            ok = put(("bucket", tuple(members), net))
+            members, grids, lanes = [], [], 0
+            return ok
+
+        for si, layer in enumerate(shape_layers):
+            g = _grid_for(layer, designs, scheds)
+            if members and lanes + len(g) > budget:
+                if not flush():
+                    return
+            members.append(si)
+            grids.append(g)
+            lanes += len(g)
+        if flush():
+            put(("done",))
+    except BaseException as e:                   # pragma: no cover
+        put(("error", e))
+
+
+def _finalize_bucket(entry, out) -> None:
+    """Sync one in-flight reduced bucket, realize its (S, D) winners on
+    the host and scatter them into the per-shape output table."""
+    members, net, red = entry
+    with obs.span("dse.finalize_bucket", lanes=len(net),
+                  layers=len(net.layers), designs=net.n_designs) as sp:
+        t0 = time.perf_counter()
+        _synced_lap(sp, (red.best_idx, red.total, red.cycles))
+        best = np.asarray(red.best_idx)
+        total = np.asarray(red.total)
+        cyc = np.asarray(red.cycles)
+        _T_BUCKET_EXECUTE.observe(time.perf_counter() - t0)
+        _C_TRANSFER.inc(red.transfer_bytes)
+        sp.set(transfer_bytes=red.transfer_bytes)
+        for row, si in enumerate(members):
+            out[si] = (net.grids[row], best[row], total[row], cyc[row])
+    _C_LAT_LANES.inc(len(net))
+    _C_LAT_PAD_LANES.inc(net.pad_lanes)
+
+
+def _price_shapes_pipelined(shape_layers, designs: MacroBatch,
+                            objective: str, alpha: float | None,
+                            per_bit, buffer_bytes: int, dram: float,
+                            scheds, depth: int) -> list[tuple]:
+    """Reduced + pipelined pricing engine (``REPRO_SWEEP_PIPELINE``).
+
+    Three overlapped stages: a builder thread assembles lattice buckets
+    (:func:`_bucket_builder`), the main thread dispatches each bucket's
+    reduced evaluation asynchronously (stage-1 grid kernel + stage-2
+    device reduction, ``mapping.evaluate_network_grid(reduce=True)``)
+    and keeps up to ``depth`` buckets in flight before finalizing the
+    oldest — so bucket *i*'s device execution and host finalization
+    overlap bucket *i+1*'s build and dispatch.  Only the per-segment
+    winners (``best_idx`` / ``total`` / ``cycles``, 3·S·D values) ever
+    cross the device→host boundary.
+
+    Telemetry mirrors the host path — one ``dse.price_bucket`` span and
+    one ``dse.bucket.first_call``/``warm`` observation per bucket, on
+    the dispatch wall (jit trace+compile is synchronous, so first-call
+    cost lands there) — plus ``dse.finalize_bucket`` spans with the
+    synced execute wall (``dse.bucket.execute``), ``dse.transfer_bytes``
+    and the ``dse.pipeline.*`` depth/occupancy gauges.
+    """
+    from .compilecache import persistent_cache_dir
+    from .energy import grid_kernel_info
+    from .mapping import evaluate_network_grid
+
+    _G_PIPE_DEPTH.set(depth)
+    out: list[tuple | None] = [None] * len(shape_layers)
+    out_q: queue.Queue = queue.Queue(maxsize=max(2, depth + 1))
+    stop = threading.Event()
+    builder = threading.Thread(
+        target=_bucket_builder,
+        args=(shape_layers, designs, scheds, _bucket_pad_quantum(),
+              out_q, stop),
+        name="repro-sweep-builder", daemon=True)
+    builder.start()
+
+    pending: collections.deque = collections.deque()
+    busy = 0.0
+    busy_start: float | None = None
+    t_loop = time.perf_counter()
+    bi = 0
+    try:
+        while True:
+            try:
+                item = out_q.get(timeout=0.5)
+            except queue.Empty:
+                if builder.is_alive():
+                    continue
+                raise RuntimeError(
+                    "sweep bucket builder died without a result")
+            if item[0] == "error":
+                raise item[1]
+            if item[0] == "done":
+                break
+            _, members, net = item
+            shapes_before = grid_kernel_info()["distinct_shapes"]
+            t0 = time.perf_counter()
+            if busy_start is None:
+                busy_start = t0
+            with obs.span("dse.price_bucket", bucket=bi, lanes=len(net),
+                          layers=len(net.layers),
+                          designs=net.n_designs, reduced=True) as sp:
+                resident = np.asarray(
+                    [_resident_bytes_cached(l) for l in net.layers],
+                    dtype=np.int64)[net.lane_layer]
+                red = evaluate_network_grid(
+                    net, designs, alpha=alpha, reduce=True,
+                    objective=objective, per_bit=per_bit,
+                    resident_bytes=resident, buffer_bytes=buffer_bytes,
+                    dram_fj_per_bit=dram)
+                sp.lap("dispatch")
+                new_shapes = (grid_kernel_info()["distinct_shapes"]
+                              - shapes_before)
+                timer = _T_BUCKET_FIRST if new_shapes else _T_BUCKET_WARM
+                timer.observe(time.perf_counter() - t0)
+                sp.set(new_kernel_shapes=new_shapes,
+                       first_call=bool(new_shapes),
+                       persistent_cache=persistent_cache_dir()
+                       is not None)
+            pending.append((members, net, red))
+            bi += 1
+            _C_PIPE_BUCKETS.inc()
+            if len(pending) >= depth:
+                _finalize_bucket(pending.popleft(), out)
+                if not pending and busy_start is not None:
+                    busy += time.perf_counter() - busy_start
+                    busy_start = None
+        while pending:
+            _finalize_bucket(pending.popleft(), out)
+        if busy_start is not None:
+            busy += time.perf_counter() - busy_start
+            busy_start = None
+    finally:
+        stop.set()
+        builder.join(timeout=10.0)
+    wall = time.perf_counter() - t_loop
+    _G_PIPE_OCC.set(busy / wall if wall > 0 else 0.0)
+    return out
 
 
 def _mem_pricing(designs: MacroBatch, mem: MemoryModel | None):

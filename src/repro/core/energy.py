@@ -644,35 +644,9 @@ def _sharded_grid_kernel(shards: int, tile_rank: int):
     return fn
 
 
-def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
-                     weight_loads: np.ndarray | int = 1,
-                     alpha: float = DEFAULT_ALPHA,
-                     schedule_os: np.ndarray | bool = False
-                     ) -> EnergyBreakdownBatch:
-    """Vectorized :func:`tile_energy` over a (design x tile) lattice.
-
-    ``designs`` is a :class:`repro.core.designs.MacroBatch` of D macro
-    design points; the tile arguments are integer arrays broadcastable
-    to a common (..., C) shape, which is crossed with the design axis
-    into (D, C) outputs.  ``schedule_os`` marks output-stationary tile
-    columns (bool, broadcastable against the tile axis).  One fused
-    ``jax.jit`` pass (on whatever backend JAX finds; float64 via
-    ``jax.experimental.enable_x64``) prices the lattice; the result is
-    bitwise identical to running the scalar oracle at every
-    (design, tile) pair — the same contract ``tile_energy_batch``
-    honours per macro, extended over designs.
-
-    Leading layer axis: tile arguments may also be 2-D ``(L, C)``
-    stacks (one row per layer of a padded workload lattice), in which
-    case the design axis is inserted *between* the layer and candidate
-    axes and every output is ``(L, D, C)``.  The kernel is purely
-    elementwise, so each ``[l, d, c]`` entry is bitwise what the 1-D
-    call on layer ``l``'s row alone would produce — the workload-fused
-    sweep (``dse.sweep``/``sweep_networks``) relies on this to price a
-    whole network in one compile.
-    """
-    from jax.experimental import enable_x64
-
+def _coerce_tile_args(n_inputs, rows_used, cols_used, weight_loads,
+                      schedule_os):
+    """Shared tile-argument canonicalization for both dispatch modes."""
     n_inputs = np.atleast_1d(np.asarray(n_inputs, dtype=np.int64))
     rows_used = np.atleast_1d(np.asarray(rows_used, dtype=np.int64))
     cols_used = np.atleast_1d(np.asarray(cols_used, dtype=np.int64))
@@ -680,6 +654,24 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
         np.asarray(weight_loads, dtype=np.int64), n_inputs.shape)
     sched_os = np.broadcast_to(
         np.asarray(schedule_os, dtype=bool), n_inputs.shape)
+    return n_inputs, rows_used, cols_used, weight_loads, sched_os
+
+
+def _dispatch_grid_kernel(designs, n_inputs, rows_used, cols_used,
+                          weight_loads, sched_os, alpha, realize: bool):
+    """One fused grid-kernel dispatch (counters, shard selection, span).
+
+    The single code path behind both consumers: ``tile_energy_grid``
+    (``realize=True`` — results come back as host float64 arrays, so
+    the span wall covers dispatch through device completion) and the
+    reduced sweep's sharded stage-1 (``realize=False`` — the raw jax
+    arrays stay on device and the dispatch is *asynchronous*: the span
+    covers dispatch only, and device time is attributed by whoever
+    later blocks on the results, e.g. the reduced sweep's finalize
+    span).  Returns ``(parts, sharded)``.
+    """
+    from jax.experimental import enable_x64
+
     # 1-D tile args broadcast straight against the (D, 1) design columns;
     # layer-stacked (..., L, C) args get the design axis spliced in
     # before the candidate axis.
@@ -711,10 +703,9 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
 
     cst = _design_constants(designs)
     col = lambda a: a[:, None]                     # (D,) -> (D, 1)
-    # np.asarray forces execution, so the span's wall covers dispatch
-    # through device completion (compile included on a fresh shape).
     with obs.span("energy.grid_kernel", lanes=int(n_inputs.shape[-1]),
-                  designs=len(designs.rows), sharded=sharded):
+                  designs=len(designs.rows), sharded=sharded,
+                  realized=realize):
         with enable_x64():
             parts = kern(
                 col(cst["analog"]), col(cst["mmux1"]), col(cst["rows"]),
@@ -727,7 +718,48 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
                 col(cst["denom_occ"]), col(cst["dac_e"]), col(cst["p_write"]),
                 tile(n_inputs), tile(rows_used), tile(cols_used),
                 tile(weight_loads), tile(sched_os), alpha)
-            parts = tuple(np.asarray(p, dtype=np.float64) for p in parts)
+            if realize:
+                # np.asarray forces execution, so the span's wall covers
+                # dispatch through device completion (compile included
+                # on a fresh shape).
+                parts = tuple(np.asarray(p, dtype=np.float64)
+                              for p in parts)
+    return parts, sharded
+
+
+def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
+                     weight_loads: np.ndarray | int = 1,
+                     alpha: float = DEFAULT_ALPHA,
+                     schedule_os: np.ndarray | bool = False
+                     ) -> EnergyBreakdownBatch:
+    """Vectorized :func:`tile_energy` over a (design x tile) lattice.
+
+    ``designs`` is a :class:`repro.core.designs.MacroBatch` of D macro
+    design points; the tile arguments are integer arrays broadcastable
+    to a common (..., C) shape, which is crossed with the design axis
+    into (D, C) outputs.  ``schedule_os`` marks output-stationary tile
+    columns (bool, broadcastable against the tile axis).  One fused
+    ``jax.jit`` pass (on whatever backend JAX finds; float64 via
+    ``jax.experimental.enable_x64``) prices the lattice; the result is
+    bitwise identical to running the scalar oracle at every
+    (design, tile) pair — the same contract ``tile_energy_batch``
+    honours per macro, extended over designs.
+
+    Leading layer axis: tile arguments may also be 2-D ``(L, C)``
+    stacks (one row per layer of a padded workload lattice), in which
+    case the design axis is inserted *between* the layer and candidate
+    axes and every output is ``(L, D, C)``.  The kernel is purely
+    elementwise, so each ``[l, d, c]`` entry is bitwise what the 1-D
+    call on layer ``l``'s row alone would produce — the workload-fused
+    sweep (``dse.sweep``/``sweep_networks``) relies on this to price a
+    whole network in one compile.
+    """
+    (n_inputs, rows_used, cols_used, weight_loads,
+     sched_os) = _coerce_tile_args(n_inputs, rows_used, cols_used,
+                                   weight_loads, schedule_os)
+    parts, _ = _dispatch_grid_kernel(designs, n_inputs, rows_used,
+                                     cols_used, weight_loads, sched_os,
+                                     alpha, realize=True)
     (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, macs,
      x_adc, x_dac) = parts
     # OS conversion-phase terms fold in with the scalar association
@@ -741,6 +773,325 @@ def tile_energy_grid(designs, n_inputs, rows_used, cols_used,
     # field the full (D, C) face so indexing is uniform.
     shape = np.broadcast_shapes(*(p.shape for p in parts))
     return EnergyBreakdownBatch(*(np.broadcast_to(p, shape) for p in parts))
+
+
+# --------------------------------------------------------------------------- #
+# device-side objective reduction (stage 2 of the reduced sweep path)          #
+# --------------------------------------------------------------------------- #
+#: finite masked-lane sentinels for the fused argmin (shared with the
+#: host oracle in ``dse``).  Illegal and padded lanes never carry
+#: inf/NaN: their well-defined finite garbage is replaced by the largest
+#: representable value of the objective dtype, which any real candidate
+#: cost undercuts — so the argmin stays FMA-safe (no 0*inf / inf-inf
+#: patterns for XLA or NumPy to mangle) and tie-breaks are untouched
+#: (every (layer, design) pair has at least one legal lane: the all-ones
+#: mapping is always legal).
+SENTINEL_F64 = np.float64(np.finfo(np.float64).max)
+SENTINEL_I64 = np.int64(np.iinfo(np.int64).max)
+
+#: stage-2 jit caches: ``has_os -> terms closure`` (split form, for the
+#: sharded stage-1 path), ``has_os -> fused stage-1+terms closure``
+#: (unsharded fast path) and ``(objective, n_segments) -> argmin
+#: closure``.
+#:
+#: WHY TWO EXECUTABLES: XLA:CPU contracts ``a*b + c`` into a fused
+#: multiply-add during LLVM codegen whenever a float product feeds an
+#: add inside one compiled module — and ``lax.optimization_barrier``
+#: does NOT stop it (measured on this backend: identical 1-ULP drift
+#: with and without the barrier; a double ``bitcast_convert_type``
+#: fence gets folded away too).  Splitting at the executable boundary
+#: is the one fence codegen cannot see through: the *terms* side is
+#: addition-free in float except for uncontractable adds (see below),
+#: the *argmin* kernel consumes the materialized term buffers as
+#: program parameters so its chained adds have no producer multiply in
+#: scope.  Both dispatches stay asynchronous and the intermediate term
+#: buffers never leave the device.
+#:
+#: WHY THE FUSED TERMS KERNEL IS STILL SAFE: the raw grid kernel body
+#: (:func:`_raw_grid_kernel`) contains NO float additions — every
+#: energy term is a chain of multiplies, divides and selects — so
+#: fusing the scaling and traffic *products* into the same module
+#: leaves nothing for LLVM to contract.  The OS fold adds
+#: (``e_adc + x_adc`` / ``e_dac + x_dac``) are the only in-module adds,
+#: and both operands terminate in ``fdiv`` or ``select`` instructions
+#: (never a bare ``fmul``), while the folded sums feed *multiplies* —
+#: FMA contraction needs a multiply feeding an add, so neither side of
+#: the fold can contract.  The add CHAIN (the objective total) is what
+#: must stay behind the executable boundary.
+_REDUCE_TERMS_KERNELS: dict = {}
+_REDUCED_FUSED_KERNELS: dict = {}
+_REDUCE_ARGMIN_KERNELS: dict = {}
+
+
+def _reduce_terms_kernel(has_os: bool):
+    """Stage-2a: OS fold + active-macro scaling + traffic products.
+
+    Reproduces the host oracle's per-term float ops exactly: the fold
+    (``e_adc + x_adc`` on raw kernel outputs, before scaling — adds of
+    program parameters, uncontractable), the two-multiply
+    ``(x * active_macros) * weight_tiles`` scaling, and the four
+    ``memory.traffic_terms`` products.  Returns the eleven term grids;
+    no float term is ever added to another here.
+    """
+    fn = _REDUCE_TERMS_KERNELS.get(has_os)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        from .compilecache import enable_compilation_cache
+        from .memory import traffic_terms
+        enable_compilation_cache()
+
+        def kernel(e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write,
+                   x_adc, x_dac, active_macros, weight_tiles,
+                   weight_bits, input_bits, output_bits, psum_bits,
+                   per_bit, per_bit_spill, off_chip):
+            if has_os:
+                e_adc = e_adc + x_adc
+                e_dac = e_dac + x_dac
+
+            def scale2(x):
+                return (x * active_macros) * weight_tiles
+
+            terms = [scale2(p) for p in
+                     (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write)]
+            terms += list(traffic_terms(
+                jnp, per_bit, per_bit_spill, off_chip,
+                weight_bits, input_bits, output_bits, psum_bits))
+            return tuple(terms)
+
+        fn = jax.jit(kernel)
+        _REDUCE_TERMS_KERNELS[has_os] = fn
+    return fn
+
+
+def _reduced_fused_kernel(has_os: bool):
+    """Stage-1 grid kernel + stage-2a terms in ONE executable.
+
+    The unsharded reduced path's fast dispatch: composes
+    :func:`_raw_grid_kernel` with the OS fold, the active-macro scaling
+    and the traffic products inside a single jit module, so stage-1's
+    ten (D, C) float64 intermediates are never materialized as buffers
+    between executables — for a full 4M-element bucket that saves
+    ~640 MB of memory traffic per dispatch plus one compile.
+
+    Bitwise safety (see the cache-block comment above): the raw kernel
+    body has no float adds, the OS fold adds operands end in
+    ``fdiv``/``select`` and their sums feed multiplies, so the merged
+    module exposes no ``fmul``→``fadd`` edge for LLVM to contract —
+    every float op lands exactly as in the split two-kernel chain
+    (property-pinned in ``tests/core/test_reduced_sweep.py``).
+    """
+    fn = _REDUCED_FUSED_KERNELS.get(has_os)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        from .compilecache import enable_compilation_cache
+        from .memory import traffic_terms
+        enable_compilation_cache()
+        raw = _raw_grid_kernel()
+
+        def kernel(analog, mmux1, rows, d1, bw, m, cc_bs,
+                   e_wl_line, e_bl_word, p_logic, adc_e, denom_adc,
+                   cols_per_adc, f_tree_a, f_tree_d, p_tree, denom_occ,
+                   dac_e, p_write,
+                   n_inputs, rows_used, cols_used, weight_loads, sched_os,
+                   alpha, active_macros, weight_tiles,
+                   weight_bits, input_bits, output_bits, psum_bits,
+                   per_bit, per_bit_spill, off_chip):
+            (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, _macs,
+             x_adc, x_dac) = raw(
+                analog, mmux1, rows, d1, bw, m, cc_bs, e_wl_line,
+                e_bl_word, p_logic, adc_e, denom_adc, cols_per_adc,
+                f_tree_a, f_tree_d, p_tree, denom_occ, dac_e, p_write,
+                n_inputs, rows_used, cols_used, weight_loads, sched_os,
+                alpha)
+            if has_os:
+                e_adc = e_adc + x_adc
+                e_dac = e_dac + x_dac
+
+            def scale2(x):
+                return (x * active_macros) * weight_tiles
+
+            terms = [scale2(p) for p in
+                     (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write)]
+            terms += list(traffic_terms(
+                jnp, per_bit, per_bit_spill, off_chip,
+                weight_bits, input_bits, output_bits, psum_bits))
+            return tuple(terms)
+
+        fn = jax.jit(kernel)
+        _REDUCED_FUSED_KERNELS[has_os] = fn
+    return fn
+
+
+def _reduce_argmin_kernel(objective: str, n_segments: int):
+    """Stage-2b: the exact scalar add association + masked argmin.
+
+    The eleven term grids enter as program parameters, so the chained
+    adds below — the same ``(((e_wl+e_bl)+e_logic)+(e_adc+e_tree))+...``
+    / ``((w+i)+o)+p`` association ``dse._price_buckets`` runs in NumPy
+    — have no producer multiply for LLVM to contract with.  Cycles are
+    int64 (exact on device); the objective column replaces illegal and
+    padded lanes with the finite sentinels.
+
+    The per-segment argmin runs as two ``segment_min`` passes over the
+    lane axis instead of one ``jnp.argmin`` per static segment slice —
+    an S-sliced module took XLA:CPU ~1 s to compile for a 29-segment
+    bucket (dominating the cold sweep wall) where the segment form
+    compiles in ~0.1 s and re-specializes only on the segment *count*
+    and array shapes, not the bounds, so same-shaped buckets share the
+    executable.  Bitwise: ``min`` is exact and order-free, and "first
+    lane whose value equals its segment min" is precisely the first
+    minimum — ``np.argmin``'s tie-break.  Pad lanes carry segment id
+    ``S`` (a dummy row sliced off before returning), so they cannot
+    perturb any real segment even as sentinels.
+    """
+    key = (objective, n_segments)
+    fn = _REDUCE_ARGMIN_KERNELS.get(key)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        from .compilecache import enable_compilation_cache
+        enable_compilation_cache()
+
+        def kernel(s_wl, s_bl, s_logic, s_adc, s_tree, s_dac, s_write,
+                   m_w, m_i, m_o, m_p, wt_ipt, cc_per_input,
+                   write_cycles, legal, seg_ids, seg_starts):
+            total = s_wl + s_bl
+            total = total + s_logic
+            total = total + (s_adc + s_tree)
+            total = total + s_dac
+            total = total + s_write
+            mem_total = m_w + m_i
+            mem_total = mem_total + m_o
+            mem_total = mem_total + m_p
+            total = total + mem_total
+            cycles = wt_ipt * cc_per_input + write_cycles
+            if objective == "energy":
+                col = jnp.where(legal, total, SENTINEL_F64)
+            elif objective == "latency":
+                col = jnp.where(legal, cycles, SENTINEL_I64)
+            else:                                 # edp
+                col = jnp.where(legal, total * cycles, SENTINEL_F64)
+            col_t = col.T                          # (Ctot, D), lanes lead
+            seg_min = jax.ops.segment_min(
+                col_t, seg_ids, num_segments=n_segments + 1,
+                indices_are_sorted=True)           # (S+1, D)
+            lane = jnp.arange(col_t.shape[0], dtype=jnp.int64)[:, None]
+            first = jax.ops.segment_min(
+                jnp.where(col_t == seg_min[seg_ids], lane, SENTINEL_I64),
+                seg_ids, num_segments=n_segments + 1,
+                indices_are_sorted=True)[:n_segments]  # (S, D) global lane
+            best = first - seg_starts[:, None]     # within-segment index
+            d = jnp.arange(total.shape[0])[None, :]
+            return best, total[d, first], cycles[d, first]
+
+        fn = jax.jit(kernel)
+        _REDUCE_ARGMIN_KERNELS[key] = fn
+    return fn
+
+
+def reduce_objective_grid(designs, *, objective: str, seg_bounds: tuple,
+                          has_os: bool, n_inputs, rows_used, cols_used,
+                          weight_loads, schedule_os, alpha,
+                          active_macros, weight_tiles,
+                          wt_ipt, write_cycles, cc_per_input,
+                          weight_bits, input_bits, output_bits,
+                          psum_bits, per_bit, per_bit_spill, off_chip,
+                          legal):
+    """The reduced sweep's whole device chain: stage-1 grid kernel +
+    fold + scale + traffic + sentinel-masked per-segment argmin,
+    returning ``(best_idx, total, cycles)`` as (S, D) jax arrays — S
+    segment rows of (D,) winners, the only data that ever reaches the
+    host.
+
+    Unsharded (the default), stage-1 and the term products run as ONE
+    fused executable (:func:`_reduced_fused_kernel` — no ten-grid
+    materialization between stages); with ``REPRO_SWEEP_SHARDS`` > 1
+    the shard_map grid kernel is kept and the split
+    :func:`_reduce_terms_kernel` consumes its gathered outputs.  Both
+    routes end at the same argmin executable, and both are bitwise
+    identical to the host oracle.
+
+    The dispatch is asynchronous (nothing is blocked on here); callers
+    pipeline over it and attribute device time where they synchronize.
+    ``energy.kernel.calls`` advances one per bucket exactly like the
+    host path (the fused route increments it directly, the sharded
+    route through ``_dispatch_grid_kernel``), and the reduction
+    registers its own distinct kernel-shape entry (the compile-count
+    proxy — it re-traces per (lane count, segment count, objective)).
+    """
+    from jax.experimental import enable_x64
+
+    (n_inputs, rows_used, cols_used, weight_loads,
+     sched_os) = _coerce_tile_args(n_inputs, rows_used, cols_used,
+                                   weight_loads, schedule_os)
+    n_designs, lanes = legal.shape
+    _GRID_KERNEL_SHAPES.add(
+        ((lanes,), n_designs, "reduce", objective, len(seg_bounds), has_os))
+    _G_KERNEL_SHAPES.set(len(_GRID_KERNEL_SHAPES))
+    argmin_k = _reduce_argmin_kernel(objective, len(seg_bounds))
+    # lane -> segment id, pads (the tail past the last bound) mapped to
+    # the dummy segment S the kernel slices off
+    widths = [s1 - s0 for s0, s1 in seg_bounds]
+    seg_ids = np.repeat(np.arange(len(seg_bounds) + 1),
+                        widths + [lanes - seg_bounds[-1][1]])
+    seg_starts = np.asarray([s0 for s0, _ in seg_bounds], dtype=np.int64)
+
+    if lane_shards() > 1:
+        # sharded stage-1: keep the split chain so shard_map owns the
+        # grid kernel (counters advance inside _dispatch_grid_kernel)
+        parts, _ = _dispatch_grid_kernel(
+            designs, n_inputs, rows_used, cols_used, weight_loads,
+            sched_os, alpha, realize=False)
+        (e_wl, e_bl, e_logic, e_adc, e_tree, e_dac, e_write, _macs,
+         x_adc, x_dac) = parts
+        terms_k = _reduce_terms_kernel(has_os)
+        with obs.span("energy.reduce_kernel", lanes=int(lanes),
+                      designs=int(n_designs), segments=len(seg_bounds),
+                      objective=objective, fused_terms=False):
+            with enable_x64():
+                terms = terms_k(e_wl, e_bl, e_logic, e_adc, e_tree,
+                                e_dac, e_write, x_adc, x_dac,
+                                active_macros, weight_tiles, weight_bits,
+                                input_bits, output_bits, psum_bits,
+                                per_bit, per_bit_spill, off_chip)
+                return argmin_k(*terms, wt_ipt, cc_per_input,
+                                write_cycles, legal, seg_ids, seg_starts)
+
+    _C_KERNEL_CALLS.inc()
+    _GRID_KERNEL_SHAPES.add((n_inputs.shape, n_designs))
+    _G_KERNEL_SHAPES.set(len(_GRID_KERNEL_SHAPES))
+    fused_k = _reduced_fused_kernel(has_os)
+    cst = _design_constants(designs)
+    col = lambda a: a[:, None]                     # (D,) -> (D, 1)
+    with obs.span("energy.grid_kernel", lanes=int(lanes),
+                  designs=int(n_designs), sharded=False, realized=False,
+                  fused_terms=True):
+        with enable_x64():
+            terms = fused_k(
+                col(cst["analog"]), col(cst["mmux1"]), col(cst["rows"]),
+                col(cst["d1"]), col(cst["bw"]), col(cst["m"]),
+                col(cst["cc_bs"]), col(cst["e_wl_line"]),
+                col(cst["e_bl_word"]), col(cst["p_logic"]),
+                col(cst["adc_e"]), col(cst["denom_adc"]),
+                col(cst["cols_per_adc"]), col(cst["f_tree_a"]),
+                col(cst["f_tree_d"]), col(cst["p_tree"]),
+                col(cst["denom_occ"]), col(cst["dac_e"]),
+                col(cst["p_write"]),
+                n_inputs, rows_used, cols_used, weight_loads, sched_os,
+                alpha, active_macros, weight_tiles, weight_bits,
+                input_bits, output_bits, psum_bits,
+                per_bit, per_bit_spill, off_chip)
+    with obs.span("energy.reduce_kernel", lanes=int(lanes),
+                  designs=int(n_designs), segments=len(seg_bounds),
+                  objective=objective, fused_terms=True):
+        with enable_x64():
+            return argmin_k(*terms, wt_ipt, cc_per_input, write_cycles,
+                            legal, seg_ids, seg_starts)
 
 
 def _design_constants(designs) -> dict[str, np.ndarray]:

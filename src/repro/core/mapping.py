@@ -1115,15 +1115,54 @@ class NetworkCostGrid:
         return len(self.net)
 
 
+@dataclasses.dataclass(frozen=True)
+class ReducedNetworkCost:
+    """Device-resident winners of one fused bucket (the ``reduce=True``
+    output of :func:`evaluate_network_grid`).
+
+    ``best_idx`` / ``total`` / ``cycles`` are (S, D) *jax* arrays — one
+    row per shape slot of the bucket, still on device and possibly
+    still being computed (the reduction dispatch is asynchronous, so a
+    pipelined caller can overlap the next bucket's dispatch with this
+    one's finalization).  ``transfer_bytes`` is the device→host volume
+    the three arrays cost when realized — the whole point: 3·S·D
+    winners instead of the full (D, Ctot) component grids.
+    """
+
+    net: NetworkGrid
+    objective: str
+    best_idx: object                     # (S, D) jax int
+    total: object                        # (S, D) jax float64
+    cycles: object                       # (S, D) jax int64
+    transfer_bytes: int
+
+
 def evaluate_network_grid(net: NetworkGrid, designs,
-                          alpha: float | None = None) -> NetworkCostGrid:
+                          alpha: float | None = None, *,
+                          reduce: bool = False,
+                          objective: str = "energy",
+                          per_bit=None, resident_bytes=None,
+                          buffer_bytes: int = 1 << 20,
+                          dram_fj_per_bit: float | None = None):
     """Vectorized :func:`evaluate` over a fused workload bucket: one
     ``energy.tile_energy_grid`` jit dispatch for every layer shape in
     the bucket.  Per-layer loop bounds enter as columns gathered
     through ``net.lane_layer``, so each lane's formulas see exactly the
     scalars the per-layer :func:`evaluate_grid` path would — every
     legal lane is bitwise identical to it (and hence to the scalar
-    oracle)."""
+    oracle).
+
+    ``reduce=True`` switches to the device-side reduction path: instead
+    of realizing full (D, Ctot) cost grids on the host, the energy-
+    total chain (same scalar add association, FMA-fenced), the traffic
+    pricing (``per_bit`` / ``resident_bytes`` / ``buffer_bytes`` /
+    ``dram_fj_per_bit``, as :func:`~repro.core.memory.traffic_energy_grid`
+    would price them) and the sentinel-masked first-min argmin all run
+    inside a second jit graph, and a :class:`ReducedNetworkCost` of
+    per-segment (S, D) winners comes back — asynchronously, without
+    blocking.  Bitwise identical to reducing the default
+    :class:`NetworkCostGrid` on the host (property-pinned in
+    ``tests/core/test_reduced_sweep.py``)."""
     from .energy import DEFAULT_ALPHA, tile_energy_grid
     alpha = DEFAULT_ALPHA if alpha is None else alpha
     batch = net.cand
@@ -1154,6 +1193,32 @@ def evaluate_network_grid(net: NetworkGrid, designs,
     rows_used = np.minimum(batch.row_un, acc_depth)
     cols_used = np.minimum(batch.k_cols, k_dim)
     active_macros = batch.k_macros * batch.dup_macros
+
+    cc_per_input = np.where(designs.analog, designs.cc_bs * designs.adc_share,
+                            designs.cc_bs * designs.m_mux)
+    write_cycles = rows_used * weight_tiles * weight_loads
+
+    # OS restreams the weight tensor once per reload pass — the same
+    # closed form as weight_loads (schedule.weight_refetch == .weight_loads)
+    weight_bits = w_elems * w_prec * batch.dup_macros * weight_loads
+    input_bits = (i_elems * i_prec
+                  * np.where(is_os, np.int64(1), n_k_tiles))
+    output_bits = o_elems * p_prec
+    psum_bits = (o_elems * p_prec
+                 * np.where(is_os, np.int64(0),
+                            2 * np.maximum(0, n_acc_tiles - 1)))
+
+    if reduce:
+        return _reduced_network_cost(
+            net, designs, alpha, objective, per_bit, resident_bytes,
+            buffer_bytes, dram_fj_per_bit,
+            inputs_per_tile=inputs_per_tile, rows_used=rows_used,
+            cols_used=cols_used, weight_loads=weight_loads, is_os=is_os,
+            active_macros=active_macros, weight_tiles=weight_tiles,
+            cc_per_input=cc_per_input, write_cycles=write_cycles,
+            weight_bits=weight_bits, input_bits=input_bits,
+            output_bits=output_bits, psum_bits=psum_bits)
+
     e_tile = tile_energy_grid(designs, n_inputs=inputs_per_tile,
                               rows_used=rows_used, cols_used=cols_used,
                               weight_loads=weight_loads,
@@ -1171,26 +1236,57 @@ def evaluate_network_grid(net: NetworkGrid, designs,
         *(_scale2(getattr(e_tile, f.name))
           for f in dataclasses.fields(e_tile)))
 
-    cc_per_input = np.where(designs.analog, designs.cc_bs * designs.adc_share,
-                            designs.cc_bs * designs.m_mux)
-    write_cycles = rows_used * weight_tiles * weight_loads
     cycles = (weight_tiles * inputs_per_tile * cc_per_input[:, None]
               + write_cycles)
 
-    # OS restreams the weight tensor once per reload pass — the same
-    # closed form as weight_loads (schedule.weight_refetch == .weight_loads)
-    weight_bits = w_elems * w_prec * batch.dup_macros * weight_loads
-    input_bits = (i_elems * i_prec
-                  * np.where(is_os, np.int64(1), n_k_tiles))
-    output_bits = o_elems * p_prec
-    psum_bits = (o_elems * p_prec
-                 * np.where(is_os, np.int64(0),
-                            2 * np.maximum(0, n_acc_tiles - 1)))
     return NetworkCostGrid(
         net=net, macro_energy=macro_energy, weight_tiles=weight_tiles,
         inputs_per_tile=inputs_per_tile, cycles=cycles,
         weight_bits=weight_bits, input_bits=input_bits,
         output_bits=output_bits, psum_bits=psum_bits)
+
+
+def _reduced_network_cost(net, designs, alpha, objective, per_bit,
+                          resident_bytes, buffer_bytes, dram_fj_per_bit,
+                          *, inputs_per_tile, rows_used, cols_used,
+                          weight_loads, is_os, active_macros,
+                          weight_tiles, cc_per_input, write_cycles,
+                          weight_bits, input_bits, output_bits,
+                          psum_bits) -> ReducedNetworkCost:
+    """``reduce=True`` tail of :func:`evaluate_network_grid`: stage-1
+    kernel dispatch kept on device, stage-2 reduction composed on top.
+    All host work here is integer/bool prep (exact by construction)."""
+    from .energy import reduce_objective_grid
+    from .memory import DRAM_FJ_PER_BIT, spill_pricing_columns
+    if objective not in ("energy", "latency", "edp"):
+        raise KeyError(objective)
+    if per_bit is None or resident_bytes is None:
+        raise ValueError(
+            "reduce=True requires per_bit and resident_bytes")
+    dram = DRAM_FJ_PER_BIT if dram_fj_per_bit is None else dram_fj_per_bit
+    pb, pb_spill, off_chip = spill_pricing_columns(
+        per_bit, resident_bytes, buffer_bytes=buffer_bytes,
+        dram_fj_per_bit=dram)
+    seg_bounds = tuple((int(net.starts[s]), int(net.starts[s + 1]))
+                      for s in range(len(net.layers)))
+    best_idx, total, cycles = reduce_objective_grid(
+        designs, objective=objective, seg_bounds=seg_bounds,
+        has_os=bool(is_os.any()),
+        n_inputs=inputs_per_tile, rows_used=rows_used,
+        cols_used=cols_used, weight_loads=weight_loads,
+        schedule_os=is_os, alpha=alpha, active_macros=active_macros,
+        weight_tiles=weight_tiles,
+        wt_ipt=weight_tiles * inputs_per_tile,
+        write_cycles=write_cycles, cc_per_input=cc_per_input[:, None],
+        weight_bits=weight_bits, input_bits=input_bits,
+        output_bits=output_bits, psum_bits=psum_bits,
+        per_bit=pb, per_bit_spill=pb_spill, off_chip=off_chip,
+        legal=net.legal)
+    nbytes = sum(a.dtype.itemsize * a.size
+                 for a in (best_idx, total, cycles))
+    return ReducedNetworkCost(net=net, objective=objective,
+                              best_idx=best_idx, total=total,
+                              cycles=cycles, transfer_bytes=int(nbytes))
 
 
 @dataclasses.dataclass(frozen=True)

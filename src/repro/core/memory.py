@@ -216,3 +216,39 @@ def traffic_energy_grid(per_bit: np.ndarray | float, costs,
         "outputs": costs.output_bits * per_bit,
         "psums": costs.psum_bits * per_bit,
     }
+
+
+def spill_pricing_columns(per_bit: np.ndarray | float,
+                          resident_bytes: int | np.ndarray = 0,
+                          buffer_bytes: int = 1 << 20,
+                          dram_fj_per_bit: float = DRAM_FJ_PER_BIT):
+    """Host-side prep for pricing traffic *inside* a jit graph.
+
+    Splits :func:`traffic_energy_grid`'s NumPy work into the pieces a
+    device reduction can consume: the buffered rate column, the spill
+    rate column (the same ``per_bit + dram`` sum the host ``np.where``
+    arms compute, done here once in NumPy so the device never re-adds
+    it), and the per-lane boolean spill decision.  Returns
+    ``(per_bit (D,1) f64, per_bit_spill (D,1) f64, off_chip (C,) or
+    (1,) bool)``.
+    """
+    per_bit = np.atleast_1d(np.asarray(per_bit, dtype=np.float64))[:, None]
+    off_chip = np.atleast_1d(np.asarray(resident_bytes) > buffer_bytes)
+    return per_bit, per_bit + dram_fj_per_bit, off_chip
+
+
+def traffic_terms(xp, per_bit, per_bit_spill, off_chip,
+                  weight_bits, input_bits, output_bits, psum_bits):
+    """The four :func:`traffic_energy_grid` products, composable into a
+    reduction graph (``xp`` is ``jax.numpy`` there, ``numpy`` in tests).
+
+    Only products — no adds — so the caller can fence them (e.g. with
+    ``lax.optimization_barrier``) before summing, keeping the chain
+    FMA-free and bitwise equal to the host oracle's ``bits * rate``
+    multiplies.
+    """
+    per_bit_w = xp.where(off_chip, per_bit_spill, per_bit)
+    return (weight_bits * per_bit_w,
+            input_bits * per_bit,
+            output_bits * per_bit,
+            psum_bits * per_bit)

@@ -1,0 +1,217 @@
+"""Reduced + pipelined sweep engine parity (device-side reduction).
+
+The ``REPRO_SWEEP_PIPELINE`` path prices buckets through
+``mapping.evaluate_network_grid(reduce=True)`` — objective assembly and
+the masked per-segment argmin run inside the jit graph and only (S, D)
+winners cross the device→host boundary.  The contract these tests pin:
+the reduced path is **bitwise identical** to the retained full-grid
+host oracle (``dse._price_buckets``) — argmins (first-minimum
+tie-breaks included), totals, cycles, and masked poison-pad lanes —
+across random grids, layers, schedules and objectives.
+"""
+
+import numpy as np
+import pytest
+
+from repro.testing.hypocompat import (  # real hypothesis when installed
+    given, settings, st)
+
+from repro.core import designs, dse, workloads
+from repro.core.schedule import normalize
+
+GRID_STRAT = dict(
+    rows=st.sampled_from([(64,), (64, 256), (128, 512)]),
+    cols=st.sampled_from([(64,), (64, 512)]),
+    bw=st.sampled_from([(2,), (2, 8)]),
+    adc_bits=st.sampled_from([(4,), (4, 8)]),
+    m_mux=st.sampled_from([(1,), (1, 4)]),
+    tech_nm=st.sampled_from([(28,), (5, 22)]),
+)
+
+LAYER_STRAT = dict(
+    k=st.integers(1, 96),
+    c=st.integers(1, 96),
+    ox=st.sampled_from([1, 5, 16]),
+    oy=st.sampled_from([1, 7]),
+)
+
+
+@pytest.fixture(autouse=True)
+def _restore_pipeline():
+    yield
+    dse.set_sweep_pipeline(None)
+
+
+def _grid(rows, cols, bw, adc_bits, m_mux, tech_nm):
+    return designs.macro_grid(rows=rows, cols=cols, bw=bw,
+                              adc_bits=adc_bits, m_mux=m_mux,
+                              tech_nm=tech_nm)
+
+
+def _layer(k, c, ox, oy, name="r-layer"):
+    return workloads.Layer(name, "conv2d",
+                           dict(B=1, K=k, C=c, OX=ox, OY=oy, FX=3, FY=3))
+
+
+def _price_both(shape_layers, grid, objective, scheds, depth=2):
+    """Price the same shapes through the host oracle and the reduced
+    pipelined engine; return both per-shape result lists."""
+    per_bit, buffer_bytes, dram = dse._mem_pricing(grid, None)
+    sch = normalize(scheds)
+    dse.cache_clear()
+    dse.set_sweep_pipeline(0)
+    host = dse._price_shapes(shape_layers, grid, objective, None,
+                             per_bit, buffer_bytes, dram, sch)
+    dse.cache_clear()
+    dse.set_sweep_pipeline(depth)
+    red = dse._price_shapes(shape_layers, grid, objective, None,
+                            per_bit, buffer_bytes, dram, sch)
+    return host, red
+
+
+def _assert_slots_bitwise(host, red):
+    assert len(host) == len(red)
+    for (hg, hb, ht, hc), (rg, rb, rt, rc) in zip(host, red):
+        assert len(hg) == len(rg)
+        assert np.array_equal(hb, rb)          # winners incl. tie-breaks
+        assert np.array_equal(ht, rt)          # totals, bitwise
+        assert rt.dtype == np.float64
+        assert np.array_equal(hc, rc)          # cycles, exact int64
+        assert rc.dtype == np.int64
+
+
+# --------------------------------------------------------------------------- #
+# property: random (grid, layers, schedules, objective) parity                 #
+# --------------------------------------------------------------------------- #
+@given(**{**GRID_STRAT, **LAYER_STRAT,
+          "objective": st.sampled_from(["energy", "latency", "edp"]),
+          "scheds": st.sampled_from([("ws",), ("ws", "os")]),
+          "depth": st.sampled_from([1, 2, 3])})
+@settings(max_examples=10, deadline=None)
+def test_reduced_matches_host_oracle(rows, cols, bw, adc_bits, m_mux,
+                                     tech_nm, k, c, ox, oy, objective,
+                                     scheds, depth):
+    grid = _grid(rows, cols, bw, adc_bits, m_mux, tech_nm)
+    layers = [_layer(k, c, ox, oy),
+              _layer(max(1, k // 2), c, ox, oy, name="r-half")]
+    host, red = _price_both(layers, grid, objective, scheds, depth=depth)
+    _assert_slots_bitwise(host, red)
+
+
+# --------------------------------------------------------------------------- #
+# tie-breaks: first minimum wins on both paths                                 #
+# --------------------------------------------------------------------------- #
+def test_first_min_tie_break_parity():
+    """Latency columns carry massive lane ties (cycles ignore most
+    mapping knobs); assert ties genuinely exist, then that the reduced
+    argmin picks the same (first) lane as the host oracle."""
+    from repro.core.mapping import evaluate_network_grid, network_grid
+    grid = _grid((64, 256), (64,), (2,), (4, 8), (1, 4), (28,))
+    layers = [_layer(48, 32, 5, 7, name="tie-layer")]
+    sch = normalize(("ws", "os"))
+
+    dse.cache_clear()
+    grids = [dse._grid_for(l, grid, sch) for l in layers]
+    (net,) = network_grid(layers, grid, schedules=sch, grids=grids)
+    costs = evaluate_network_grid(net, grid)
+    col = np.where(net.legal, costs.cycles, dse._SENTINEL_I64)
+    n_at_min = (col == col.min(axis=1, keepdims=True)).sum(axis=1)
+    assert (n_at_min > 1).any(), "fixture no longer produces lane ties"
+
+    host, red = _price_both(layers, grid, "latency", ("ws", "os"))
+    _assert_slots_bitwise(host, red)
+
+
+# --------------------------------------------------------------------------- #
+# poison pads: quantum-padding lanes stay masked behind finite sentinels       #
+# --------------------------------------------------------------------------- #
+def test_pad_lanes_masked_and_winners_legal():
+    from repro.core.mapping import network_grid
+    grid = _grid((64,), (64,), (2,), (4,), (1,), (28,))
+    layers = [_layer(7, 5, 5, 1, name="pad-layer")]
+    sch = normalize(("ws",))
+
+    dse.cache_clear()
+    grids = [dse._grid_for(l, grid, sch) for l in layers]
+    (net,) = network_grid(layers, grid, schedules=sch, grids=grids)
+    assert net.pad_lanes > 0, "fixture no longer pads the lane axis"
+
+    host, red = _price_both(layers, grid, "energy", ("ws",))
+    _assert_slots_bitwise(host, red)
+    # every reduced winner must be a legal (non-pad, non-illegal) lane
+    for row, (_, best_idx, _, _) in enumerate(red):
+        seg = net.segment(row)
+        lanes = np.arange(seg.start, seg.stop)[best_idx]
+        assert net.legal[np.arange(net.n_designs), lanes].all()
+    assert np.isfinite(red[0][2]).all()
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: sweep_networks totals through the public entry point             #
+# --------------------------------------------------------------------------- #
+def test_sweep_networks_end_to_end_parity():
+    grid = _grid((64, 256), (64,), (2, 8), (4, 8), (1, 4), (28,))
+    nets = [("resnet8", workloads.resnet8()),
+            ("ae", workloads.deep_autoencoder())]
+    dse.cache_clear()
+    dse.set_sweep_pipeline(0)
+    ref = dse.sweep_networks(nets, grid, schedules=("ws", "os"))
+    dse.cache_clear()
+    dse.set_sweep_pipeline(2)
+    out = dse.sweep_networks(nets, grid, schedules=("ws", "os"))
+    for a, b in zip(ref, out):
+        assert np.array_equal(a.energy_fj, b.energy_fj)
+        assert np.array_equal(a.cycles, b.cycles)
+        for sa, sb in zip(a._shapes, b._shapes):
+            assert np.array_equal(sa[2], sb[2])
+
+
+def test_reduced_transfer_accounting():
+    """The reduced path must ship >= 5x less than the host path (the
+    acceptance floor; real grids are orders of magnitude beyond it)."""
+    from repro import obs
+    grid = _grid((64, 256), (64,), (2, 8), (4, 8), (1, 4), (28,))
+    nets = [("resnet8", workloads.resnet8())]
+    dse.cache_clear()
+    dse.set_sweep_pipeline(0)
+    dse.sweep_networks(nets, grid)
+    host_bytes = obs.snapshot("dse.")["dse.transfer_bytes"]
+    dse.cache_clear()
+    dse.set_sweep_pipeline(2)
+    dse.sweep_networks(nets, grid)
+    red_bytes = obs.snapshot("dse.")["dse.transfer_bytes"]
+    assert host_bytes >= 5 * red_bytes
+
+
+# --------------------------------------------------------------------------- #
+# REPRO_SWEEP_PIPELINE resolution                                              #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("spec,expect", [
+    (None, 2),                 # unset -> auto
+    ("auto", 2),
+    ("", 0), ("0", 0), ("off", 0), ("false", 0), ("none", 0),
+    ("disabled", 0),
+    ("1", 1), ("3", 3),
+    ("-4", 1),                 # integers clamp to >= 1
+    ("garbage", 2),            # unparsable -> auto
+])
+def test_pipeline_env_resolution(monkeypatch, spec, expect):
+    if spec is None:
+        monkeypatch.delenv("REPRO_SWEEP_PIPELINE", raising=False)
+    else:
+        monkeypatch.setenv("REPRO_SWEEP_PIPELINE", spec)
+    dse.set_sweep_pipeline(None)     # force re-read
+    assert dse.sweep_pipeline() == expect
+
+
+def test_resident_bytes_memo():
+    a = _layer(8, 8, 5, 1, name="m-a")
+    b = _layer(8, 8, 5, 1, name="m-b")          # same shape key
+    dse.cache_clear()
+    va = dse._resident_bytes_cached(a)
+    assert va == dse._layer_resident_bytes(a)
+    assert len(dse._RESIDENT_CACHE) == 1
+    assert dse._resident_bytes_cached(b) == va  # shared slot, no growth
+    assert len(dse._RESIDENT_CACHE) == 1
+    dse.cache_clear()
+    assert len(dse._RESIDENT_CACHE) == 0

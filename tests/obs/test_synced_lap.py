@@ -1,0 +1,82 @@
+"""Kernel-lap sync contract of the sweep engine (``dse._synced_lap``).
+
+The bucket pricers lap their spans only *after* the device work behind
+the cost results has completed — otherwise still-running async jax
+execution would be attributed to whatever the span times next (the
+stale "no async leakage" comment this replaced asserted the opposite).
+The contract is the ``Span.wait`` walker: every ``block_until_ready``
+duck in the payload is synced before the lap lands; under the null span
+(tracing off) nothing is synced and nothing is recorded.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro import obs
+from repro.core import dse
+
+
+class _Payload:
+    """Duck-typed async device array: counts sync calls."""
+
+    def __init__(self):
+        self.synced = 0
+
+    def block_until_ready(self):
+        self.synced += 1
+        return self
+
+
+@dataclasses.dataclass
+class _Results:
+    a: _Payload
+    b: _Payload
+
+
+@pytest.fixture
+def traced_on():
+    obs.set_trace_enabled(True)
+    obs.drain_spans()
+    yield
+    obs.drain_spans()
+    obs.set_trace_enabled(None)
+
+
+@pytest.fixture
+def traced_off():
+    obs.set_trace_enabled(False)
+    obs.drain_spans()
+    yield
+    obs.set_trace_enabled(None)
+
+
+def test_synced_lap_blocks_before_lap(traced_on):
+    res = _Results(_Payload(), _Payload())
+    with obs.span("t.bucket") as sp:
+        out = dse._synced_lap(sp, res)
+    assert out is res
+    # the walker reached every leaf before the lap was recorded
+    assert res.a.synced == 1 and res.b.synced == 1
+    (rec,) = obs.iter_spans()
+    assert rec["name"] == "t.bucket"
+    assert rec["attrs"]["kernel_s"] >= 0.0
+
+
+def test_synced_lap_custom_label(traced_on):
+    res = _Payload()
+    with obs.span("t.bucket") as sp:
+        dse._synced_lap(sp, res, label="dispatch")
+    (rec,) = obs.iter_spans()
+    assert "dispatch_s" in rec["attrs"] and "kernel_s" not in rec["attrs"]
+
+
+def test_synced_lap_null_span_skips_sync(traced_off):
+    res = _Results(_Payload(), _Payload())
+    sp = obs.span("t.bucket")
+    with sp:
+        out = dse._synced_lap(sp, res)
+    assert out is res
+    # tracing off: the null span must not pay the device sync
+    assert res.a.synced == 0 and res.b.synced == 0
+    assert obs.iter_spans() == []
