@@ -53,6 +53,20 @@ Env knobs
     kernel and only the fold/scale/argmin chain changes, so both knobs
     can be on at once (shards split each bucket across devices,
     the pipeline overlaps consecutive buckets).
+``REPRO_FAULT_RATE`` / ``REPRO_FAULT_SEED``
+    Degraded-mode sweep: a non-zero rate builds a seeded
+    ``repro.faults.FaultSpec`` (rate applied to both stuck column
+    groups and macro dropout, seed pinning the survivor draw) and the
+    whole sweep prices only the mappings that survive — the survivor
+    mask ANDs into the lattice's ``legal`` plane, so no cost kernel,
+    jit graph or compile count changes.  Composes freely with
+    ``REPRO_SWEEP_PIPELINE`` (the reduced engine folds the degraded
+    mask device-side, the host oracle applies it in ``np.where`` —
+    bitwise identical) and with ``REPRO_SWEEP_SHARDS`` (the mask rides
+    the lane axis through ``shard_map`` unchanged).  The artifact
+    records the active rate/seed under ``"faults"``; unset/0 is
+    bit-for-bit the pristine sweep.  The dedicated fault-rate axis
+    sweep lives in ``benchmarks.chaos_sweep``.
 ``REPRO_TRACE``
     Turn on span tracing (``repro.obs``).  The fused sweep then records
     nested wall-time spans — lattice builds, per-bucket jit dispatch
@@ -103,6 +117,7 @@ import numpy as np
 from repro import obs
 from repro.core import designs, dse, energy, mapping, workloads
 from repro.core.compilecache import compilation_cache_info
+from repro.faults import FaultSpec
 
 from .common import emit, sync, timed, write_json_atomic
 
@@ -123,13 +138,15 @@ def make_grid(smoke: bool = False) -> designs.MacroBatch:
 def run(smoke: bool = False, dataflows: bool = False) -> None:
     grid = make_grid(smoke)
     schedules = ("ws", "os") if dataflows else None
+    faults = FaultSpec.from_env()
     nets = (("deep_autoencoder", workloads.deep_autoencoder()),)
     if not smoke:
         nets += (("resnet8", workloads.resnet8()),)
 
     for net_name, layers in nets:
         def sweep_net() -> str:
-            res = dse.sweep(net_name, layers, grid, schedules=schedules)
+            res = dse.sweep(net_name, layers, grid, schedules=schedules,
+                            faults=faults)
             aimc = np.flatnonzero(grid.analog)
             dimc = np.flatnonzero(~grid.analog)
             total_macs = sum(l.macs for l in layers if l.imc_eligible)
@@ -189,6 +206,7 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
     """
     grid = make_grid(smoke)
     schedules = ("ws", "os") if dataflows else None
+    faults = FaultSpec.from_env()
     nets = [("deep_autoencoder", workloads.deep_autoencoder()),
             ("ds_cnn", workloads.ds_cnn())]
     if not smoke:
@@ -199,7 +217,8 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
     energy.grid_kernel_reset()
     obs.drain_spans()
     t0 = time.perf_counter()
-    results = sync(dse.sweep_networks(nets, grid, schedules=schedules))
+    results = sync(dse.sweep_networks(nets, grid, schedules=schedules,
+                                      faults=faults))
     t_cold = time.perf_counter() - t0
     kernel_cold = energy.grid_kernel_info()
     cache = dse.cache_info()
@@ -210,7 +229,8 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
     t_warm = float("inf")
     for _ in range(3):
         t0 = time.perf_counter()
-        sync(dse.sweep_networks(nets, grid, schedules=schedules))
+        sync(dse.sweep_networks(nets, grid, schedules=schedules,
+                                faults=faults))
         t_warm = min(t_warm, time.perf_counter() - t0)
 
     # isolated lattice-build wall time (the vectorized candidate_grid
@@ -260,6 +280,8 @@ def run_networks(smoke: bool = False, dataflows: bool = False,
             pipe_cold.get("dse.pipeline.occupancy", 0.0)),
         "transfer_bytes_cold": int(
             pipe_cold.get("dse.transfer_bytes", 0)),
+        "faults": {"enabled": faults.enabled,
+                   "rate": faults.column_fail_rate, "seed": faults.seed},
         "compilation_cache": compilation_cache_info(),
         "lattice_slots": cache["lattice_slots"],
         "lattice_layers": cache["lattice_layers"],

@@ -13,9 +13,10 @@ from __future__ import annotations
 
 import argparse
 
-from . import (accuracy_sweep, common, design_sweep, fig4_survey,
-               fig5_validation, fig6_tech, fig7_casestudy, kernel_bench,
-               lm_imc_casestudy, roofline_table, serving_sweep)
+from . import (accuracy_sweep, chaos_sweep, common, design_sweep,
+               fig4_survey, fig5_validation, fig6_tech, fig7_casestudy,
+               kernel_bench, lm_imc_casestudy, roofline_table,
+               serving_sweep)
 
 #: registered benchmarks, in the order the full harness runs them.
 #: Variant entries (e.g. the dataflow-axis sweep CI smokes) share a
@@ -32,6 +33,7 @@ BENCHMARKS: dict[str, object] = {
     "design_sweep_networks": lambda: design_sweep.run_networks(smoke=True),
     "accuracy_sweep": lambda: accuracy_sweep.run(smoke=True),
     "serving_sweep": lambda: serving_sweep.run(smoke=True),
+    "chaos_sweep": lambda: chaos_sweep.run(smoke=True),
     "roofline_table": roofline_table.run,
     "kernel_bench": kernel_bench.run,
 }

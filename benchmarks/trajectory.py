@@ -1,11 +1,13 @@
 """Tracked perf trajectory: fold ``BENCH_sweep.json`` /
-``BENCH_serving.json`` points into the committed
-``BENCH_trajectory.json`` history.
+``BENCH_serving.json`` / ``BENCH_chaos.json`` points into the
+committed ``BENCH_trajectory.json`` history.
 
 Each entry is one commit's headline numbers for one benchmark — the
 fused-sweep timing point (cold/warm wall, lattice-build time,
-compile-count proxy, padding waste, shard count) or the serving-sweep
-summary (operating points, best tokens/s and J/token, oracle verdict)
+compile-count proxy, padding waste, shard count), the serving-sweep
+summary (operating points, best tokens/s and J/token, oracle verdict),
+or the chaos-sweep summary (fault points, worst-case goodput and
+availability, frontier flip rate)
 — so perf regressions show up as a diff in review instead of vanishing
 with the CI artifact.  Appending is idempotent per (commit, benchmark):
 re-running on the same SHA replaces that benchmark's entry in place, so
@@ -53,6 +55,21 @@ def _serving_headline(artifact: dict) -> dict:
     return out
 
 
+def _chaos_headline(artifact: dict) -> dict:
+    """Headline columns of a ``BENCH_chaos.json`` artifact: the fault
+    points swept, worst-case goodput/availability across the episodes,
+    and how often the energy winner flipped vs the pristine baseline."""
+    head = artifact.get("headline") or {}
+    return {
+        "fault_points": len(artifact.get("points", [])),
+        "worst_case_goodput": head.get("worst_case_goodput", 0.0),
+        "availability": head.get("worst_case_availability", 0.0),
+        "frontier_flip_rate": head.get("frontier_flip_rate", 0.0),
+        "style_flips": sum(1 for f in head.get("flips", [])
+                           if f.get("style_flip")),
+    }
+
+
 def _head_commit() -> str:
     try:
         out = subprocess.run(["git", "rev-parse", "HEAD"],
@@ -77,6 +94,8 @@ def append(artifact_path: str = "BENCH_sweep.json",
     entry.update({k: artifact[k] for k in _FIELDS if k in artifact})
     if artifact.get("benchmark") == "serving_sweep":
         entry.update(_serving_headline(artifact))
+    elif artifact.get("benchmark") == "chaos_sweep":
+        entry.update(_chaos_headline(artifact))
     else:
         cc = artifact.get("compilation_cache") or {}
         entry["compile_cache_entries"] = cc.get("entries", 0)

@@ -115,6 +115,8 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .. import obs
+from ..faults.model import (FaultSpec, SurvivorMask, fault_legal,
+                            mapping_survives, survivor_mask)
 from .designs import MacroBatch
 from .energy import EnergyBreakdown
 from .hardware import IMCMacro
@@ -222,19 +224,26 @@ def _layer_resident_bytes(layer: Layer) -> int:
 def best_mapping_scalar(layer: Layer, macro: IMCMacro, mem: MemoryModel,
                         objective: str = "energy",
                         alpha: float | None = None,
-                        schedules=None) -> LayerResult:
+                        schedules=None,
+                        survivors: tuple[int, int] | None = None
+                        ) -> LayerResult:
     """Reference oracle: the original per-candidate Python loop.
 
     Candidates are (mapping, schedule) pairs, mapping outer / schedule
     inner (``schedules=None`` keeps the historical weight-stationary-only
-    search).  Never cached, never vectorized — the batched engine is
-    validated against this function, so keep it boring.
+    search).  ``survivors=(cols, macros)`` restricts the search to
+    mappings that fit a degraded macro (the fault axis; see
+    ``repro.faults``) — the fused engine's survivor-masked argmin is
+    validated bitwise against this filtered loop.  Never cached, never
+    vectorized — keep it boring.
     """
     obj = OBJECTIVES[objective]
     scheds = _normalize_schedules(schedules)
     best: LayerResult | None = None
     resident = _layer_resident_bytes(layer)
     for sm in enumerate_mappings(layer, macro):
+        if survivors is not None and not mapping_survives(sm, *survivors):
+            continue
         for sched in scheds:
             cost = evaluate(layer, macro, sm, alpha=alpha, schedule=sched)
             res = LayerResult(
@@ -508,6 +517,9 @@ class SweepResult:
     area_mm2: np.ndarray                 # (D,) macro area
     layer_names: tuple[str, ...]         # IMC-eligible layers, network order
     schedules: tuple[str, ...] = ("ws",)  # dataflow axis searched (names)
+    #: survivor mask the sweep was degraded by (None = pristine); see
+    #: ``repro.faults`` — winners/totals reflect the masked lattice.
+    survivors: SurvivorMask | None = None
     # per distinct layer shape: (layer, grid, best_idx (D,)) — enough to
     # rebuild any design's full scalar-oracle result without re-searching.
     _shapes: tuple = dataclasses.field(repr=False, default=())
@@ -644,9 +656,30 @@ def _synced_lap(sp, results, label: str = "kernel"):
     return results
 
 
+def _with_survivors(net, survivors: SurvivorMask | None):
+    """AND a survivor mask's fault legality into one bucket's lattice.
+
+    ``None`` returns ``net`` unchanged (the inertness contract: faults
+    off is the identical object, not an equal one).  Otherwise the
+    bucket is re-wrapped with ``legal &= fault_legal(...)`` — grids in
+    ``_LATTICE_CACHE`` stay fault-free (masks are per-sweep, caches are
+    per-shape) and every downstream path (host ``np.where`` sentinels,
+    reduced ``reduce_objective_grid(legal=...)``, sharded lanes) sees
+    the degraded legality through the one field they already consume.
+    The all-ones mapping survives any clamp-to->=1 mask, so every
+    (layer, design) segment keeps >= 1 legal lane and sentinels still
+    never win the argmin.
+    """
+    if survivors is None:
+        return net
+    return dataclasses.replace(
+        net, legal=net.legal & fault_legal(survivors, net.cand))
+
+
 def _price_buckets(buckets, designs: MacroBatch, objective: str,
                    alpha: float | None, per_bit, buffer_bytes: int,
-                   dram: float) -> list[tuple]:
+                   dram: float,
+                   survivors: SurvivorMask | None = None) -> list[tuple]:
     """Price fused workload buckets; per shape slot return
     ``(grid, best_idx (D,), total (D,), cycles (D,))``.
 
@@ -675,6 +708,7 @@ def _price_buckets(buckets, designs: MacroBatch, objective: str,
     out: list[tuple | None] = [None] * sum(
         len(net.shape_indices) for net in buckets)
     for bi, net in enumerate(buckets):
+        net = _with_survivors(net, survivors)
         shapes_before = grid_kernel_info()["distinct_shapes"]
         t0 = time.perf_counter()
         with obs.span("dse.price_bucket", bucket=bi, lanes=len(net),
@@ -750,7 +784,8 @@ def _bucket_pad_quantum() -> int:
 
 def _price_shapes(shape_layers: Sequence[Layer], designs: MacroBatch,
                   objective: str, alpha: float | None, per_bit,
-                  buffer_bytes: int, dram: float, scheds) -> list[tuple]:
+                  buffer_bytes: int, dram: float, scheds,
+                  survivors: SurvivorMask | None = None) -> list[tuple]:
     """Build (cached) per-shape lattices, fuse them into buckets, and
     price everything; one entry per distinct shape, input order.
 
@@ -764,7 +799,8 @@ def _price_shapes(shape_layers: Sequence[Layer], designs: MacroBatch,
     if depth > 0:
         return _price_shapes_pipelined(shape_layers, designs, objective,
                                        alpha, per_bit, buffer_bytes,
-                                       dram, scheds, depth)
+                                       dram, scheds, depth,
+                                       survivors=survivors)
     grids = [_grid_for(l, designs, scheds) for l in shape_layers]
     max_lanes = max((len(g) for g in grids),
                     default=1)
@@ -778,7 +814,7 @@ def _price_shapes(shape_layers: Sequence[Layer], designs: MacroBatch,
         sp.set(buckets=len(buckets),
                lanes=sum(len(b) for b in buckets))
     return _price_buckets(buckets, designs, objective, alpha, per_bit,
-                          buffer_bytes, dram)
+                          buffer_bytes, dram, survivors=survivors)
 
 
 def _bucket_builder(shape_layers, designs, scheds, pad_q, out_q,
@@ -865,7 +901,9 @@ def _finalize_bucket(entry, out) -> None:
 def _price_shapes_pipelined(shape_layers, designs: MacroBatch,
                             objective: str, alpha: float | None,
                             per_bit, buffer_bytes: int, dram: float,
-                            scheds, depth: int) -> list[tuple]:
+                            scheds, depth: int,
+                            survivors: SurvivorMask | None = None
+                            ) -> list[tuple]:
     """Reduced + pipelined pricing engine (``REPRO_SWEEP_PIPELINE``).
 
     Three overlapped stages: a builder thread assembles lattice buckets
@@ -919,6 +957,7 @@ def _price_shapes_pipelined(shape_layers, designs: MacroBatch,
             if item[0] == "done":
                 break
             _, members, net = item
+            net = _with_survivors(net, survivors)
             shapes_before = grid_kernel_info()["distinct_shapes"]
             t0 = time.perf_counter()
             if busy_start is None:
@@ -972,11 +1011,29 @@ def _mem_pricing(designs: MacroBatch, mem: MemoryModel | None):
     return mem.sram_fj_per_bit(), mem.buffer_bytes, mem.dram_fj_per_bit
 
 
+def _resolve_survivors(faults, designs: MacroBatch) -> SurvivorMask | None:
+    """Normalize the public ``faults=`` argument: ``None`` / an inert
+    spec -> ``None`` (the pristine path, bit-for-bit), a
+    :class:`FaultSpec` -> its seeded draw over ``designs``, a
+    pre-drawn :class:`SurvivorMask` -> itself (callers sharing one draw
+    across sweeps, e.g. the chaos harness's accuracy leg)."""
+    if faults is None:
+        return None
+    if isinstance(faults, SurvivorMask):
+        return faults
+    if isinstance(faults, FaultSpec):
+        return survivor_mask(faults, designs) if faults.enabled else None
+    raise TypeError(f"faults must be FaultSpec | SurvivorMask | None, "
+                    f"got {type(faults).__name__}")
+
+
 def sweep_networks(networks: Sequence[tuple[str, Sequence[Layer]]],
                    designs: MacroBatch, objective: str = "energy",
                    alpha: float | None = None,
                    mem: MemoryModel | None = None,
-                   schedules=None) -> tuple[SweepResult, ...]:
+                   schedules=None,
+                   faults: "FaultSpec | SurvivorMask | None" = None
+                   ) -> tuple[SweepResult, ...]:
     """Price *several* workloads against a macro grid in one fused pass.
 
     Layer shapes are deduplicated globally (``_shape_key``) across all
@@ -987,17 +1044,30 @@ def sweep_networks(networks: Sequence[tuple[str, Sequence[Layer]]],
     assembled from the shared per-(shape, design) winners.  Every
     returned result is bitwise what :func:`sweep` alone would return
     for that network — same totals, same winners, same tie-breaks.
+
+    ``faults`` degrades every design by its seeded survivor mask
+    (``repro.faults``): mappings that no longer fit the surviving
+    column groups / macro count drop out of the legality mask before
+    the argmin, so one call answers "which design wins at N% failure".
+    Costs of surviving lanes are untouched and the oracle is
+    :func:`best_mapping_scalar` with the matching ``survivors=`` filter
+    — parity stays bitwise.  ``faults=None`` (or an all-zero spec) is
+    the identical pristine code path.
     """
     if objective not in OBJECTIVES:
         raise KeyError(objective)
+    survivors = _resolve_survivors(faults, designs)
     with obs.span("dse.sweep_networks", networks=len(networks),
-                  designs=len(designs), objective=objective):
+                  designs=len(designs), objective=objective,
+                  faults=survivors is not None):
         return _sweep_networks_traced(networks, designs, objective, alpha,
-                                      mem, schedules)
+                                      mem, schedules, survivors)
 
 
 def _sweep_networks_traced(networks, designs, objective, alpha, mem,
-                           schedules) -> tuple[SweepResult, ...]:
+                           schedules,
+                           survivors: SurvivorMask | None = None
+                           ) -> tuple[SweepResult, ...]:
     """Body of :func:`sweep_networks`, under its root span — the span
     covers lattice build, every bucket dispatch and result assembly, so
     trace wall-time coverage of a sweep is the root span itself."""
@@ -1026,7 +1096,8 @@ def _sweep_networks_traced(networks, designs, objective, alpha, mem,
         nets.append((network, eligible, layer_shape))
 
     priced = _price_shapes(shape_layers, designs, objective, alpha,
-                           per_bit, buffer_bytes, dram, scheds)
+                           per_bit, buffer_bytes, dram, scheds,
+                           survivors=survivors)
     _C_LAT_SLOTS.inc(len(shape_layers))
     _C_LAT_LAYERS.inc(sum(len(n[2]) for n in nets))
 
@@ -1055,6 +1126,7 @@ def _sweep_networks_traced(networks, designs, objective, alpha, mem,
             energy_fj=energy, cycles=cycles, area_mm2=area,
             layer_names=tuple(l.name for l in eligible),
             schedules=_schedule_names(scheds),
+            survivors=survivors,
             _shapes=tuple((s[0], s[1], s[2]) for s in shapes),
             _layer_shape=tuple(local_shape), _alpha=alpha, _mem=mem))
     return tuple(results)
@@ -1063,7 +1135,8 @@ def _sweep_networks_traced(networks, designs, objective, alpha, mem,
 def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
           objective: str = "energy", alpha: float | None = None,
           mem: MemoryModel | None = None,
-          schedules=None) -> SweepResult:
+          schedules=None,
+          faults: "FaultSpec | SurvivorMask | None" = None) -> SweepResult:
     """Price a whole macro grid against a workload in one batched pass.
 
     For every design in ``designs`` (a ``designs.MacroBatch``) and every
@@ -1088,7 +1161,7 @@ def sweep(network: str, layers: Sequence[Layer], designs: MacroBatch,
     """
     return sweep_networks(((network, layers),), designs,
                           objective=objective, alpha=alpha, mem=mem,
-                          schedules=schedules)[0]
+                          schedules=schedules, faults=faults)[0]
 
 
 # --------------------------------------------------------------------------- #
@@ -1178,7 +1251,8 @@ def _f_clk_ghz(designs: MacroBatch) -> np.ndarray:
 def sweep_serving(points: Sequence[ServingPoint], designs: MacroBatch,
                   objective: str = "energy", alpha: float | None = None,
                   mem: MemoryModel | None = None, schedules=None,
-                  kv_hier: KVCacheHierarchy = KVCacheHierarchy()
+                  kv_hier: KVCacheHierarchy = KVCacheHierarchy(),
+                  faults: "FaultSpec | SurvivorMask | None" = None
                   ) -> tuple[ServingPointResult, ...]:
     """Price a serving operating-point grid against a macro grid in one
     fused pass — the serving axis of the DSE lattice.
@@ -1202,7 +1276,8 @@ def sweep_serving(points: Sequence[ServingPoint], designs: MacroBatch,
             for ph in pt.phases:
                 nets.append((f"{pt.name}/{ph.phase}", list(ph.layers)))
         sweeps = sweep_networks(nets, designs, objective=objective,
-                                alpha=alpha, mem=mem, schedules=schedules)
+                                alpha=alpha, mem=mem, schedules=schedules,
+                                faults=faults)
         per_bit, _, _ = _mem_pricing(designs, mem)
         f_clk = _f_clk_ghz(designs)
         n_designs = len(designs)

@@ -1,0 +1,27 @@
+"""Fault injection & graceful degradation — the robustness axis.
+
+Two scales, one contract (off == bitwise identical to the fault-free
+path):
+
+* :mod:`repro.faults.model` — macro-level survivor masks (stuck column
+  groups, macro dropout, ADC drift) that enter the fused sweep as one
+  more legality mask: ``dse.sweep(..., faults=FaultSpec(...))``.
+* :mod:`repro.faults.trace` — fleet-level node-failure traces and the
+  :class:`FaultInjector` that drives the resilient serve loop and the
+  elastic resize-and-restore path.
+
+Keyed by env knobs ``REPRO_FAULT_RATE`` / ``REPRO_FAULT_SEED``
+(:meth:`FaultSpec.from_env`) for the benchmark lanes.
+"""
+
+from .model import (FaultSpec, SurvivorMask, degraded_noise, fault_legal,
+                    mapping_survives, survivor_mask, survivors_for)
+from .trace import (FaultInjector, NodeFailure, NodeFailureTrace,
+                    NodeLossError, TransientFault)
+
+__all__ = [
+    "FaultSpec", "SurvivorMask", "survivor_mask", "survivors_for",
+    "fault_legal", "mapping_survives", "degraded_noise",
+    "FaultInjector", "NodeFailure", "NodeFailureTrace", "NodeLossError",
+    "TransientFault",
+]

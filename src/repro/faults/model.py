@@ -1,0 +1,208 @@
+"""Macro-level fault models: seeded survivor masks for degraded sweeps.
+
+The paper's AIMC/DIMC comparison assumes pristine silicon; a deployed
+fleet never is.  This module makes *degradation* a first-class axis of
+the fused (layer x design x mapping x dataflow) sweep without touching
+a single cost kernel: faults only ever *shrink the legal mapping set*.
+
+Three macro-scale fault mechanisms, all deterministic functions of
+``(seed, design name)``:
+
+* **stuck-at column groups** — each of a design's ``d1`` column groups
+  (the K-unroll quantum, ``cols // bw`` bitline bundles) independently
+  survives with probability ``1 - column_fail_rate``.  A mapping whose
+  ``K`` column unroll exceeds the surviving count is illegal on that
+  design; the work falls back to more temporal K tiles (or the design
+  loses outright).
+* **macro/chip dropout** — each of the ``n_macros`` dies survives with
+  probability ``1 - macro_fail_rate``; mappings whose macro-level
+  spatial unroll (``macro_unroll`` = layer-dim x duplication) exceeds
+  the survivor count are illegal.
+* **ADC offset drift** — a per-design static conversion offset in ADC
+  LSBs, Gaussian with sigma ``adc_drift_sigma``.  It does not affect
+  cost (an offset ADC burns the same energy) — it feeds the accuracy
+  axis through :func:`degraded_noise` / ``fidelity.noise.NoiseSpec``.
+
+At least one column group and one macro always survive (draws are
+clamped to >= 1), preserving the sweep engine's core invariant that the
+all-ones mapping is legal everywhere — masked lanes hold finite
+sentinels and a sentinel can never win an argmin.
+
+Determinism contract: draws are keyed by ``SeedSequence([seed,
+crc32(name)])`` per design, so a design's survivor row is independent
+of batch composition and ordering — the vectorized
+:func:`survivor_mask` over a ``MacroBatch`` and the scalar
+:func:`survivors_for` for one macro (the oracle hook in
+``dse.best_mapping_scalar``) produce identical values by construction.
+
+Everything here is plain numpy on host — no jax import — so the fused
+engine's jit graphs, lattice caches and compile counts are untouched;
+a survivor mask is AND-ed into ``NetworkGrid.legal`` per bucket and the
+existing sentinel machinery does the rest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import zlib
+
+import numpy as np
+
+__all__ = [
+    "FaultSpec", "SurvivorMask", "survivor_mask", "survivors_for",
+    "fault_legal", "mapping_survives", "degraded_noise",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded macro-fault intensities (all off by default).
+
+    ``column_fail_rate`` — probability that one K-column group (the
+    ``d1 = cols // bw`` unroll quantum) is stuck/dead.
+    ``macro_fail_rate`` — probability that one of ``n_macros`` dies is
+    dead (dropout of a whole macro/chip).
+    ``adc_drift_sigma`` — sigma of the per-design static ADC offset, in
+    ADC LSBs (accuracy axis only; no cost effect).
+    ``seed`` — root of every draw; the same (spec, design name) pair
+    always yields the same survivors.
+    """
+
+    column_fail_rate: float = 0.0
+    macro_fail_rate: float = 0.0
+    adc_drift_sigma: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        for f in ("column_fail_rate", "macro_fail_rate"):
+            v = getattr(self, f)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"FaultSpec.{f} must be in [0, 1): {v}")
+        if self.adc_drift_sigma < 0.0:
+            raise ValueError("adc_drift_sigma must be >= 0")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.column_fail_rate > 0.0 or self.macro_fail_rate > 0.0
+                or self.adc_drift_sigma > 0.0)
+
+    @staticmethod
+    def from_env() -> "FaultSpec":
+        """Build from ``REPRO_FAULT_RATE`` / ``REPRO_FAULT_SEED``.
+
+        ``REPRO_FAULT_RATE`` (float) sets *both* column and macro fail
+        rates — the single-knob degraded mode used by the benchmark
+        smoke lanes; ``REPRO_FAULT_SEED`` (int, default 0) pins the
+        draw.  Unset/zero rate -> an inert spec (``enabled`` False).
+        """
+        rate = float(os.environ.get("REPRO_FAULT_RATE", "0") or 0)
+        seed = int(os.environ.get("REPRO_FAULT_SEED", "0") or 0)
+        return FaultSpec(column_fail_rate=rate, macro_fail_rate=rate,
+                         seed=seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class SurvivorMask:
+    """Per-design survivor counts for one :class:`FaultSpec` draw.
+
+    ``cols[d]`` / ``macros[d]`` — surviving K-column groups and macro
+    count of design ``d`` (int64, clamped >= 1).  ``adc_offset_lsb[d]``
+    — drawn static ADC offset (float64, accuracy axis).  Rows are
+    aligned with ``names`` (the MacroBatch design order it was built
+    from).
+    """
+
+    names: tuple[str, ...]
+    cols: np.ndarray
+    macros: np.ndarray
+    adc_offset_lsb: np.ndarray
+    spec: FaultSpec
+
+    def survival(self, totals_cols: np.ndarray,
+                 totals_macros: np.ndarray) -> np.ndarray:
+        """Fraction of (column-group, macro) capacity that survived,
+        per design — the headline degradation number."""
+        return ((self.cols * self.macros).astype(np.float64)
+                / np.maximum(1, totals_cols * totals_macros))
+
+
+def _design_rng(seed: int, name: str) -> np.random.Generator:
+    """Per-design generator: stable under batch reordering/subsetting."""
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, zlib.crc32(name.encode())]))
+
+
+def _draw(rng: np.random.Generator, spec: FaultSpec,
+          d1: int, n_macros: int) -> tuple[int, int, float]:
+    """One design's survivor draw.  Order is part of the determinism
+    contract (cols, then macros, then drift) — scalar and batch paths
+    must consume the stream identically."""
+    cols = int(rng.binomial(int(d1), 1.0 - spec.column_fail_rate))
+    macros = int(rng.binomial(int(n_macros), 1.0 - spec.macro_fail_rate))
+    drift = float(spec.adc_drift_sigma * rng.standard_normal()) \
+        if spec.adc_drift_sigma > 0.0 else 0.0
+    return max(1, cols), max(1, macros), drift
+
+
+def survivor_mask(spec: FaultSpec, designs) -> SurvivorMask:
+    """Draw the survivor mask for every design in a ``MacroBatch``."""
+    names = tuple(designs.names)
+    cols = np.empty(len(names), np.int64)
+    macros = np.empty(len(names), np.int64)
+    drift = np.zeros(len(names), np.float64)
+    d1 = np.asarray(designs.d1)
+    n_mac = np.asarray(designs.n_macros)
+    for i, name in enumerate(names):
+        cols[i], macros[i], drift[i] = _draw(
+            _design_rng(spec.seed, name), spec, int(d1[i]), int(n_mac[i]))
+    return SurvivorMask(names=names, cols=cols, macros=macros,
+                        adc_offset_lsb=drift, spec=spec)
+
+
+def survivors_for(spec: FaultSpec, macro) -> tuple[int, int, float]:
+    """Scalar counterpart of :func:`survivor_mask` for one ``IMCMacro``
+    — the hook the scalar mapping oracle uses; identical draw to the
+    batch path by the per-name rng contract."""
+    return _draw(_design_rng(spec.seed, macro.name), spec,
+                 int(macro.d1), int(macro.n_macros))
+
+
+def fault_legal(mask: SurvivorMask, cand) -> np.ndarray:
+    """(D, C) bool: lane ``c`` still mappable on design ``d``.
+
+    A lane survives iff its K column unroll fits the surviving column
+    groups AND its macro-level spatial unroll (layer-dim x duplication)
+    fits the surviving macro count.  AND-ed into ``NetworkGrid.legal``
+    this reuses the existing finite-sentinel machinery verbatim — dead
+    lanes price to the sentinel and can never win.
+    """
+    k_cols = np.asarray(cand.k_cols, np.int64)
+    k_mac = np.asarray(cand.k_macros, np.int64) \
+        * np.asarray(cand.dup_macros, np.int64)
+    return ((k_cols[None, :] <= mask.cols[:, None])
+            & (k_mac[None, :] <= mask.macros[:, None]))
+
+
+def mapping_survives(sm, cols: int, macros: int) -> bool:
+    """Scalar predicate matching :func:`fault_legal` for one
+    ``SpatialMapping`` — used by ``dse.best_mapping_scalar``."""
+    return sm.col_unroll() <= cols and sm.macro_unroll() <= macros
+
+
+def degraded_noise(mask: SurvivorMask, d: int, base=None):
+    """Lower design ``d``'s faults onto the accuracy axis: a
+    ``fidelity.noise.NoiseSpec`` carrying the drawn ADC offset and the
+    stuck-column fraction implied by the survivor count.
+
+    ``base`` (optional NoiseSpec) supplies the stochastic read/weight
+    noise to compose with; fault fields are overwritten, never summed.
+    Imported lazily so this module stays jax-free for the cost path.
+    """
+    from repro.fidelity.noise import NoiseSpec
+    base = base if base is not None else NoiseSpec()
+    spec = mask.spec
+    return dataclasses.replace(
+        base,
+        adc_offset_lsb=float(mask.adc_offset_lsb[d]),
+        stuck_col_frac=float(spec.column_fail_rate))

@@ -1,0 +1,146 @@
+"""Fleet-level fault models: node-failure traces for the serve loop.
+
+Where :mod:`repro.faults.model` degrades the *silicon* a sweep prices,
+this module degrades the *fleet* a serving loop runs on: a
+deterministic, seeded trace of per-step node failures
+(:class:`NodeFailureTrace`) and a replayer (:class:`FaultInjector`)
+that raises them into the dispatch path so the resilient serve loop
+(``launch.serve.ServeLoop.generate_resilient``) can be driven —
+retry/backoff for transients, elastic resize-and-restore for node
+losses — end to end in tests and the chaos harness, with no real
+hardware dying.
+
+Two failure kinds:
+
+* ``"transient"`` — one dispatch fails (link flap, preemption race);
+  the same step succeeds on retry.  Raised once as
+  :class:`TransientFault`.
+* ``"node_loss"`` — a node leaves and *stays* down: every dispatch
+  raises :class:`NodeLossError` until the loop recovers (elastic
+  replan + restore) and calls :meth:`FaultInjector.restore`.
+
+Injection is counted through ``repro.obs`` (``faults.injected.*``,
+``faults.restored``) so availability/MTTR roll up with the rest of the
+telemetry.  With no injector installed the serve loop's fast path is
+untouched — the inertness contract mirrors the tracing layer's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import obs
+
+__all__ = [
+    "TransientFault", "NodeLossError", "NodeFailure", "NodeFailureTrace",
+    "FaultInjector",
+]
+
+_C_TRANSIENT = obs.counter("faults.injected.transient")
+_C_NODE_LOSS = obs.counter("faults.injected.node_loss")
+_C_RESTORED = obs.counter("faults.restored")
+
+
+class TransientFault(RuntimeError):
+    """One dispatch failed; retrying the same step may succeed."""
+
+
+class NodeLossError(RuntimeError):
+    """A node is down and stays down until explicitly restored."""
+
+    def __init__(self, node: int):
+        super().__init__(f"node {node} lost")
+        self.node = node
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailure:
+    step: int
+    node: int
+    kind: str  # "transient" | "node_loss"
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailureTrace:
+    """A seeded schedule of fleet failures over a step horizon."""
+
+    n_nodes: int
+    n_steps: int
+    events: tuple[NodeFailure, ...]
+
+    @staticmethod
+    def generate(n_nodes: int, n_steps: int, *, rate: float,
+                 node_loss_frac: float = 0.25,
+                 seed: int = 0) -> "NodeFailureTrace":
+        """Draw a trace: each step independently fails with probability
+        ``rate``; a failing step hits a uniform node and is a permanent
+        node loss with probability ``node_loss_frac`` (else transient).
+        Deterministic in (all args, seed).
+        """
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1]: {rate}")
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, n_nodes, n_steps]))
+        events = []
+        for step in range(n_steps):
+            if rng.random() < rate:
+                node = int(rng.integers(n_nodes))
+                kind = ("node_loss" if rng.random() < node_loss_frac
+                        else "transient")
+                events.append(NodeFailure(step=step, node=node, kind=kind))
+        return NodeFailureTrace(n_nodes=n_nodes, n_steps=n_steps,
+                                events=tuple(events))
+
+    def events_at(self, step: int) -> tuple[NodeFailure, ...]:
+        return tuple(e for e in self.events if e.step == step)
+
+
+class FaultInjector:
+    """Replay a :class:`NodeFailureTrace` into a dispatch loop.
+
+    The loop calls :meth:`check` with its step index before each
+    dispatch; the injector raises the step's scheduled faults.  A
+    transient fires exactly once (the retry passes); a node loss is
+    sticky — every subsequent ``check`` raises until the recovery path
+    calls :meth:`restore`.  Steps may be re-checked (retries) and must
+    be non-decreasing.
+    """
+
+    def __init__(self, trace: NodeFailureTrace):
+        self.trace = trace
+        self.down: set[int] = set()
+        self._pending: list[NodeFailure] = []
+        self._ingested = -1
+
+    def check(self, step: int) -> None:
+        if step > self._ingested:
+            for ev in self.trace.events:
+                if self._ingested < ev.step <= step:
+                    self._pending.append(ev)
+            self._ingested = step
+        while self._pending:
+            ev = self._pending.pop(0)
+            if ev.kind == "node_loss":
+                self.down.add(ev.node)
+                _C_NODE_LOSS.inc()
+            else:
+                _C_TRANSIENT.inc()
+                raise TransientFault(
+                    f"step {ev.step}: transient fault on node {ev.node}")
+        if self.down:
+            raise NodeLossError(min(self.down))
+
+    def restore(self, node: int | None = None) -> None:
+        """Bring ``node`` (default: all down nodes) back into service."""
+        if node is None:
+            _C_RESTORED.inc(len(self.down))
+            self.down.clear()
+        elif node in self.down:
+            self.down.discard(node)
+            _C_RESTORED.inc()
+
+    @property
+    def n_alive(self) -> int:
+        return self.trace.n_nodes - len(self.down)

@@ -61,14 +61,37 @@ class NoiseSpec:
     Drawn once per cell per evaluation seed — the same physical device
     is reused by every input vector, so the draw is shared across the
     batch, phases and row tiles but fresh across seeds.
+
+    Two *fault* fields lower the degradation axis (``repro.faults``)
+    onto accuracy — see ``faults.degraded_noise``:
+
+    ``adc_offset_lsb`` — static additive offset on every ADC
+    conversion, in LSBs (drifted converter reference).  Deterministic:
+    needs no PRNG key; zero is bitwise the offset-free path.
+
+    ``stuck_col_frac`` — probability that one physical bitline (one
+    weight-bit plane of one output column) is stuck at zero.  The
+    stuck-column pattern is one draw per physical array, pinned by
+    ``cell_key`` like the conductance variation (the same dead silicon
+    serves every input), fresh across seeds otherwise.
     """
 
     read_noise_lsb: float = 0.0
     weight_var: float = 0.0
+    adc_offset_lsb: float = 0.0
+    stuck_col_frac: float = 0.0
 
     @property
     def enabled(self) -> bool:
-        return self.read_noise_lsb > 0.0 or self.weight_var > 0.0
+        return (self.read_noise_lsb > 0.0 or self.weight_var > 0.0
+                or self.adc_offset_lsb != 0.0 or self.stuck_col_frac > 0.0)
+
+    @property
+    def stochastic(self) -> bool:
+        """True when any field needs a PRNG key (the static ADC offset
+        does not — an offset-only spec runs keyless)."""
+        return (self.read_noise_lsb > 0.0 or self.weight_var > 0.0
+                or self.stuck_col_frac > 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,7 +195,7 @@ def aimc_mvm_functional(x: jax.Array, w: jax.Array, *, bi: int = 4,
     """
     if dac_res is None:
         dac_res = bi
-    if noise.enabled and key is None:
+    if noise.stochastic and key is None:
         raise ValueError("aimc_mvm_functional: noise enabled but no PRNG key")
     m, k = x.shape
     k2, n = w.shape
@@ -188,19 +211,31 @@ def aimc_mvm_functional(x: jax.Array, w: jax.Array, *, bi: int = 4,
 
     # conductance variation: one draw per stored bit cell, shared by all
     # conversions that read the cell (same physical device)
-    if noise.weight_var > 0.0:
+    if noise.weight_var > 0.0 or noise.stuck_col_frac > 0.0:
         if cell_key is None:
             cell_key, key = jax.random.split(key)
+    if noise.weight_var > 0.0:
         cell_eps = 1.0 + noise.weight_var * jax.random.normal(
             cell_key, (bw, tiles * rows, n), jnp.float32)
     else:
         cell_eps = None
+    # stuck-at-zero bitlines: one (plane, column) pattern per physical
+    # array, folded off the cell stream so the weight_var draw above is
+    # untouched whether or not columns are also stuck
+    if noise.stuck_col_frac > 0.0:
+        col_ok = jax.random.bernoulli(
+            jax.random.fold_in(cell_key, 1),
+            p=1.0 - noise.stuck_col_frac, shape=(bw, n)).astype(jnp.float32)
+    else:
+        col_ok = None
 
     acc = jnp.zeros((m, tiles, n), jnp.float32)
     for j in range(bw):                            # one bitline per weight bit
         wp = ((uw >> j) & 1).astype(jnp.float32)
         if cell_eps is not None:
             wp = wp * cell_eps[j]
+        if col_ok is not None:
+            wp = wp * col_ok[j]
         wpt = wp.reshape(tiles, rows, n)
         sj = -(1 << j) if j == bw - 1 else (1 << j)
         for shift, bits in _dac_phases(bi, dac_res):
@@ -211,7 +246,13 @@ def aimc_mvm_functional(x: jax.Array, w: jax.Array, *, bi: int = 4,
                 key, sub = jax.random.split(key)
                 psum = psum + noise.read_noise_lsb * lsb * jax.random.normal(
                     sub, psum.shape, jnp.float32)
-            code = jnp.clip(jnp.round(psum / lsb), 0.0, n_codes)   # ADC
+            pre = psum / lsb
+            if noise.adc_offset_lsb != 0.0:
+                # drifted converter reference: a static code offset on
+                # every conversion (kept off the hot path when zero so
+                # the offset-free grid stays bitwise)
+                pre = pre + noise.adc_offset_lsb
+            code = jnp.clip(jnp.round(pre), 0.0, n_codes)          # ADC
             acc = acc + (sj * float(1 << shift)) * (code * lsb)
     return jnp.sum(acc, axis=1)
 

@@ -5,7 +5,11 @@ Atomic writes (tmp + fsync + rename) are the house rule for every
 artifact (an interrupted benchmark must never leave a truncated file);
 :func:`write_json_atomic` / :func:`write_text_atomic` are the canonical
 implementations here, and ``benchmarks.common.write_json_atomic``
-re-exports the JSON one.
+re-exports the JSON one.  Transient ``OSError`` (NFS/CI filesystem
+flake) gets a bounded retry with exponential backoff — each attempt is
+a fresh tmp file through the full tmp+fsync+``os.replace`` contract,
+and exhaustion re-raises the last error; retries are counted under
+``obs.write_retries``.
 
 Formats
 -------
@@ -36,7 +40,7 @@ import os
 import tempfile
 import time
 
-from .registry import snapshot
+from .registry import counter, snapshot
 from .tracing import iter_spans, span_summary, trace_enabled
 
 __all__ = [
@@ -44,10 +48,17 @@ __all__ = [
     "export_jsonl", "export_chrome", "export_all", "telemetry_block",
 ]
 
+_C_WRITE_RETRIES = counter("obs.write_retries")
 
-def write_text_atomic(path: str, text: str) -> None:
-    """Write ``text`` via tmp-file + fsync + rename, so an interrupted
-    writer can never leave a truncated artifact behind."""
+#: bounded-retry policy for transient filesystem flake: attempts =
+#: retries + 1, sleeping backoff_s * 2^attempt between them (~0.75 s
+#: worst-case total at the defaults — small next to any benchmark run).
+_WRITE_RETRIES = 3
+_WRITE_BACKOFF_S = 0.05
+
+
+def _write_text_once(path: str, text: str) -> None:
+    """One tmp+fsync+``os.replace`` attempt; tmp never outlives failure."""
     d = os.path.dirname(os.path.abspath(path))
     fd, tmp = tempfile.mkstemp(dir=d, prefix=".obs-", suffix=".tmp")
     try:
@@ -62,6 +73,30 @@ def write_text_atomic(path: str, text: str) -> None:
         except OSError:
             pass
         raise
+
+
+def write_text_atomic(path: str, text: str, *,
+                      retries: int = _WRITE_RETRIES,
+                      backoff_s: float = _WRITE_BACKOFF_S,
+                      sleep=time.sleep) -> None:
+    """Write ``text`` via tmp-file + fsync + rename, so an interrupted
+    writer can never leave a truncated artifact behind.
+
+    Transient ``OSError`` (NFS silly-rename races, CI runner flake) is
+    retried up to ``retries`` times with exponential backoff; every
+    attempt runs the full atomic contract on a fresh tmp file.  Other
+    exceptions (and the final ``OSError``) propagate unchanged.
+    ``sleep`` is injectable for tests.
+    """
+    for attempt in range(retries + 1):
+        try:
+            _write_text_once(path, text)
+            return
+        except OSError:
+            if attempt >= retries:
+                raise
+            _C_WRITE_RETRIES.inc()
+            sleep(backoff_s * (2 ** attempt))
 
 
 def write_json_atomic(path: str, obj) -> None:

@@ -8,6 +8,12 @@ and restores the last checkpoint with ``Checkpointer.restore(target=...)``
 which device_puts every tensor with the *new* sharding.  The batch
 schedule is preserved by keeping global batch constant and re-deriving
 per-host shards (``TokenDataset`` splits by process index).
+
+Resizes are first-class telemetry: every :func:`plan_resize` bumps
+``runtime.elastic.resizes`` and every :func:`resume_on_new_mesh` runs
+under a ``runtime.elastic.resume`` span, so the fault chain (injected
+loss -> replan -> restore) is visible in the same trace as the serve
+loop's availability/MTTR numbers.
 """
 
 from __future__ import annotations
@@ -18,7 +24,10 @@ import math
 import jax
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.models.common import Dist
+
+_C_RESIZES = obs.counter("runtime.elastic.resizes")
 
 
 def best_mesh_shape(n_devices: int, model_axis: int = 16,
@@ -63,6 +72,7 @@ def plan_resize(old_devices: int, new_devices: int, global_batch: int,
                 n_hosts: int = 1, model_axis: int = 16) -> ElasticPlan:
     shape = best_mesh_shape(new_devices, model_axis)
     assert global_batch % n_hosts == 0
+    _C_RESIZES.inc()
     return ElasticPlan(old_devices=old_devices, new_devices=new_devices,
                        mesh_shape=shape, global_batch=global_batch,
                        per_host_batch=global_batch // n_hosts)
@@ -81,9 +91,14 @@ def resume_on_new_mesh(checkpointer, lm_factory, n_devices: int,
     """Full elastic-resume flow: new mesh -> new Dist -> new target
     structs -> restore checkpoint resharded.  ``lm_factory(dist)`` must
     return an object with ``param_structs()``."""
-    mesh = make_mesh_from_devices(jax.devices()[:n_devices],
-                                  model_axis=model_axis)
-    dist = Dist(mesh=mesh)
-    lm = lm_factory(dist)
-    step, params = checkpointer.restore(target=lm.param_structs())
+    with obs.span("runtime.elastic.resume", devices=n_devices,
+                  model_axis=model_axis) as sp:
+        mesh = make_mesh_from_devices(jax.devices()[:n_devices],
+                                      model_axis=model_axis)
+        dist = Dist(mesh=mesh)
+        lm = lm_factory(dist)
+        sp.lap("mesh")
+        step, params = checkpointer.restore(target=lm.param_structs())
+        sp.lap("restore")
+        sp.set(mesh_shape=str(tuple(mesh.devices.shape)), step=step)
     return mesh, lm, step, params

@@ -1,0 +1,112 @@
+"""Fault fields on the accuracy axis: the ADC offset and stuck-column
+knobs of :class:`repro.fidelity.noise.NoiseSpec` — zero is bitwise the
+pre-fault path, draws are deterministic per cell_key, and the digital
+(DIMC) path never degrades."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import designs
+from repro.faults import FaultSpec, degraded_noise, survivor_mask
+from repro.fidelity.noise import (NoiseSpec, aimc_mvm_functional,
+                                  dimc_mvm_exact)
+
+
+def _xw(m=3, k=9, n=5, bi=4, bw=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2 ** bi, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-2 ** (bw - 1), 2 ** (bw - 1), (k, n)),
+                    jnp.int32)
+    return x, w
+
+
+def test_zero_fault_fields_bitwise_inert():
+    x, w = _xw()
+    base = np.asarray(aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=6,
+                                          rows=4))
+    z = np.asarray(aimc_mvm_functional(
+        x, w, bi=4, bw=4, adc_res=6, rows=4,
+        noise=NoiseSpec(adc_offset_lsb=0.0, stuck_col_frac=0.0)))
+    np.testing.assert_array_equal(base, z)
+
+
+def test_offset_needs_no_key_and_shifts_codes():
+    x, w = _xw()
+    spec = NoiseSpec(adc_offset_lsb=1.5)
+    assert spec.enabled and not spec.stochastic
+    off = np.asarray(aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=6,
+                                         rows=4, noise=spec))
+    base = np.asarray(aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=6,
+                                          rows=4))
+    assert not np.array_equal(base, off)
+
+
+def test_stuck_columns_deterministic_and_requires_key():
+    x, w = _xw()
+    spec = NoiseSpec(stuck_col_frac=0.5)
+    assert spec.stochastic
+    with pytest.raises(ValueError):
+        aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=6, rows=4,
+                            noise=spec)
+    k = jax.random.PRNGKey(3)
+    a = np.asarray(aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=6,
+                                       rows=4, noise=spec, key=k))
+    b = np.asarray(aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=6,
+                                       rows=4, noise=spec, key=k))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(aimc_mvm_functional(x, w, bi=4, bw=4, adc_res=6,
+                                       rows=4, noise=spec,
+                                       key=jax.random.PRNGKey(4)))
+    assert not np.array_equal(a, c)
+
+
+def test_stuck_columns_leave_weight_var_draw_untouched():
+    # adding stuck columns on top of conductance variation must not
+    # move the variation pattern (both are pinned by the same cell_key;
+    # the column mask folds off it instead of consuming the stream)
+    x, w = _xw()
+    k = jax.random.PRNGKey(7)
+    cell = jax.random.PRNGKey(9)
+    wv = np.asarray(aimc_mvm_functional(
+        x, w, bi=4, bw=4, adc_res=6, rows=4,
+        noise=NoiseSpec(weight_var=0.05), key=k, cell_key=cell))
+    both = np.asarray(aimc_mvm_functional(
+        x, w, bi=4, bw=4, adc_res=6, rows=4,
+        noise=NoiseSpec(weight_var=0.05, stuck_col_frac=1e-9),
+        key=k, cell_key=cell))
+    # frac ~ 0: no column actually dies, so the only difference could
+    # have come from a disturbed weight_var draw — there must be none
+    np.testing.assert_array_equal(wv, both)
+
+
+def test_stuck_all_columns_kills_the_output():
+    x, w = _xw()
+    dead = np.asarray(aimc_mvm_functional(
+        x, w, bi=4, bw=4, adc_res=6, rows=4,
+        noise=NoiseSpec(stuck_col_frac=1.0 - 1e-12),
+        key=jax.random.PRNGKey(0)))
+    np.testing.assert_array_equal(dead, np.zeros_like(dead))
+
+
+def test_dimc_path_ignores_faults():
+    x, w = _xw()
+    a = np.asarray(dimc_mvm_exact(x, w, bi=4, bw=4))
+    b = np.asarray(dimc_mvm_exact(x, w, bi=4, bw=4,
+                                  noise=NoiseSpec(stuck_col_frac=0.9,
+                                                  adc_offset_lsb=3.0)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_degraded_noise_lowers_mask_onto_spec():
+    grid = designs.macro_grid(rows=(64,), cols=(256,), adc_bits=(4,),
+                              dac_bits=(2,), m_mux=(1,))
+    spec = FaultSpec(column_fail_rate=0.2, adc_drift_sigma=0.7, seed=5)
+    mask = survivor_mask(spec, grid)
+    base = NoiseSpec(read_noise_lsb=0.1)
+    ns = degraded_noise(mask, 0, base=base)
+    assert ns.read_noise_lsb == 0.1            # stochastic part kept
+    assert ns.stuck_col_frac == 0.2
+    assert ns.adc_offset_lsb == mask.adc_offset_lsb[0]
+    assert ns.stochastic and ns.enabled

@@ -1,0 +1,110 @@
+"""Determinism and invariants of the macro-fault survivor draw:
+per-design seeding (batch order/composition can't move a design's
+draw), clamp-to->=1 (the all-ones mapping must stay legal everywhere),
+and scalar/batch agreement (``survivors_for`` IS ``survivor_mask``'s
+row for that design)."""
+
+import numpy as np
+import pytest
+
+from repro.core import designs
+from repro.faults import (FaultSpec, fault_legal, mapping_survives,
+                          survivor_mask, survivors_for)
+
+
+def _grid(**kw):
+    base = dict(rows=(64, 256), cols=(256,), adc_bits=(4, 6),
+                dac_bits=(2,), m_mux=(1, 16), n_macros=(1, 4))
+    base.update(kw)
+    return designs.macro_grid(**base)
+
+
+def test_disabled_spec_and_env_default():
+    assert not FaultSpec().enabled
+    assert not FaultSpec.from_env().enabled      # unset env -> inert
+
+
+def test_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_RATE", "0.05")
+    monkeypatch.setenv("REPRO_FAULT_SEED", "11")
+    spec = FaultSpec.from_env()
+    assert spec.enabled
+    assert spec.column_fail_rate == spec.macro_fail_rate == 0.05
+    assert spec.seed == 11
+
+
+def test_invalid_rates_raise():
+    with pytest.raises(ValueError):
+        FaultSpec(column_fail_rate=1.0)
+    with pytest.raises(ValueError):
+        FaultSpec(macro_fail_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultSpec(adc_drift_sigma=-1.0)
+
+
+def test_draw_deterministic_and_clamped():
+    grid = _grid()
+    spec = FaultSpec(column_fail_rate=0.9, macro_fail_rate=0.9, seed=3)
+    a = survivor_mask(spec, grid)
+    b = survivor_mask(spec, grid)
+    np.testing.assert_array_equal(a.cols, b.cols)
+    np.testing.assert_array_equal(a.macros, b.macros)
+    # even at 90% failure the clamp keeps one column group + one macro
+    assert (a.cols >= 1).all() and (a.macros >= 1).all()
+    assert (a.cols <= np.asarray(grid.d1)).all()
+    assert (a.macros <= np.asarray(grid.n_macros)).all()
+
+
+def test_seed_moves_the_draw():
+    grid = _grid()
+    a = survivor_mask(FaultSpec(column_fail_rate=0.5, seed=0), grid)
+    b = survivor_mask(FaultSpec(column_fail_rate=0.5, seed=1), grid)
+    assert not (np.array_equal(a.cols, b.cols)
+                and np.array_equal(a.macros, b.macros))
+
+
+def test_scalar_matches_batch_row_regardless_of_order():
+    grid = _grid()
+    spec = FaultSpec(column_fail_rate=0.4, macro_fail_rate=0.4,
+                     adc_drift_sigma=0.5, seed=9)
+    mask = survivor_mask(spec, grid)
+    for d in range(len(grid)):
+        cols, macros, drift = survivors_for(spec, grid.macro_at(d))
+        assert cols == mask.cols[d]
+        assert macros == mask.macros[d]
+        assert drift == mask.adc_offset_lsb[d]
+    # a shuffled / subset batch yields the same per-name rows
+    idx = list(reversed(range(0, len(grid), 2)))
+    sub = designs.MacroBatch.from_macros([grid.macro_at(i) for i in idx])
+    sub_mask = survivor_mask(spec, sub)
+    for row, d in enumerate(idx):
+        assert sub_mask.cols[row] == mask.cols[d]
+        assert sub_mask.macros[row] == mask.macros[d]
+
+
+def test_fault_legal_matches_scalar_predicate():
+    from repro.core.mapping import candidate_grid
+    from repro.core import workloads
+    grid = _grid()
+    layer = workloads.dense("l", 1, 48, 16)
+    g = candidate_grid(layer, grid)
+    spec = FaultSpec(column_fail_rate=0.5, macro_fail_rate=0.5, seed=2)
+    mask = survivor_mask(spec, grid)
+    legal = fault_legal(mask, g.cand)
+    assert legal.shape == (len(grid), len(g))
+    for d in range(len(grid)):
+        for c in range(len(g)):
+            sm = g.cand.mapping_at(c)
+            assert legal[d, c] == mapping_survives(
+                sm, int(mask.cols[d]), int(mask.macros[d]))
+
+
+def test_drift_only_spec_is_cost_inert_but_enabled():
+    spec = FaultSpec(adc_drift_sigma=1.0, seed=0)
+    assert spec.enabled
+    grid = _grid()
+    mask = survivor_mask(spec, grid)
+    # no column/macro loss: every design keeps full capacity
+    np.testing.assert_array_equal(mask.cols, np.asarray(grid.d1))
+    np.testing.assert_array_equal(mask.macros, np.asarray(grid.n_macros))
+    assert (mask.adc_offset_lsb != 0.0).any()

@@ -1,0 +1,82 @@
+"""Fleet fault traces and the injector's replay semantics: seeded
+determinism, transient-fires-once, sticky node loss until restore, and
+the ``faults.*`` counters."""
+
+import pytest
+
+from repro import obs
+from repro.faults import (FaultInjector, NodeFailure, NodeFailureTrace,
+                          NodeLossError, TransientFault)
+
+
+def test_trace_generation_deterministic():
+    a = NodeFailureTrace.generate(8, 100, rate=0.2, seed=4)
+    b = NodeFailureTrace.generate(8, 100, rate=0.2, seed=4)
+    assert a == b
+    c = NodeFailureTrace.generate(8, 100, rate=0.2, seed=5)
+    assert a != c
+    assert all(0 <= e.node < 8 and 0 <= e.step < 100 for e in a.events)
+    assert NodeFailureTrace.generate(8, 200, rate=0.0, seed=0).events == ()
+    with pytest.raises(ValueError):
+        NodeFailureTrace.generate(8, 10, rate=1.5)
+
+
+def test_transient_fires_once_then_clears():
+    trace = NodeFailureTrace(n_nodes=4, n_steps=10, events=(
+        NodeFailure(step=3, node=1, kind="transient"),))
+    inj = FaultInjector(trace)
+    inj.check(0)                      # nothing scheduled yet
+    inj.check(2)
+    with pytest.raises(TransientFault):
+        inj.check(3)
+    inj.check(3)                      # the retry passes
+    inj.check(9)
+
+
+def test_node_loss_sticky_until_restore():
+    trace = NodeFailureTrace(n_nodes=4, n_steps=10, events=(
+        NodeFailure(step=2, node=3, kind="node_loss"),))
+    inj = FaultInjector(trace)
+    inj.check(1)
+    for _ in range(3):                # sticky across re-checks
+        with pytest.raises(NodeLossError) as ei:
+            inj.check(2)
+        assert ei.value.node == 3
+    assert inj.down == {3} and inj.n_alive == 3
+    inj.restore(3)
+    inj.check(2)
+    inj.check(9)
+    assert inj.n_alive == 4
+
+
+def test_skipped_steps_still_deliver_their_faults():
+    trace = NodeFailureTrace(n_nodes=2, n_steps=10, events=(
+        NodeFailure(step=1, node=0, kind="transient"),
+        NodeFailure(step=2, node=1, kind="node_loss"),))
+    inj = FaultInjector(trace)
+    # jumping straight to step 5 ingests both pending events: the
+    # transient raises first, then the sticky loss
+    with pytest.raises(TransientFault):
+        inj.check(5)
+    with pytest.raises(NodeLossError):
+        inj.check(5)
+    inj.restore()
+    inj.check(5)
+
+
+def test_counters_roll_up():
+    obs.reset("faults.")
+    trace = NodeFailureTrace(n_nodes=4, n_steps=10, events=(
+        NodeFailure(step=0, node=0, kind="transient"),
+        NodeFailure(step=1, node=1, kind="node_loss"),))
+    inj = FaultInjector(trace)
+    with pytest.raises(TransientFault):
+        inj.check(0)
+    inj.check(0)
+    with pytest.raises(NodeLossError):
+        inj.check(1)
+    inj.restore()
+    snap = obs.snapshot("faults.")
+    assert snap["faults.injected.transient"] == 1
+    assert snap["faults.injected.node_loss"] == 1
+    assert snap["faults.restored"] == 1

@@ -1,0 +1,85 @@
+"""Standalone admission-control tests for ``ServeLoop.admit`` /
+``release`` — the slot scheduler the module docstring always promised,
+exercised without a model, a mesh, or fault injection."""
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.launch import serve
+
+
+def _loop(batch=2, max_seq=64):
+    loop = serve.ServeLoop.__new__(serve.ServeLoop)
+    loop.batch = batch
+    loop.max_seq = max_seq
+    return loop
+
+
+def test_admit_until_full_then_queue():
+    loop = _loop(batch=2)
+    assert loop.admit(serve.Request("a", 8)) == "admit"
+    assert loop.admit(serve.Request("b", 8)) == "admit"
+    assert loop.admit(serve.Request("c", 8)) == "queue"
+    assert set(loop.slots) == {"a", "b"}
+    assert [q.id for q in loop.backlog] == ["c"]
+
+
+def test_release_promotes_fifo():
+    loop = _loop(batch=1)
+    loop.admit(serve.Request("a", 8))
+    loop.admit(serve.Request("b", 8))
+    loop.admit(serve.Request("c", 8))
+    promoted = loop.release("a")
+    assert promoted.id == "b"
+    assert set(loop.slots) == {"b"}
+    assert [q.id for q in loop.backlog] == ["c"]
+    assert loop.release("b").id == "c"
+    assert loop.release("c") is None
+    assert not loop.slots and not loop.backlog
+
+
+def test_deadline_rejection_needs_evidence():
+    loop = _loop(batch=1)
+    loop.admit(serve.Request("a", 8))
+    # est_request_s == 0 (unmeasured): optimistic, never rejects
+    assert loop.admit(serve.Request("b", 8, deadline_s=0.01)) == "queue"
+    loop.est_request_s = 1.0
+    # one wave of one slot ahead of "c": est wait 2.0 s > 0.5 s deadline
+    assert loop.admit(serve.Request("c", 8, deadline_s=0.5)) == "reject"
+    # a patient request still queues
+    assert loop.admit(serve.Request("d", 8, deadline_s=10.0)) == "queue"
+    assert loop.admit(serve.Request("e", 8)) == "queue"
+
+
+def test_oversized_request_rejected_up_front():
+    loop = _loop(batch=4, max_seq=32)
+    assert loop.admit(serve.Request("big", 30, n_gen=8)) == "reject"
+    assert not loop.slots
+
+
+def test_duplicate_id_raises():
+    loop = _loop(batch=2)
+    loop.admit(serve.Request("a", 8))
+    with pytest.raises(ValueError):
+        loop.admit(serve.Request("a", 8))
+    loop.admit(serve.Request("b", 8))
+    loop.admit(serve.Request("q", 8))          # queued
+    with pytest.raises(ValueError):
+        loop.admit(serve.Request("q", 8))
+    with pytest.raises(KeyError):
+        loop.release("nope")
+
+
+def test_admission_counters():
+    obs.reset("serve.")
+    loop = _loop(batch=1)
+    loop.est_request_s = 5.0
+    loop.admit(serve.Request("a", 8))
+    loop.admit(serve.Request("b", 8))
+    loop.admit(serve.Request("c", 8, deadline_s=0.1))
+    snap = obs.snapshot("serve.")
+    assert snap["serve.admitted"] == 1
+    assert snap["serve.queued"] == 1
+    assert snap["serve.rejected"] == 1
+    assert snap["serve.slots_free"] == 0

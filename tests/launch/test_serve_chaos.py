@@ -1,0 +1,153 @@
+"""Serve-loop chaos: under an injected node-loss trace the resilient
+loop retries with backoff, escalates to the elastic recovery path, and
+completes — availability, MTTR and goodput land in ``repro.obs``.  With
+no injector (or an empty trace) the wrapped loop's tokens are bitwise
+``generate``'s: fault handling is inert by contract.
+
+Model-free: the loop is faked the same way as
+``tests/launch/test_serve_clock.py`` (``ServeLoop.__new__`` + stubbed
+prefill/decode), so the test drives the *dispatch wrapper*, not XLA.
+"""
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.faults import (FaultInjector, NodeFailure, NodeFailureTrace,
+                          TransientFault)
+from repro.launch import serve
+from repro.runtime.elastic import plan_resize
+
+
+def _loop(batch=2):
+    loop = serve.ServeLoop.__new__(serve.ServeLoop)
+    loop.batch = batch
+    logits = np.zeros((batch, 1, 4), dtype=np.float32)
+    loop._prefill = lambda params, b: (logits, {"cache": 0}, 0)
+    loop._decode = lambda params, cache, tok, pos: (logits, cache)
+    return loop
+
+
+@pytest.fixture
+def fast_sample(monkeypatch):
+    batch = 2
+
+    def fake_sample(lg, key, temperature=0.8, top_k=40):
+        # key-dependent so PRNG-stream divergence would be visible
+        return (np.asarray(key)[..., -1] % 97
+                * np.ones(batch)).astype(np.int32)
+
+    monkeypatch.setattr(serve, "sample", fake_sample)
+    return fake_sample
+
+
+def test_no_injector_is_generate_plus_availability(fast_sample):
+    loop = _loop()
+    prompts = np.zeros((2, 4), dtype=np.int32)
+    base_tok, base_stats = loop.generate(None, prompts, 5)
+    tok, stats = loop.generate_resilient(None, prompts, 5)
+    np.testing.assert_array_equal(base_tok, tok)
+    assert stats["availability"] == 1.0
+    assert stats["faults"] == stats["retries"] == stats["recoveries"] == 0
+    assert stats["goodput_tok_per_s"] > 0
+
+
+def test_empty_trace_same_tokens_through_wrapped_path(fast_sample):
+    loop = _loop()
+    prompts = np.zeros((2, 4), dtype=np.int32)
+    base_tok, _ = loop.generate(None, prompts, 6)
+    inj = FaultInjector(NodeFailureTrace(n_nodes=4, n_steps=16, events=()))
+    tok, stats = loop.generate_resilient(None, prompts, 6, injector=inj)
+    np.testing.assert_array_equal(base_tok, tok)
+    assert stats["availability"] == 1.0 and stats["faults"] == 0
+
+
+def test_transient_faults_retry_with_backoff(fast_sample):
+    loop = _loop()
+    prompts = np.zeros((2, 4), dtype=np.int32)
+    trace = NodeFailureTrace(n_nodes=4, n_steps=16, events=(
+        NodeFailure(step=0, node=0, kind="transient"),     # prefill
+        NodeFailure(step=3, node=2, kind="transient"),))   # decode i=2
+    sleeps = []
+    base_tok, _ = loop.generate(None, prompts, 6)
+    tok, stats = loop.generate_resilient(
+        None, prompts, 6, injector=FaultInjector(trace),
+        backoff_s=0.004, sleep=sleeps.append)
+    np.testing.assert_array_equal(base_tok, tok)    # retries, same tokens
+    assert stats["faults"] == 2 and stats["retries"] == 2
+    assert stats["recoveries"] == 0
+    assert sleeps == [0.004, 0.004]                 # fresh backoff per step
+    assert stats["mttr_s"] > 0.0
+    assert 0.0 <= stats["availability"] <= 1.0
+
+
+def test_retry_exhaustion_raises(fast_sample):
+    loop = _loop()
+    prompts = np.zeros((2, 4), dtype=np.int32)
+    trace = NodeFailureTrace(n_nodes=2, n_steps=16, events=tuple(
+        NodeFailure(step=1, node=0, kind="transient") for _ in range(5)))
+    with pytest.raises(TransientFault):
+        loop.generate_resilient(None, prompts, 6,
+                                injector=FaultInjector(trace),
+                                retries=2, sleep=lambda s: None)
+
+
+def test_node_loss_drives_elastic_recovery(fast_sample):
+    obs.reset("faults.")
+    obs.reset("runtime.")
+    loop = _loop()
+    prompts = np.zeros((2, 4), dtype=np.int32)
+    trace = NodeFailureTrace(n_nodes=8, n_steps=16, events=(
+        NodeFailure(step=2, node=5, kind="node_loss"),
+        NodeFailure(step=4, node=1, kind="node_loss"),))
+    inj = FaultInjector(trace)
+    plans = []
+    lost = set()
+
+    def recover(err):
+        # the elastic path: replan the mesh for the permanently shrunken
+        # fleet (reshard+restore elided — model-free fake), then mark
+        # the loss handled so the injector stops raising it
+        lost.add(err.node)
+        n_new = trace.n_nodes - len(lost)
+        plans.append(plan_resize(n_new + 1, n_new, global_batch=8))
+        inj.restore(err.node)
+
+    base_tok, _ = loop.generate(None, prompts, 8)
+    sleeps = []
+    tok, stats = loop.generate_resilient(
+        None, prompts, 8, injector=inj, recover=recover,
+        retries=2, backoff_s=0.002, sleep=sleeps.append)
+
+    np.testing.assert_array_equal(base_tok, tok)   # degraded != wrong
+    assert stats["recoveries"] == 2 and stats["faults"] >= 2
+    assert len(sleeps) >= 4                        # backed off before resize
+    assert [p.new_devices for p in plans] == [7, 6]
+    assert plans[0].mesh_shape == (7, 1)
+    assert stats["mttr_s"] > 0.0
+    assert stats["downtime_s"] > 0.0
+    assert stats["availability"] < 1.0
+    assert inj.down == set()
+
+    # the whole chain is visible through repro.obs
+    snap = obs.snapshot()
+    assert snap["faults.injected.node_loss"] == 2
+    assert snap["faults.recoveries"] == 2
+    assert snap["faults.restored"] == 2
+    assert snap["faults.retries"] >= 4
+    assert snap["faults.mttr"]["count"] == 2
+    assert snap["runtime.elastic.resizes"] == 2
+    assert snap["runtime.availability"] == stats["availability"]
+    assert snap["runtime.goodput"] == stats["goodput_tok_per_s"]
+
+
+def test_unrecoverable_loss_raises(fast_sample):
+    loop = _loop()
+    prompts = np.zeros((2, 4), dtype=np.int32)
+    trace = NodeFailureTrace(n_nodes=2, n_steps=16, events=(
+        NodeFailure(step=1, node=0, kind="node_loss"),))
+    with pytest.raises(Exception) as ei:
+        loop.generate_resilient(None, prompts, 4,
+                                injector=FaultInjector(trace),
+                                retries=1, sleep=lambda s: None)
+    assert ei.value.node == 0

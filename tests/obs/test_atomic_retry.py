@@ -1,0 +1,95 @@
+"""Flaky-filesystem behaviour of the atomic artifact writer: transient
+``OSError`` gets bounded exponential-backoff retries (each attempt a
+fresh tmp+fsync+``os.replace``), exhaustion re-raises, and no ``.tmp``
+droppings survive either way."""
+
+import json
+import os
+
+import pytest
+
+from repro import obs
+from repro.obs import export
+
+
+class _FlakyReplace:
+    """os.replace stand-in that fails the first ``n_failures`` calls."""
+
+    def __init__(self, n_failures):
+        self.n_failures = n_failures
+        self.calls = 0
+        self._real = os.replace
+
+    def __call__(self, src, dst):
+        self.calls += 1
+        if self.calls <= self.n_failures:
+            raise OSError(f"injected flake #{self.calls}")
+        return self._real(src, dst)
+
+
+def _tmp_droppings(d):
+    return [p for p in os.listdir(d) if p.startswith(".obs-")]
+
+
+def test_retry_recovers_from_transient_flake(tmp_path, monkeypatch):
+    obs.reset("obs.write_retries")
+    flaky = _FlakyReplace(2)
+    monkeypatch.setattr(export.os, "replace", flaky)
+    sleeps = []
+    path = tmp_path / "out.json"
+
+    export.write_text_atomic(str(path), "payload", backoff_s=0.01,
+                             sleep=sleeps.append)
+
+    assert path.read_text() == "payload"
+    assert flaky.calls == 3                      # 2 failures + 1 success
+    assert sleeps == [0.01, 0.02]                # exponential backoff
+    assert obs.snapshot("obs.write_retries")["obs.write_retries"] == 2
+    assert _tmp_droppings(tmp_path) == []        # failed attempts cleaned
+
+
+def test_exhaustion_reraises_last_error(tmp_path, monkeypatch):
+    flaky = _FlakyReplace(99)
+    monkeypatch.setattr(export.os, "replace", flaky)
+    sleeps = []
+    path = tmp_path / "out.json"
+
+    with pytest.raises(OSError, match="injected flake #3"):
+        export.write_text_atomic(str(path), "x", retries=2, backoff_s=0.5,
+                                 sleep=sleeps.append)
+
+    assert flaky.calls == 3                      # retries + 1 attempts
+    assert sleeps == [0.5, 1.0]                  # no sleep after the last
+    assert not path.exists()
+    assert _tmp_droppings(tmp_path) == []
+
+
+def test_zero_retries_fails_fast(tmp_path, monkeypatch):
+    monkeypatch.setattr(export.os, "replace", _FlakyReplace(1))
+    with pytest.raises(OSError):
+        export.write_text_atomic(str(tmp_path / "o"), "x", retries=0,
+                                 sleep=lambda s: pytest.fail("slept"))
+
+
+def test_non_oserror_propagates_immediately(tmp_path, monkeypatch):
+    calls = []
+
+    def boom(src, dst):
+        calls.append(src)
+        raise RuntimeError("not a filesystem flake")
+
+    monkeypatch.setattr(export.os, "replace", boom)
+    with pytest.raises(RuntimeError):
+        export.write_text_atomic(str(tmp_path / "o"), "x",
+                                 sleep=lambda s: pytest.fail("slept"))
+    assert len(calls) == 1                       # no retry for logic bugs
+    assert _tmp_droppings(tmp_path) == []
+
+
+def test_json_writer_rides_the_same_retry_path(tmp_path, monkeypatch):
+    flaky = _FlakyReplace(1)
+    monkeypatch.setattr(export.os, "replace", flaky)
+    path = tmp_path / "bench.json"
+    export.write_json_atomic(str(path), {"b": 2, "a": 1})
+    assert flaky.calls == 2
+    assert json.loads(path.read_text()) == {"a": 1, "b": 2}
